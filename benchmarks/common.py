@@ -1,0 +1,171 @@
+"""Shared fixtures for the paper-protocol benchmarks.
+
+The paper's exact numbers need pretrained Mixtral-8x7B weights (not
+available offline), so the *protocol* is reproduced at reduced scale: a
+small Mixtral-family MoE is trained from scratch on the synthetic corpus
+(data/pipeline.py) and its held-out perplexity is measured under every
+quantization configuration the paper sweeps. The full-scale *throughput*
+claims are reproduced analytically with the paper's own hardware constants
+(fig3) — our cost model + the real Mixtral-8x7B sizes.
+
+The trained checkpoint is cached under results/bench_model/ keyed by the
+config, so fig2/fig3/table1 share one training run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
+                                MoPConfig)
+from repro.core.precision_plan import PrecisionPlan
+from repro.core.quantization import dequantize, quantize
+from repro.data.pipeline import (DataPipeline, SyntheticCorpus,
+                                 SyntheticCorpusConfig, make_eval_stream)
+from repro.ft.checkpoint import CheckpointManager
+from repro.models.model import build_model
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+BENCH_DIR = RESULTS / "bench"
+
+
+def bench_moe_config() -> ModelConfig:
+    """Small Mixtral-family MoE: trainable on CPU in a few minutes, big
+    enough that int4 expert quantization has a measurable ppl effect."""
+    return ModelConfig(
+        arch_id="bench-moe",
+        family="moe",
+        num_layers=4,
+        d_model=128,
+        d_ff=256,
+        vocab_size=512,
+        vocab_pad_multiple=128,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=32,
+                                  rope_theta=1e4),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=256,
+                      capacity_factor=2.0),
+        mop=MoPConfig(enabled=True, bits=4, group_size=64),
+        act="swiglu",
+    )
+
+
+TRAIN_STEPS = 1600
+BATCH, SEQ = 16, 128
+
+
+def _cfg_key(cfg: ModelConfig, steps: int) -> str:
+    blob = json.dumps(dataclasses.asdict(cfg), sort_keys=True, default=str)
+    return hashlib.sha1(f"{blob}|{steps}|{BATCH}x{SEQ}".encode()).hexdigest()[:12]
+
+
+def get_trained_model(steps: int = TRAIN_STEPS, verbose: bool = True
+                      ) -> Tuple[ModelConfig, Dict, List[Dict]]:
+    """(cfg, trained params, held-out eval batches) — cached on disk."""
+    cfg = bench_moe_config()
+    corpus = SyntheticCorpus(SyntheticCorpusConfig(vocab_size=cfg.vocab_size))
+    eval_batches = make_eval_stream(corpus, batch=8, seq=SEQ, n_batches=8)
+
+    ckpt_dir = RESULTS / "bench_model" / _cfg_key(cfg, steps)
+    mgr = CheckpointManager(str(ckpt_dir), keep=1, async_save=False)
+    model = build_model(cfg)
+    if mgr.latest_step() is not None:
+        params, _ = mgr.restore()
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        return cfg, params, eval_batches
+
+    if verbose:
+        print(f"[bench/common] training {cfg.arch_id} for {steps} steps "
+              f"(cached at {ckpt_dir})")
+    params = model.init(jax.random.key(0))
+    tcfg = TrainConfig(opt=OptConfig(lr=6e-3, warmup_steps=60,
+                                     total_steps=steps, weight_decay=0.01),
+                       optimizer="adamw", num_microbatches=1)
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(model.loss_fn, tcfg))
+    pipe = DataPipeline(corpus, batch=BATCH, seq=SEQ)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        params, state, metrics = step(params, state, batch)
+        if verbose and (i % 100 == 0 or i == steps - 1):
+            print(f"  step {i:4d} nll={float(metrics['nll']):.4f}")
+    mgr.save(steps, params, block=True)
+    return cfg, params, eval_batches
+
+
+def eval_perplexity(cfg: ModelConfig, params, eval_batches) -> float:
+    """Held-out ppl = exp(mean masked NLL) — the paper's quality metric."""
+    model = build_model(cfg)
+
+    @jax.jit
+    def nll(params, batch):
+        _, metrics = model.loss_fn(params, batch)
+        return metrics["nll"]
+
+    vals = [float(nll(params, {k: jnp.asarray(v) for k, v in b.items()}))
+            for b in eval_batches]
+    return float(np.exp(np.mean(vals)))
+
+
+def fake_quant_experts(params, cfg: ModelConfig, plan: PrecisionPlan):
+    """Quantize->dequantize the experts selected by ``plan`` in the train
+    layout (mathematically identical to the dual-bank mixed compute — the
+    kernel's oracle is dequant-then-matmul; equality is tested in
+    tests/test_mixed_moe_banks.py)."""
+    moe = params["layers"]["moe"]
+    mask = jnp.asarray(np.asarray(plan.quant))          # (L, E) bool
+    new_moe = dict(moe)
+    for name in ("w_gate", "w_up", "w_down"):
+        w = moe[name]                                    # (L, E, K, N)
+        deq = dequantize(quantize(w, plan.bits, plan.group_size))
+        new_moe[name] = jnp.where(mask[:, :, None, None], deq.astype(w.dtype),
+                                  w)
+    out = dict(params)
+    out["layers"] = dict(params["layers"])
+    out["layers"]["moe"] = new_moe
+    return out
+
+
+def fake_quant_tree(params, bits: int, group_size: int = 64,
+                    quant_embed: bool = True):
+    """Homogeneous fake quantization of every matrix (Table 1 baselines:
+    non-expert AND expert layers at ``bits``)."""
+    def _q(path, x):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if x.ndim < 2 or x.shape[-2] % group_size or x.shape[-2] < group_size:
+            return x
+        if not quant_embed and ("embed" in name or "lm_head" in name):
+            return x
+        return dequantize(quantize(x, bits, group_size)).astype(x.dtype)
+    return jax.tree_util.tree_map_with_path(_q, params)
+
+
+def model_size_bytes(cfg: ModelConfig, num_q_experts: int,
+                     non_expert_bits: int = 16) -> int:
+    """Analytic model size under a partial-quantization config (Table 1's
+    Model Size column), using the exact param shapes."""
+    total_e = cfg.num_layers * cfg.moe.num_experts
+    s4 = cfg.expert_param_bytes(cfg.mop.bits)
+    s16 = cfg.expert_param_bytes(16)
+    ne = cfg.non_expert_bytes()
+    if non_expert_bits != 16:
+        # packed + scales, same convention as expert_param_bytes
+        n = ne // 2
+        ne = n * non_expert_bits // 8 + (n // cfg.mop.group_size) * 2
+    return ne + num_q_experts * s4 + (total_e - num_q_experts) * s16
+
+
+def write_rows(name: str, rows: List[Dict]) -> Path:
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    path = BENCH_DIR / f"{name}.json"
+    path.write_text(json.dumps(rows, indent=1))
+    return path

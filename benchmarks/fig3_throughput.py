@@ -1,0 +1,161 @@
+"""Paper Fig. 3 — token-generation throughput vs available memory, for
+several partial-quantization levels.
+
+Two modes:
+
+1. ANALYTIC, full scale (the paper's own numbers). The cost model
+   (core/cost_model.py) with the paper's A100+PCIe constants and the real
+   Mixtral-8x7B sizes from our config. The paper reports 0.63 -> 13.00
+   tok/s across budgets 26.28 -> 53.03 GB under maximum quantization; the
+   paper's measured per-expert transfer (336 MB in 27.35 ms => 12.3 GB/s
+   effective PCIe) pins the offload term. Claims:
+     F1  hyperbolic throughput growth in the offloading region;
+     F2  all-resident plateau once the budget fits the model;
+     F3  in the plateau, MORE quantization LOWERS throughput on the
+         paper's stack (bnb 4-bit matmul slower than 16-bit) — our Pallas
+         fused dequant-matmul inverts this (beyond-paper; §Perf).
+
+2. MEASURED, reduced scale: the AdaptiveServingEngine on the trained bench
+   MoE, on this container's CPU — real tokens, wall-clock decode, expert
+   streaming accounted from the measured host-link bandwidth. Validates
+   the same qualitative shape end-to-end through the real serving stack.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core.cost_model import HardwareModel, estimate_qos
+from repro.core.planner import AdaptivePlanner
+
+# The paper's testbed: A100-80GB (HBM2e ~2 TB/s) + PCIe gen4. Two measured
+# constants pin the model: (a) 336 MB expert / 27.35 ms = 12.3 GB/s
+# effective host->GPU link; (b) the all-resident bf16 plateau of
+# ~13 tok/s => 24.7 GB of active weights / (2 TB/s * MBU) = 77 ms/token
+# => MBU ~= 0.17 (single-stream HuggingFace/PyTorch serving overhead).
+# The transfer term has NO free parameter; the compute term has this one.
+PAPER_HW = HardwareModel(
+    peak_flops=312e12, hbm_bw=2.0e12, host_link_bw=12.3e9,
+    hbm_bytes=80e9, mbu=0.17,
+    q4_speedup_decode=0.85,     # paper: bnb 4-bit matmul SLOWER than 16-bit
+    q4_speedup_prefill=0.85,
+)
+# Same machine, our fused dequant-matmul instead of bnb (beyond-paper).
+OURS_HW = HardwareModel(
+    peak_flops=312e12, hbm_bw=2.0e12, host_link_bw=12.3e9,
+    hbm_bytes=80e9, mbu=0.17,
+    q4_speedup_decode=2.8, q4_speedup_prefill=0.95,
+)
+
+
+def analytic_surface(hw: HardwareModel, tag: str) -> List[Dict]:
+    cfg = get_config("mixtral-8x7b")
+    planner = AdaptivePlanner(cfg, hw=hw)
+    total = planner.num_experts_total
+    rows = []
+    for mem_gb in (24, 26.28, 30, 34, 38, 42, 46, 50, 53.03, 60, 100):
+        for frac in (0.0, 0.5, 1.0):
+            nq = int(round(frac * total))
+            res = planner.plan(mem_gb * 1e9, "quality", nq, batch_size=1)
+            rows.append({
+                "bench": f"fig3_analytic_{tag}", "mem_gb": mem_gb,
+                "frac_q": frac,
+                "tok_s": round(res.qos.tokens_per_s, 3),
+                "hit_rate": round(res.qos.hit_rate, 3),
+                "resident": round(res.plan.resident_fraction(), 3),
+                "t_compute_ms": round(res.qos.t_compute_ms, 2),
+                "t_transfer_ms": round(res.qos.t_transfer_ms, 2),
+            })
+    return rows
+
+
+def measured_small_scale(quick: bool = False) -> List[Dict]:
+    from repro.serving.engine import AdaptiveServingEngine
+    cfg, params, _ = common.get_trained_model()
+    rng = np.random.default_rng(0)
+    rows = []
+    engine = AdaptiveServingEngine(cfg, params, max_batch=4, max_len=96)
+    size16 = common.model_size_bytes(cfg, 0)
+    size4 = common.model_size_bytes(cfg, cfg.num_layers
+                                    * cfg.moe.num_experts)
+    ne = cfg.non_expert_bytes()
+    # budgets relative to the EXPERT bytes (non-expert floor always fits)
+    budgets = [("all_resident_fp16", size16 * 1.05, 0.0),
+               ("all_resident_q4", size4 * 1.3, 1.0),
+               ("offload_half", ne + (size4 - ne) * 0.5, 1.0)]
+    for name, budget, frac in budgets:
+        nq = int(round(frac * cfg.num_layers * cfg.moe.num_experts))
+        engine.configure(budget, "quality", nq)
+        for _ in range(2 if quick else 4):
+            engine.submit(rng.integers(1, cfg.vocab_size, 16),
+                          max_new_tokens=16)
+        while engine.step():
+            pass
+        rows.append({
+            "bench": "fig3_measured", "point": name,
+            "budget_mb": round(budget / 1e6, 2),
+            "frac_q": frac,
+            "miss_rate": round(engine.metrics["miss_rate"], 3),
+            "tok_s_compute_only": round(
+                engine.throughput_tokens_per_s(include_transfer=False), 2),
+            "tok_s_with_transfer": round(
+                engine.throughput_tokens_per_s(include_transfer=True), 2),
+        })
+        # reset counters between operating points
+        for k in ("tokens_generated", "decode_s", "transfer_s_est"):
+            engine.metrics[k] = 0 if k == "tokens_generated" else 0.0
+    return rows
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows = analytic_surface(PAPER_HW, "paper_stack")
+    rows += analytic_surface(OURS_HW, "fused_kernel")
+    rows += measured_small_scale(quick)
+
+    # -- claim checks ------------------------------------------------------
+    # The paper's 0.63 -> 13.00 tok/s range spans its WHOLE config space:
+    # 0.63 = 26.28 GB with 16-bit experts (hit rate ~27%, offload-bound);
+    # 13.0 = everything resident.
+    paper = [r for r in rows if r["bench"] == "fig3_analytic_paper_stack"]
+    grid = [r for r in paper if 26.28 <= r["mem_gb"] <= 53.03]
+    lo = min(grid, key=lambda r: r["tok_s"])
+    hi = max(grid, key=lambda r: r["tok_s"])
+    # F1: hyperbolic growth — tok/s span far exceeds the budget span
+    f1 = hi["tok_s"] / max(lo["tok_s"], 1e-9)
+    budget_ratio = (53.03 - 3.16) / (26.28 - 3.16)
+    # F2/F3 at an all-resident point for BOTH precisions (>= 95 GB)
+    plateau = [r for r in paper if r["mem_gb"] >= 95]
+    f3_paper = (next(r for r in plateau if r["frac_q"] == 1.0)["tok_s"]
+                < next(r for r in plateau if r["frac_q"] == 0.0)["tok_s"])
+    ours_plateau = [r for r in rows
+                    if r["bench"] == "fig3_analytic_fused_kernel"
+                    and r["mem_gb"] >= 95]
+    f3_ours = (next(r for r in ours_plateau if r["frac_q"] == 1.0)["tok_s"]
+               > next(r for r in ours_plateau if r["frac_q"] == 0.0)["tok_s"])
+    claims = {
+        "bench": "fig3_claims",
+        "paper_range_tok_s": [0.63, 13.00],
+        "ours_range_tok_s": [lo["tok_s"], hi["tok_s"]],
+        "range_endpoints_within_2x": bool(
+            0.5 < lo["tok_s"] / 0.63 < 2.0 and 0.5 < hi["tok_s"] / 13.0 < 2.0),
+        "F1_growth_ratio": round(f1, 2),
+        "F1_pass": bool(f1 > 2 * budget_ratio),
+        "F2_plateau_tok_s": plateau[0]["tok_s"],
+        "F3_paper_stack_quant_slower": bool(f3_paper),
+        "F3_fused_kernel_quant_faster": bool(f3_ours),
+    }
+    rows.append(claims)
+    common.write_rows("fig3_throughput", rows)
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Benchmark driver: one module per paper table/figure + the kernel bench.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,...]
+
+Writes results/bench/<name>.json and prints one CSV line per headline
+number: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import cache_sim, fig2_quality, fig3_throughput, \
+    kernel_bench, table1_size_quality
+
+BENCHES = {
+    "fig2": fig2_quality.run,
+    "fig3": fig3_throughput.run,
+    "table1": table1_size_quality.run,
+    "kernel": kernel_bench.run,
+    "cache": cache_sim.run,
+}
+
+
+def _headline(name: str, rows) -> list:
+    """(name, us_per_call, derived) summary lines per bench."""
+    out = []
+    if name == "fig2":
+        c = next(r for r in rows if r["bench"] == "fig2_claims")
+        out.append(("fig2.full_quant_ppl_increase", "-",
+                    f"+{c['C1_full_quant_increase']:.2%}"
+                    f" (paper +6.9% wikitext2); C1={c['C1_pass']}"
+                    f" C3={c['C3_pass']}"))
+    elif name == "fig3":
+        c = next(r for r in rows if r["bench"] == "fig3_claims")
+        lo, hi = c["ours_range_tok_s"]
+        out.append(("fig3.maxquant_tok_s_range", "-",
+                    f"{lo:.2f}->{hi:.2f} (paper 0.63->13.00);"
+                    f" F1={c['F1_pass']}"
+                    f" F3_paper={c['F3_paper_stack_quant_slower']}"
+                    f" F3_ours={c['F3_fused_kernel_quant_faster']}"))
+    elif name == "table1":
+        c = next(r for r in rows if r["bench"] == "table1_claims")
+        out.append(("table1.partial_vs_homogeneous", "-",
+                    f"mix_ppl_overhead={c['T2_mix_ppl_overhead']:+.2%}"
+                    f" T1={c['T1_pass']} T2={c['T2_pass']}"))
+    elif name == "kernel":
+        for r in rows:
+            out.append((f"kernel.q4_matmul[{r['shape']}]",
+                        f"{r['cpu_us_jnp_dequant_matmul']:.0f}",
+                        f"v5e_bound={r['v5e_decode_speedup_bound']}x"
+                        f" allclose={r['allclose_pass']}"))
+    elif name == "cache":
+        u1 = next(r for r in rows if r["bench"] == "cache_u1_uniformity")
+        u3 = next(r for r in rows if r["bench"] == "cache_u3_prefetch")
+        out.append(("cache.uniform_access_assumption", "-",
+                    f"max/mean_freq={u1['max_over_mean_freq']}"
+                    f" (paper assumes ~1); prefetch demand misses"
+                    f" {u3['demand_misses_lru']}->"
+                    f"{u3['demand_misses_prefetch']}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        t0 = time.time()
+        rows = BENCHES[name](quick=args.quick)
+        dt = time.time() - t0
+        for (n, us, d) in _headline(name, rows):
+            print(f"{n},{us},{d}")
+        print(f"{name}.wall_s,{dt:.1f},")
+        for r in rows:
+            for k, v in r.items():
+                if k.endswith("_pass") and v is False:
+                    failed.append(f"{name}:{r.get('bench')}:{k}")
+    if failed:
+        print("CLAIM-CHECK FAILURES:", failed)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

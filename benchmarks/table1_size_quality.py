@@ -1,0 +1,100 @@
+"""Paper Table 1 — model size & perplexity: homogeneous quantization vs
+expert-only partial quantization.
+
+Rows (reduced-scale protocol on the trained bench MoE):
+  16/16      — bf16 everything (reference quality, largest);
+  8/8        — homogeneous 8-bit (all matrices incl. non-expert);
+  4/4        — homogeneous 4-bit (the paper's worst-quality row);
+  16/mix     — non-expert 16-bit + {0%, 50%, 100%} experts 4-bit
+               (the paper's contribution: a SIZE RANGE at near-16-bit ppl).
+
+Also reports the FULL-SCALE Mixtral-8x7B analytic sizes from the exact
+config shapes next to the paper's GB numbers (Table 1 column 3).
+
+Claims validated:
+  T1  partial(100%) ppl  <<  homogeneous-4/4 ppl  (experts are the cheap
+      95% of bytes; non-expert layers are the quality-critical 5%);
+  T2  partial size range spans below the 8/8 point while keeping ppl
+      within a few percent of 16/16.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core.precision_plan import balanced_random_plan
+
+
+def full_scale_sizes() -> Dict[str, float]:
+    """Analytic Mixtral-8x7B sizes (GB) vs the paper's Table 1."""
+    cfg = get_config("mixtral-8x7b")
+    total = cfg.num_layers * cfg.moe.num_experts
+    gb = 1e9
+    return {
+        "16/16_gb": round(common.model_size_bytes(cfg, 0) / gb, 2),
+        "16/mix_min_gb": round(common.model_size_bytes(cfg, total) / gb, 2),
+        "4/4_gb": round(common.model_size_bytes(cfg, total,
+                                                non_expert_bits=4) / gb, 2),
+        "8/8_gb": round(common.model_size_bytes(
+            cfg.replace(mop=cfg.mop.__class__(enabled=True, bits=8,
+                                              group_size=64)),
+            total, non_expert_bits=8) / gb, 2),
+        "paper_16/16_gb": 94.21, "paper_4/4_gb": 23.55,
+        "paper_8/8_gb": 47.10, "paper_mix_range_gb": [26.62, 94.21],
+    }
+
+
+def run(quick: bool = False) -> List[Dict]:
+    cfg, params, eval_batches = common.get_trained_model()
+    total = cfg.num_layers * cfg.moe.num_experts
+    g = cfg.mop.group_size
+    rows: List[Dict] = []
+
+    def add(name, p, size_bytes):
+        ppl = common.eval_perplexity(cfg, p, eval_batches)
+        rows.append({"bench": "table1", "config": name,
+                     "size_bytes": int(size_bytes),
+                     "size_rel": round(size_bytes
+                                       / common.model_size_bytes(cfg, 0), 3),
+                     "ppl": round(ppl, 4)})
+        return ppl
+
+    ppl16 = add("16/16", params, common.model_size_bytes(cfg, 0))
+    add("8/8", common.fake_quant_tree(params, 8, g),
+        common.model_size_bytes(
+            cfg.replace(mop=cfg.mop.__class__(enabled=True, bits=8,
+                                              group_size=g)),
+            total, non_expert_bits=8))
+    ppl44 = add("4/4", common.fake_quant_tree(params, 4, g),
+                common.model_size_bytes(cfg, total, non_expert_bits=4))
+    mix_ppls = []
+    for frac in (0.5, 1.0):
+        nq = int(round(frac * total))
+        plan = balanced_random_plan(cfg.num_layers, cfg.moe.num_experts, nq,
+                                    bits=4, group_size=g, seed=0)
+        p = common.fake_quant_experts(params, cfg, plan)
+        mix_ppls.append(add(f"16/mix({frac:.0%})", p,
+                            common.model_size_bytes(cfg, nq)))
+
+    worst_mix = max(mix_ppls)
+    claims = {
+        "bench": "table1_claims",
+        "T1_partial_vs_homog4": round(ppl44 - worst_mix, 4),
+        "T1_pass": bool(worst_mix < ppl44),
+        "T2_mix_ppl_overhead": round(worst_mix / ppl16 - 1.0, 4),
+        "T2_pass": bool(worst_mix / ppl16 < 1.2),
+        "full_scale_sizes": full_scale_sizes(),
+    }
+    rows.append(claims)
+    common.write_rows("table1_size_quality", rows)
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Pareto explorer — the paper's core contribution as a picture.
+
+Sweeps the planner's quality knob (Num_E4: how many experts are 4-bit)
+under several memory budgets for the REAL Mixtral-8x7B config and prints
+the (throughput, quality-proxy) design space with its Pareto frontier —
+the fine-grained configuration space of paper Figs. 2+3.
+
+    PYTHONPATH=src python examples/pareto_explorer.py [--budget-gb 40]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core.cost_model import HardwareModel
+from repro.core.planner import AdaptivePlanner
+
+
+def bar(x, lo, hi, width=32):
+    n = int((x - lo) / max(hi - lo, 1e-9) * width)
+    return "#" * n + "." * (width - n)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget-gb", type=float, default=40.0)
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    planner = AdaptivePlanner(cfg, hw=HardwareModel())
+    results, pareto = planner.sweep(args.budget_gb * 1e9,
+                                    batch_size=args.batch)
+    lo = min(r.qos.tokens_per_s for r in results)
+    hi = max(r.qos.tokens_per_s for r in results)
+
+    print(f"{cfg.arch_id} @ {args.budget_gb} GB budget "
+          f"(v5e-chip model, batch={args.batch})")
+    print(f"{'E4':>5} {'resident':>8} {'tok/s':>8} {'ppl-proxy':>9}  "
+          f"throughput")
+    last_nq = None
+    for i, r in enumerate(results):
+        if r.plan.num_q_experts == last_nq:
+            continue    # balanced rounding maps nearby Num_E4 to one plan
+        last_nq = r.plan.num_q_experts
+        mark = " *" if i in pareto else "  "
+        q = r.qos
+        print(f"{r.plan.num_q_experts:5d} "
+              f"{r.plan.resident_fraction():8.0%} "
+              f"{q.tokens_per_s:8.2f} {q.quality_proxy:9.3f}  "
+              f"|{bar(q.tokens_per_s, lo, hi)}|{mark}")
+    print("* = Pareto-optimal (throughput vs quality)")
+
+    # reconfiguration cost between adjacent Pareto points (paper §3:
+    # partial reconfig instead of full reload)
+    pts = [results[i] for i in pareto]
+    if len(pts) >= 2:
+        a, b = pts[0], pts[-1]
+        planner.current = a
+        _, delta = planner.replan(args.budget_gb * 1e9, "quality",
+                                  b.plan.num_q_experts)
+        print(f"\nreconfig {a.plan.num_q_experts}->{b.plan.num_q_experts} "
+              f"4-bit experts: {len(delta['to_quantize'])} quantize, "
+              f"{len(delta['to_upload'])} upload, "
+              f"traffic {delta['traffic_bytes']/2**30:.2f} GiB "
+              f"(vs full reload "
+              f"{(planner.size_ne + planner.num_experts_total * planner.size_e16)/2**30:.1f} GiB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""The paper's contribution: Mixture of Experts with Mixture of Precisions.
+
+Layers:
+  quantization   — int4/int8 group-wise QTensor + pack/unpack + tree quant
+  precision_plan — per-expert {bits, placement} table (balanced-random)
+  planner        — eq.(1) partitioner, budget->plan, incremental reconfig
+  cost_model     — analytic tokens/s + quality proxy (Fig. 3 model)
+  expert_cache   — LRU device cache + swap space (+ speculative prefetch)
+  mixed_moe      — dual-bank (int4|bf16) MoE layer, EP/TP dispatch
+"""
+from repro.core.quantization import (  # noqa: F401
+    QTensor, dequantize, dequantize_tree, pack_int4, quantize, quantize_tree,
+    tree_nbytes, unpack_int4,
+)
+from repro.core.precision_plan import (  # noqa: F401
+    DEVICE, HOST, PrecisionPlan, balanced_random_plan, reconfig_delta,
+)
+from repro.core.planner import AdaptivePlanner, PlanResult, num_e16_eq1  # noqa: F401
+from repro.core.cost_model import (  # noqa: F401
+    HardwareModel, QoSEstimate, estimate_qos, pareto_frontier,
+)
+from repro.core.expert_cache import ExpertCache, PrefetchingExpertCache  # noqa: F401

@@ -1,0 +1,393 @@
+"""Mixed-precision MoE layer: dual expert banks (int4 | bf16) + explicit
+expert-parallel dispatch under shard_map.
+
+The paper's partial expert quantization turns each MoE layer into two banks:
+``q4`` (packed int4 + scales, E4 experts) and ``f16`` (bf16, E16 experts),
+with a per-layer expert permutation mapping routed ids into bank slots
+(``PrecisionPlan.expert_order``). Bank sizes are static per plan — one
+recompile per (E4, E16) signature, placement changes are graph-free.
+
+Dispatch (DESIGN.md §4) runs under shard_map over (dp..., model):
+
+  * routing (tiny matmul) happens at jit level, sharded over dp;
+  * **EP** (num_experts >= model-axis size, e.g. Kimi 384e/16): experts are
+    sharded over ``model``; every rank selects the assignments that hit its
+    local experts, packs them into a capacity-bounded (E_loc, C, d) buffer
+    (sort + scatter — all local ops), runs the dual-bank FFN, scatters back
+    weighted outputs, and one psum over ``model`` combines the per-rank
+    contributions. Activations stay replicated over ``model``;
+  * **TP** (num_experts < model-axis size, e.g. Mixtral 8e/16): every rank
+    holds all experts on a 1/16 slice of d_ff; same local dispatch with all
+    experts local; the identical psum now reduces partial down-projections.
+
+Both paths cost exactly one (T_loc, d) all-reduce per MoE layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.core.quantization import QTensor, dequantize, quantize
+
+
+# --------------------------------------------------------------------------
+# Routing (jit level)
+# --------------------------------------------------------------------------
+
+_TRACE = __import__("threading").local()
+
+
+class capture_routing:
+    """Collect concrete routing ids from eager (unjitted) forwards —
+    benchmarks/cache_sim.py uses this to test the paper's uniform-access
+    assumption on a *trained* router."""
+
+    def __enter__(self):
+        _TRACE.ids = []
+        return _TRACE.ids
+
+    def __exit__(self, *exc):
+        _TRACE.ids = None
+
+
+def route(router_w: jax.Array, x: jax.Array, moe: MoEConfig, *,
+          train: bool) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """x: (T, d) -> (weights (T,k) f32, ids (T,k) i32, aux losses)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, ids = jax.lax.top_k(probs, moe.top_k)
+    trace = getattr(_TRACE, "ids", None)
+    if trace is not None and not isinstance(ids, jax.core.Tracer):
+        trace.append(np.asarray(ids))
+    weights = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    aux: Dict[str, jax.Array] = {}
+    if train:
+        e = moe.num_experts
+        # Switch-style load-balance: E * sum_e f_e * P_e
+        dispatch = jax.nn.one_hot(ids, e, dtype=jnp.float32).sum(1)  # (T,E)
+        f_e = dispatch.mean(0)
+        p_e = probs.mean(0)
+        aux["load_balance"] = moe.load_balance_loss * e * jnp.sum(f_e * p_e)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        aux["router_z"] = moe.router_z_loss * jnp.mean(lse ** 2)
+    return weights, ids, aux
+
+
+# --------------------------------------------------------------------------
+# Local dispatch (inside shard_map): sort -> capacity scatter -> FFN ->
+# weighted combine. Everything here is per-device.
+# --------------------------------------------------------------------------
+
+def _local_slot(flat_e, *, rank, e4_total, e4_loc, e16_loc):
+    """Map global (permuted) expert ids to this rank's local bank slots.
+
+    Each bank is sharded over the EP axis independently: rank r owns q4
+    experts [r*e4_loc, (r+1)*e4_loc) -> local slots [0, e4_loc) and f16
+    experts [e4_total + r*e16_loc, ...) -> slots [e4_loc, e4_loc+e16_loc).
+    Returns (slot, is_local)."""
+    in_q4 = flat_e < e4_total
+    q4_slot = flat_e - rank * e4_loc
+    f16_rel = flat_e - e4_total - rank * e16_loc
+    slot = jnp.where(in_q4, q4_slot, e4_loc + f16_rel)
+    ok = jnp.where(in_q4,
+                   (q4_slot >= 0) & (q4_slot < e4_loc),
+                   (f16_rel >= 0) & (f16_rel < e16_loc))
+    return slot, ok
+
+
+def _dispatch_local(x, ids, weights, *, rank, e4_total, e4_loc, e16_loc,
+                    capacity):
+    """Pack routed tokens into (e_loc, capacity, d); returns buffers +
+    metadata needed for the combine."""
+    t, d = x.shape
+    e_loc = e4_loc + e16_loc
+    k = ids.shape[1]
+    flat_e = ids.reshape(-1)                                  # (T*k,)
+    flat_w = weights.reshape(-1)
+    local_e, is_local = _local_slot(flat_e, rank=rank, e4_total=e4_total,
+                                    e4_loc=e4_loc, e16_loc=e16_loc)
+    key = jnp.where(is_local, local_e, e_loc)
+    order = jnp.argsort(key, stable=True)                     # (T*k,)
+    sorted_e = key[order]
+    counts = jnp.bincount(sorted_e, length=e_loc + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)])[:-1]
+    pos = jnp.arange(t * k) - starts[sorted_e]
+    valid = (sorted_e < e_loc) & (pos < capacity)
+    dest = jnp.where(valid, sorted_e * capacity + pos, e_loc * capacity)
+    tok = order // k
+    xbuf = jnp.zeros((e_loc * capacity, d), x.dtype)
+    xbuf = xbuf.at[dest].set(x[tok], mode="drop")
+    return xbuf.reshape(e_loc, capacity, d), dest, tok, flat_w[order]
+
+
+def _combine_local(ybuf, dest, tok, w_sorted, t, d):
+    flat = ybuf.reshape(-1, ybuf.shape[-1])
+    contrib = jnp.take(flat, dest, axis=0, mode="fill", fill_value=0)
+    contrib = contrib * w_sorted[:, None].astype(contrib.dtype)
+    return jnp.zeros((t, d), ybuf.dtype).at[tok].add(contrib)
+
+
+# --------------------------------------------------------------------------
+# Dual-bank expert FFN
+# --------------------------------------------------------------------------
+
+def _ffn_bf16(bank, xb, act):
+    """(E, C, d) x (E, d, f) -> (E, C, d)."""
+    up = jnp.einsum("ecd,edf->ecf", xb, bank["w_up"])
+    if act == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", xb, bank["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        h = jnp.square(jax.nn.relu(up))
+    return jnp.einsum("ecf,efd->ecd", h, bank["w_down"])
+
+
+def _ffn_q(bank, xb, act, use_kernel: bool):
+    """Quantized bank: fused Pallas kernel (serving) or dequant reference
+    (dry-run lowering — FLOP/byte-equivalent, see kernels/ops.py)."""
+    if use_kernel:
+        from repro.kernels.ops import q_expert_matmul
+        up = q_expert_matmul(xb, bank["w_up"])
+        if act == "swiglu":
+            h = jax.nn.silu(q_expert_matmul(xb, bank["w_gate"])) * up
+        elif act == "gelu":
+            h = jax.nn.gelu(up, approximate=True)
+        else:
+            h = jnp.square(jax.nn.relu(up))
+        return q_expert_matmul(h, bank["w_down"])
+    deq = {k: dequantize(v) for k, v in bank.items()}
+    return _ffn_bf16(deq, xb, act)
+
+
+def _expert_ffn(banks, xb, act, use_kernel):
+    """banks: {"q4": {...QTensor...}|None, "f16": {...bf16...}|None} with
+    bank order [q4 experts, f16 experts] along E."""
+    outs = []
+    e4 = banks["q4"]["w_up"].shape[0] if banks.get("q4") is not None else 0
+    if e4:
+        outs.append(_ffn_q(banks["q4"], xb[:e4], act, use_kernel))
+    if banks.get("f16") is not None and banks["f16"]["w_up"].shape[0]:
+        outs.append(_ffn_bf16(banks["f16"], xb[e4:], act))
+    return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
+
+
+# --------------------------------------------------------------------------
+# The shard_map'd MoE apply
+# --------------------------------------------------------------------------
+
+# Token-gather pays only while the gathered activations stay ~cache-scale;
+# above this the dispatch-buffer amplification dominates (see moe_apply).
+TOKEN_GATHER_MAX_BYTES = 64 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEParallelism:
+    mesh: Any                      # jax Mesh
+    dp_axes: Tuple[str, ...]       # token axes ("pod","data") / ("data",)
+    ep_axis: str = "model"
+    # Second weight-sharding axis for EP banks (ZeRO/FSDP dimension): the
+    # d_ff dim of every expert is sharded over it. Token-gather dispatch
+    # (below) keeps the weights fully sharded and moves ACTIVATIONS over
+    # this axis instead — 1T-scale experts never cross the wire.
+    fsdp_axis: Optional[str] = None
+
+    @property
+    def ep_size(self) -> int:
+        return self.mesh.shape[self.ep_axis]
+
+    @property
+    def fsdp_size(self) -> int:
+        if self.fsdp_axis is None or self.fsdp_axis not in self.mesh.shape:
+            return 1
+        return self.mesh.shape[self.fsdp_axis]
+
+
+def _fsdp_active(banks, moe: MoEConfig, par: MoEParallelism, ep: bool):
+    """Token-gather EP applies when experts are also d_ff-sharded over the
+    fsdp axis (kimi-1T: (E/16 on model) x (f/16 on data) per device)."""
+    if not ep or par.fsdp_size <= 1:
+        return False
+    fs = par.fsdp_size
+
+    def ok(leaf_shape, fdim):
+        return leaf_shape[fdim] % fs == 0
+
+    for key in ("q4", "f16"):
+        b = banks.get(key)
+        if b is None:
+            continue
+        for name, w in b.items():
+            arr = w.q if isinstance(w, QTensor) else w
+            fdim = 1 if name == "w_down" else 2
+            if not ok(arr.shape, fdim):
+                return False
+            if isinstance(w, QTensor) and w.scales.shape[fdim] % fs:
+                return False
+    return True
+
+
+def _bank_specs(banks, moe: MoEConfig, par: MoEParallelism,
+                fsdp: bool = False):
+    """PartitionSpecs for the bank pytree: EP shards the leading E dim
+    (+ d_ff over the fsdp axis in token-gather mode), TP shards the d_ff
+    dim (dim 2 for up/gate & their scales, dim 1 for down & its scales)."""
+    ep = moe.num_experts >= par.ep_size
+    fx = par.fsdp_axis if fsdp else None
+
+    def spec_for(path, leaf):
+        if ep:
+            is_down = "w_down" in path
+            return P(par.ep_axis, fx, None) if is_down \
+                else P(par.ep_axis, None, fx)
+        is_down = "w_down" in path
+        return P(None, par.ep_axis, None) if is_down \
+            else P(None, None, par.ep_axis)
+
+    def walk(tree, path=""):
+        if isinstance(tree, QTensor):
+            return QTensor(q=spec_for(path, tree.q),
+                           scales=spec_for(path, tree.scales),
+                           bits=tree.bits, group_size=tree.group_size)
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        if tree is None:
+            return None
+        return spec_for(path, tree)
+
+    return walk(banks), ep
+
+
+def moe_apply(banks, x: jax.Array, weights: jax.Array, ids: jax.Array,
+              moe: MoEConfig, par: MoEParallelism, *, act: str = "swiglu",
+              use_kernel: bool = False) -> jax.Array:
+    """x: (T, d) sharded over dp_axes; returns (T, d) same sharding.
+
+    ``banks`` is either the train layout {"f16": {...(E,d,f) bf16...}} /
+    {"q4": ..., "f16": ...} serve layout (bank order = q4 first).
+    """
+    t, d = x.shape
+    ep = moe.num_experts >= par.ep_size
+    fsdp = _fsdp_active(banks, moe, par, ep)
+    if fsdp:
+        # Regime split (§Perf kimi iterations 1-2): token-gather wins when
+        # the gathered token set is small (decode: MBs vs the layer's GBs
+        # of expert weights — measured 257x less wire). At train/prefill
+        # token counts the gathered-x + amplified dispatch buffers blow
+        # HBM (measured: kimi prefill peak 45 -> 322 GiB), so the weights
+        # are gathered once per layer instead (ZeRO-3) and amortized over
+        # the whole microbatch.
+        n_dp_pre = int(np.prod([par.mesh.shape[a] for a in par.dp_axes]))
+        t_disp_pre = (t // n_dp_pre) * par.fsdp_size
+        fsdp = t_disp_pre * d * 2 <= TOKEN_GATHER_MAX_BYTES
+    bank_specs, _ = _bank_specs(banks, moe, par, fsdp=fsdp)
+    lead = par.dp_axes if len(par.dp_axes) > 1 else \
+        (par.dp_axes[0] if par.dp_axes else None)
+    dp = P(lead, None)
+    n_dp = int(np.prod([par.mesh.shape[a] for a in par.dp_axes]))
+    t_loc = t // n_dp
+    e4_total = banks["q4"]["w_up"].shape[0] if banks.get("q4") is not None \
+        else 0
+    e16_total = moe.num_experts - e4_total
+    shards = par.ep_size if ep else 1
+    if e4_total % shards or e16_total % shards:
+        raise ValueError(
+            f"EP banks must split evenly: E4={e4_total}, E16={e16_total} "
+            f"over {shards} shards (planner rounds per-layer counts)")
+    e4_loc, e16_loc = e4_total // shards, e16_total // shards
+    # Token-gather mode: the fsdp axis contributes its tokens instead of
+    # its weight shards (§Perf 'kimi-decode' iteration: for 1T-scale
+    # experts, tokens are ~4 orders of magnitude lighter than weights).
+    t_disp = t_loc * (par.fsdp_size if fsdp else 1)
+    # static per-shard capacity (tokens replicated over model: each rank
+    # sees all dispatched assignments, keeps only its local experts' share)
+    cap = int(np.ceil(t_disp * moe.top_k * moe.capacity_factor
+                      / moe.num_experts))
+    cap = max(4, ((cap + 3) // 4) * 4)
+
+    def local_fn(banks_l, x_l, w_l, ids_l):
+        rank = jax.lax.axis_index(par.ep_axis) if ep else 0
+        if fsdp:
+            # tokens in, weights stationary: gather the fsdp axis's token
+            # shards; every rank computes its (E_loc x f_loc) weight slice
+            # for ALL gathered tokens.
+            x_l = jax.lax.all_gather(x_l, par.fsdp_axis, axis=0, tiled=True)
+            w_l = jax.lax.all_gather(w_l, par.fsdp_axis, axis=0, tiled=True)
+            ids_l = jax.lax.all_gather(ids_l, par.fsdp_axis, axis=0,
+                                       tiled=True)
+        xbuf, dest, tok, w_sorted = _dispatch_local(
+            x_l, ids_l, w_l, rank=rank, e4_total=e4_total,
+            e4_loc=e4_loc, e16_loc=e16_loc, capacity=cap)
+        # the expert FFN is shape-polymorphic in f: gate/up/silu are
+        # elementwise on this rank's f-slice, w_down yields partial sums
+        ybuf = _expert_ffn(banks_l, xbuf, act, use_kernel)
+        y = _combine_local(ybuf, dest, tok, w_sorted, t_disp, d)
+        if fsdp:
+            # partial over d_ff shards AND scattered back to this rank's
+            # token shard in one collective
+            y = jax.lax.psum_scatter(y, par.fsdp_axis, scatter_dimension=0,
+                                     tiled=True)
+        return jax.lax.psum(y, par.ep_axis)
+
+    fn = jax.shard_map(
+        local_fn,
+        mesh=par.mesh,
+        in_specs=(bank_specs, dp, dp, dp),
+        out_specs=dp,
+        check_vma=False,
+    )
+    return fn(banks, x, weights, ids)
+
+
+# --------------------------------------------------------------------------
+# Bank construction from a PrecisionPlan (serve) or plain params (train)
+# --------------------------------------------------------------------------
+
+def train_banks(moe_params: Dict[str, jax.Array]) -> Dict[str, Any]:
+    return {"q4": None,
+            "f16": {k: moe_params[k] for k in ("w_gate", "w_up", "w_down")}}
+
+
+def build_mixed_banks(moe_params: Dict[str, jax.Array], quant_mask,
+                      *, bits: int = 4, group_size: int = 64):
+    """Split one layer's experts into [q4 | f16] banks.
+
+    quant_mask: (E,) bool. Returns (banks, order) where ``order`` is the
+    expert permutation (quantized first) — the caller permutes the router
+    columns with it."""
+    quant_mask = np.asarray(quant_mask)
+    order = np.concatenate([np.where(quant_mask)[0],
+                            np.where(~quant_mask)[0]]).astype(np.int32)
+    e4 = int(quant_mask.sum())
+    banks: Dict[str, Any] = {"q4": None, "f16": None}
+    perm = {k: jnp.take(moe_params[k], order, axis=0)
+            for k in ("w_gate", "w_up", "w_down")}
+    if e4:
+        banks["q4"] = {k: quantize(v[:e4], bits, group_size)
+                       for k, v in perm.items()}
+    if e4 < len(order):
+        banks["f16"] = {k: v[e4:] for k, v in perm.items()}
+    return banks, order
+
+
+def moe_dense_ref(moe_params, x, moe: MoEConfig, act: str = "swiglu"):
+    """O(T*E) oracle: every expert computes every token (tests only)."""
+    weights, ids, _ = route(moe_params["router"], x, moe, train=False)
+    w_full = jnp.zeros((x.shape[0], moe.num_experts), jnp.float32)
+    w_full = jax.vmap(lambda w, i, row: row.at[i].add(w))(
+        weights, ids, w_full)
+    banks = {"w_gate": moe_params["w_gate"], "w_up": moe_params["w_up"],
+             "w_down": moe_params["w_down"]}
+    y_all = _ffn_bf16(banks, jnp.broadcast_to(
+        x[None], (moe.num_experts,) + x.shape), act)       # (E, T, d)
+    return jnp.einsum("etd,te->td", y_all.astype(jnp.float32), w_full
+                      ).astype(x.dtype)

@@ -1,0 +1,170 @@
+"""Adaptive Inference Partitioner & Planner (paper §3, Fig. 1).
+
+Given a memory budget and a task preference ("throughput" | "quality"),
+produce a :class:`PrecisionPlan`:
+
+* throughput preference — bring as many experts on-device as possible.
+  If the budget exceeds non-expert + all-4-bit experts, eq. (1) converts the
+  surplus into 16-bit experts:
+
+      Num_E16 = floor((Mem - Size_NE - Num_E*Size_E4) / (3*Size_E4))
+
+  (3*Size_E4 = Size_E16 - Size_E4 when Size_E16 = 4*Size_E4). Otherwise all
+  experts are 4-bit and only a budget-sized subset is resident.
+
+* quality preference — the caller picks Num_E4 (0..Num_E) directly; the
+  planner derives residency from the leftover budget, 4-bit experts first.
+
+Reconfiguration between plans is incremental (precision_plan.reconfig_delta).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import cost_model
+from repro.core.precision_plan import PrecisionPlan, balanced_random_plan
+
+Preference = Literal["throughput", "quality"]
+
+
+def num_e16_eq1(mem_bytes: float, size_ne: int, num_e: int,
+                size_e4: int, size_e16: Optional[int] = None) -> int:
+    """Paper equation (1), generalized to measured expert sizes (our int4
+    expert carries group scales, so Size_E16 != exactly 4*Size_E4)."""
+    if size_e16 is None:
+        size_e16 = 4 * size_e4
+    surplus = mem_bytes - size_ne - num_e * size_e4
+    if surplus <= 0:
+        return 0
+    return min(num_e, int(surplus // (size_e16 - size_e4)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    plan: PrecisionPlan
+    qos: cost_model.QoSEstimate
+    preference: str
+    mem_budget_bytes: float
+
+    def summary(self) -> str:
+        p, q = self.plan, self.qos
+        return (f"[{self.preference}] E4={p.num_q_experts}/{p.quant.size} "
+                f"resident={p.resident_fraction():.0%} "
+                f"dev={q.device_bytes/2**30:.2f}GiB "
+                f"tok/s={q.tokens_per_s:.2f} "
+                f"ppl_proxy=x{q.quality_proxy:.3f}")
+
+
+class AdaptivePlanner:
+    """Stateful planner: re-plan on constraint change, emit reconfig deltas."""
+
+    def __init__(self, cfg: ModelConfig,
+                 hw: cost_model.HardwareModel = cost_model.HardwareModel(),
+                 seed: int = 0):
+        if cfg.moe is None:
+            raise ValueError(
+                f"{cfg.arch_id}: MoP planning needs routed experts "
+                "(DESIGN.md §5 Arch-applicability)")
+        self.cfg = cfg
+        self.hw = hw
+        self.seed = seed
+        self.current: Optional[PlanResult] = None
+
+    # -- sizes ------------------------------------------------------------
+    @property
+    def size_e4(self) -> int:
+        return self.cfg.expert_param_bytes(self.cfg.mop.bits)
+
+    @property
+    def size_e16(self) -> int:
+        return self.cfg.expert_param_bytes(16)
+
+    @property
+    def size_ne(self) -> int:
+        return self.cfg.non_expert_bytes()
+
+    @property
+    def num_experts_total(self) -> int:
+        return self.cfg.num_layers * self.cfg.moe.num_experts
+
+    # -- planning ---------------------------------------------------------
+    def plan(self, mem_budget_bytes: float, preference: Preference,
+             num_q_experts: Optional[int] = None,
+             batch_size: int = 1) -> PlanResult:
+        if mem_budget_bytes < self.size_ne:
+            # paper §3: non-expert layers always live on the accelerator in
+            # 16-bit — below that floor no plan exists.
+            raise ValueError(
+                f"infeasible budget {mem_budget_bytes/2**20:.1f} MiB < "
+                f"non-expert floor {self.size_ne/2**20:.1f} MiB")
+        total = self.num_experts_total
+        layers = self.cfg.num_layers
+        if preference == "throughput":
+            n16 = num_e16_eq1(mem_budget_bytes, self.size_ne, total,
+                              self.size_e4, self.size_e16)
+            # balanced split: floor per layer keeps the footprint <= budget
+            # (each skipped promotion only frees memory)
+            n16 = (n16 // layers) * layers
+            nq = total - n16
+        elif preference == "quality":
+            if num_q_experts is None:
+                raise ValueError("quality preference needs num_q_experts "
+                                 "(paper: user-provided range)")
+            nq = int(round(num_q_experts / layers)) * layers
+            nq = min(max(nq, 0), total)
+        else:
+            raise ValueError(preference)
+        # residency from the ACTUAL balanced count
+        resident = self._resident_budget(mem_budget_bytes, nq)
+
+        plan = balanced_random_plan(
+            self.cfg.num_layers, self.cfg.moe.num_experts, nq,
+            bits=self.cfg.mop.bits, group_size=self.cfg.mop.group_size,
+            seed=self.seed, resident_experts=resident)
+        qos = cost_model.estimate_qos(self.cfg, plan, self.hw, batch_size)
+        if qos.device_bytes > mem_budget_bytes * 1.001:
+            raise RuntimeError(
+                f"planner bug: footprint {qos.device_bytes} > budget")
+        result = PlanResult(plan=plan, qos=qos, preference=preference,
+                            mem_budget_bytes=mem_budget_bytes)
+        return result
+
+    def _resident_budget(self, mem_bytes: float, num_q: int) -> int:
+        """How many experts fit on-device: 4-bit first (paper priority)."""
+        total = self.num_experts_total
+        left = mem_bytes - self.size_ne
+        if left <= 0:
+            return 0
+        n4 = min(num_q, int(left // self.size_e4))
+        left -= n4 * self.size_e4
+        n16 = min(total - num_q, max(0, int(left // self.size_e16)))
+        return n4 + n16
+
+    def replan(self, mem_budget_bytes: float, preference: Preference,
+               num_q_experts: Optional[int] = None, batch_size: int = 1):
+        """Returns (PlanResult, delta|None). Keeps planner state."""
+        from repro.core.precision_plan import delta_cost_bytes, reconfig_delta
+        new = self.plan(mem_budget_bytes, preference, num_q_experts,
+                        batch_size)
+        delta = None
+        if self.current is not None:
+            delta = reconfig_delta(self.current.plan, new.plan)
+            delta["traffic_bytes"] = delta_cost_bytes(
+                delta, self.size_e4, self.size_e16, new.plan)
+        self.current = new
+        return new, delta
+
+    def sweep(self, mem_budget_bytes: float, batch_size: int = 1,
+              points: int = 17):
+        """Quality-mode sweep over Num_E4 — the paper's config space
+        (Fig. 2/3 x-axes); returns list of PlanResult + Pareto indices."""
+        total = self.num_experts_total
+        results = []
+        for nq in sorted({int(round(total * i / (points - 1)))
+                          for i in range(points)}):
+            results.append(self.plan(mem_budget_bytes, "quality", nq,
+                                     batch_size))
+        pts = [(r.qos.tokens_per_s, r.qos.quality_proxy) for r in results]
+        return results, cost_model.pareto_frontier(pts)

@@ -1,0 +1,146 @@
+"""Per-expert precision & placement table (the paper's Fig. 1 state).
+
+The paper keeps, for every expert, two boolean attributes:
+  * quantized?  (4-bit vs 16-bit)
+  * location    (on accelerator vs host)
+
+Assignment of the quantization attribute is random — the paper argues MoE
+experts have uniform access frequency, so the choice of *which* experts to
+quantize does not matter. We use **balanced-random** (same #4-bit experts per
+layer, random within a layer) so a scanned layer stack keeps static bank
+shapes; tests/test_precision_plan.py checks the statistical equivalence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+DEVICE, HOST = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """quant[L, E]: True = 4-bit. location[L, E]: DEVICE or HOST."""
+    quant: np.ndarray
+    location: np.ndarray
+    bits: int = 4
+    group_size: int = 64
+    seed: int = 0
+
+    @property
+    def num_layers(self) -> int:
+        return self.quant.shape[0]
+
+    @property
+    def num_experts(self) -> int:
+        return self.quant.shape[1]
+
+    @property
+    def num_q_experts(self) -> int:
+        return int(self.quant.sum())
+
+    @property
+    def num_q_per_layer(self) -> int:
+        return int(self.quant[0].sum())
+
+    def resident_fraction(self) -> float:
+        return float((self.location == DEVICE).mean())
+
+    def bank_sizes(self) -> Tuple[int, int]:
+        """(E4, E16) per layer — static shapes for the dual-bank MoE."""
+        e4 = self.num_q_per_layer
+        return e4, self.num_experts - e4
+
+    def expert_order(self) -> np.ndarray:
+        """[L, E] permutation: 4-bit experts first, then 16-bit.
+
+        The dual-bank MoE stores experts in this order; the router output is
+        permuted accordingly so routing semantics are unchanged."""
+        order = np.empty_like(self.quant, dtype=np.int32)
+        for l in range(self.num_layers):
+            q = np.where(self.quant[l])[0]
+            f = np.where(~self.quant[l])[0]
+            order[l] = np.concatenate([q, f])
+        return order
+
+
+def balanced_random_plan(num_layers: int, num_experts: int,
+                         num_q_experts: int, *, bits: int = 4,
+                         group_size: int = 64, seed: int = 0,
+                         resident_experts: Optional[int] = None
+                         ) -> PrecisionPlan:
+    """Paper §3 assignment, balanced per layer.
+
+    ``num_q_experts`` is the global Num_E4 in [0, L*E]; each layer gets
+    ``round(num_q_experts / L)`` 4-bit experts (clipped so the global count
+    is met as closely as a balanced split allows).
+
+    ``resident_experts`` (global count) fills the location attribute with the
+    paper's priority rule: 4-bit experts are placed on-device first (cheaper
+    to keep resident -> higher hit rate), then 16-bit ones.
+    """
+    total = num_layers * num_experts
+    if not 0 <= num_q_experts <= total:
+        raise ValueError(f"num_q_experts {num_q_experts} not in [0,{total}]")
+    rng = np.random.default_rng(seed)
+    per_layer = int(round(num_q_experts / num_layers))
+    per_layer = min(per_layer, num_experts)
+    quant = np.zeros((num_layers, num_experts), dtype=bool)
+    for l in range(num_layers):
+        idx = rng.permutation(num_experts)[:per_layer]
+        quant[l, idx] = True
+
+    location = np.full((num_layers, num_experts), DEVICE, dtype=np.int8)
+    if resident_experts is not None:
+        resident_experts = int(np.clip(resident_experts, 0, total))
+        location[:] = HOST
+        # priority: quantized first (paper §3), round-robin over layers so
+        # every layer keeps a similar hit rate.
+        order: List[Tuple[int, int]] = []
+        for phase in (True, False):
+            cols: List[List[Tuple[int, int]]] = []
+            for l in range(num_layers):
+                es = [(l, e) for e in np.where(quant[l] == phase)[0]]
+                rng.shuffle(es)
+                cols.append(es)
+            for i in range(max((len(c) for c in cols), default=0)):
+                for c in cols:
+                    if i < len(c):
+                        order.append(c[i])
+        for (l, e) in order[:resident_experts]:
+            location[l, e] = DEVICE
+    return PrecisionPlan(quant=quant, location=location, bits=bits,
+                         group_size=group_size, seed=seed)
+
+
+def reconfig_delta(old: PrecisionPlan, new: PrecisionPlan):
+    """Minimal reconfiguration ops between two plans (paper §3: partial
+    reconfiguration instead of a full reload).
+
+    Returns dict with index arrays of experts to (re)quantize, dequantize,
+    upload (host->device) and evict (device->host)."""
+    if old.quant.shape != new.quant.shape:
+        raise ValueError("plans must describe the same model")
+    return {
+        "to_quantize": np.argwhere(~old.quant & new.quant),
+        "to_dequantize": np.argwhere(old.quant & ~new.quant),
+        "to_upload": np.argwhere((old.location == HOST)
+                                 & (new.location == DEVICE)),
+        "to_evict": np.argwhere((old.location == DEVICE)
+                                & (new.location == HOST)),
+    }
+
+
+def delta_cost_bytes(delta, size_e4: int, size_e16: int, new: PrecisionPlan):
+    """Host<->device traffic a reconfig needs (downtime estimator)."""
+    up = 0
+    for (l, e) in delta["to_upload"]:
+        up += size_e4 if new.quant[l, e] else size_e16
+    # format flips of device-resident experts re-upload the new format
+    for key in ("to_quantize", "to_dequantize"):
+        for (l, e) in delta[key]:
+            if new.location[l, e] == DEVICE:
+                up += size_e4 if new.quant[l, e] else size_e16
+    return int(up)

@@ -1,0 +1,177 @@
+"""Group-wise weight quantization (the paper's precision substrate).
+
+The paper uses bitsandbytes NF4 on GPU. On TPU we use *symmetric group-wise
+int4/int8* (DESIGN.md §2): along the reduction dim K, groups of ``group_size``
+share one bf16 absmax scale. int4 values live in [-8, 7] and are packed two
+nibbles per byte along K (even K index = low nibble). Dequantization is a
+vector multiply that fuses into the Pallas matmul kernel
+(``repro.kernels.q4_matmul``).
+
+An NF4 codebook path is kept for quality comparison in the reference/bench
+code — it is gather-based and deliberately not used in the compute path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# NF4 quantile codebook (bitsandbytes), for the quality-comparison path only.
+NF4_CODE = np.array(
+    [-1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+     -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+     0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+     0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+     0.7229568362236023, 1.0], dtype=np.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Quantized weight: packed codes + per-group scales.
+
+    For ``bits=4``: ``q`` has shape ``(..., K//2, N)`` uint8 (two nibbles
+    along K). For ``bits=8``: ``q`` has shape ``(..., K, N)`` int8.
+    ``scales`` has shape ``(..., K//group_size, N)``.
+    """
+    q: jax.Array
+    scales: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    group_size: int = dataclasses.field(metadata=dict(static=True), default=64)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        *b, kp, n = self.q.shape
+        k = kp * 2 if self.bits == 4 else kp
+        return (*b, k, n)
+
+    @property
+    def dtype(self):
+        return jnp.bfloat16
+
+    def nbytes(self) -> int:
+        return self.q.size * self.q.dtype.itemsize + \
+            self.scales.size * self.scales.dtype.itemsize
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(..., K, N) int8 in [-8,7] -> (..., K//2, N) uint8."""
+    if q.shape[-2] % 2:
+        raise ValueError(f"K must be even, got {q.shape}")
+    u = (q + 8).astype(jnp.uint8)
+    lo, hi = u[..., 0::2, :], u[..., 1::2, :]
+    return (hi << 4) | lo
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """(..., K//2, N) uint8 -> (..., K, N) int8 in [-8,7]."""
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    *b, kp, n = packed.shape
+    # interleave along K: (..., K//2, 2, N) -> (..., K, N)
+    return jnp.stack([lo, hi], axis=-2).reshape(*b, 2 * kp, n)
+
+
+def quantize(w: jax.Array, bits: int = 4, group_size: int = 64) -> QTensor:
+    """Symmetric absmax group-wise quantization along dim -2 (reduction K)."""
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    *b, k, n = w.shape
+    if k % group_size:
+        raise ValueError(f"K={k} not divisible by group_size={group_size}")
+    wf = w.astype(jnp.float32).reshape(*b, k // group_size, group_size, n)
+    qmax = 7.0 if bits == 4 else 127.0
+    absmax = jnp.max(jnp.abs(wf), axis=-2)                     # (..., K/G, N)
+    scales = (absmax / qmax).astype(jnp.float32)
+    inv = jnp.where(scales > 0, 1.0 / scales, 0.0)
+    q = jnp.clip(jnp.round(wf * inv[..., None, :]), -qmax - 1, qmax)
+    q = q.astype(jnp.int8).reshape(*b, k, n)
+    if bits == 4:
+        q = pack_int4(q)
+    return QTensor(q=q, scales=scales.astype(jnp.bfloat16),
+                   bits=bits, group_size=group_size)
+
+
+def dequantize(qt: QTensor) -> jax.Array:
+    """QTensor -> bf16 weight (..., K, N). Pure-jnp oracle for the kernel."""
+    q = unpack_int4(qt.q) if qt.bits == 4 else qt.q
+    *b, k, n = q.shape
+    g = qt.group_size
+    wf = q.astype(jnp.float32).reshape(*b, k // g, g, n)
+    wf = wf * qt.scales.astype(jnp.float32)[..., None, :]
+    return wf.reshape(*b, k, n).astype(jnp.bfloat16)
+
+
+def quantize_nf4(w: jax.Array, group_size: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """NF4 codebook quantization (quality-comparison path, not compute path).
+
+    Returns (codes uint8 (..., K, N), absmax (..., K/G, N))."""
+    *b, k, n = w.shape
+    wf = w.astype(jnp.float32).reshape(*b, k // group_size, group_size, n)
+    absmax = jnp.max(jnp.abs(wf), axis=-2) + 1e-12
+    norm = wf / absmax[..., None, :]
+    code = jnp.asarray(NF4_CODE)
+    idx = jnp.argmin(jnp.abs(norm[..., None] - code), axis=-1)
+    return idx.reshape(*b, k, n).astype(jnp.uint8), absmax
+
+
+def dequantize_nf4(codes: jax.Array, absmax: jax.Array,
+                   group_size: int = 64) -> jax.Array:
+    *b, k, n = codes.shape
+    code = jnp.asarray(NF4_CODE)
+    wf = code[codes.astype(jnp.int32)].reshape(*b, k // group_size, group_size, n)
+    return (wf * absmax[..., None, :]).reshape(*b, k, n).astype(jnp.bfloat16)
+
+
+def quantization_rmse(w: jax.Array, bits: int = 4, group_size: int = 64,
+                      nf4: bool = False) -> float:
+    """Relative RMSE of one quantize/dequantize round trip."""
+    if nf4:
+        deq = dequantize_nf4(*quantize_nf4(w, group_size), group_size)
+    else:
+        deq = dequantize(quantize(w, bits, group_size))
+    err = jnp.sqrt(jnp.mean((w.astype(jnp.float32)
+                             - deq.astype(jnp.float32)) ** 2))
+    return float(err / (jnp.sqrt(jnp.mean(w.astype(jnp.float32) ** 2)) + 1e-12))
+
+
+# ----- whole-model homogeneous quantization (paper's Table-1 baselines) -----
+
+def quantize_tree(params, bits: int, group_size: int = 64,
+                  min_dims: int = 2, min_k: int = 128):
+    """Quantize every eligible weight matrix in a pytree (homogeneous
+    baseline: '4-bit everything' / '8-bit everything' rows of Table 1).
+
+    Arrays with fewer than ``min_dims`` dims, a reduction dim smaller than
+    ``min_k``, or K not divisible by the group are left untouched (norm
+    scales, biases, small heads)."""
+    def _q(x):
+        if (not isinstance(x, jax.Array) and not isinstance(x, np.ndarray)):
+            return x
+        if x.ndim < min_dims or x.shape[-2] < min_k or \
+                x.shape[-2] % group_size:
+            return x
+        return quantize(jnp.asarray(x), bits, group_size)
+    return jax.tree_util.tree_map(_q, params)
+
+
+def dequantize_tree(params):
+    def _dq(x):
+        return dequantize(x) if isinstance(x, QTensor) else x
+    return jax.tree_util.tree_map(
+        _dq, params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def tree_nbytes(params) -> int:
+    """Model size in bytes, QTensor-aware (paper's Model Size column)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes()
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

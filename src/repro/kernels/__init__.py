@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the MoP compute hot spots.
+
+q4_matmul — fused in-VMEM dequant + MXU matmul for int4/int8 group-quantized
+weights (kernel body), with ops.py as the jit'd public wrapper and ref.py as
+the pure-jnp oracle. Validated in interpret mode on CPU; targets Mosaic/TPU.
+"""
+from repro.kernels.ops import q_expert_matmul, q_matmul  # noqa: F401
+from repro.kernels.ref import expert_matmul_ref, quantized_matmul_ref  # noqa: F401

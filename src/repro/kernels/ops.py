@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle padding to tile boundaries, the QTensor container, batching
+over experts (vmap adds a leading grid dimension to the pallas_call), and
+CPU fallback (interpret mode executes the kernel body in Python — used for
+tests and for this CPU container; on TPU the same code JITs to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor
+from repro.kernels import q4_matmul as _k
+
+# On the CPU container Pallas must run in interpret mode; flip to False on
+# real TPU (dryrun lowering for TPU targets uses the jnp reference path —
+# see mixed_moe.use_kernel).
+_DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "out_dtype", "interpret"))
+def q_matmul(x: jax.Array, qt: QTensor, *, block_m: int = 128,
+             block_n: int = 256, block_k: int = 128,
+             out_dtype=jnp.bfloat16,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """``x @ dequant(qt)`` — (M, K) x Q(K, N) -> (M, N).
+
+    M is padded to the tile size (decode batches are small); K and N must
+    already satisfy tile divisibility (true for every config in the zoo —
+    d_model/d_ff are multiples of 256).
+    """
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    m = x.shape[0]
+    k, n = qt.shape[-2:]
+    block_m_eff = min(block_m, _round_up(m, 8))
+    # shrink tiles to divisors (TP-sharded d_ff slices, e.g. 14336/16=896,
+    # are multiples of 128 but not of 256)
+    block_n = _largest_divisor(n, block_n, qt.group_size)
+    block_k = _largest_divisor(k, block_k, qt.group_size)
+    xp = _pad_to(x, block_m_eff, 0)
+    out = _k.quantized_matmul(
+        xp, qt.q, qt.scales, bits=qt.bits, group_size=qt.group_size,
+        block_m=block_m_eff, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret)
+    return out[:m]
+
+
+def _largest_divisor(dim: int, cap: int, step: int) -> int:
+    """Largest multiple of ``step`` that divides ``dim`` and is <= cap."""
+    best = step if dim % step == 0 else dim
+    b = step
+    while b <= min(cap, dim):
+        if dim % b == 0:
+            best = b
+        b += step
+    return min(best, dim)
+
+
+def q_expert_matmul(x: jax.Array, qt: QTensor, *, block_m: int = 128,
+                    block_n: int = 256, block_k: int = 128,
+                    out_dtype=jnp.bfloat16,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Batched experts: (E, C, K) x Q(E, K, N) -> (E, C, N) via vmap
+    (vmap over pallas_call prepends a grid dimension)."""
+    fn = functools.partial(
+        q_matmul, block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype,
+        interpret=_DEFAULT_INTERPRET if interpret is None else interpret)
+    return jax.vmap(lambda xe, qe, se: fn(
+        xe, QTensor(q=qe, scales=se, bits=qt.bits, group_size=qt.group_size))
+    )(x, qt.q, qt.scales)
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, dequantize
+
+
+def quantized_matmul_ref(x: jax.Array, wq: jax.Array, scales: jax.Array,
+                         *, bits: int = 4, group_size: int = 64,
+                         out_dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantize-then-matmul in f32 — oracle for kernels.q4_matmul."""
+    qt = QTensor(q=wq, scales=scales, bits=bits, group_size=group_size)
+    w = dequantize(qt).astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def expert_matmul_ref(x: jax.Array, wq: jax.Array, scales: jax.Array,
+                      *, bits: int = 4, group_size: int = 64,
+                      out_dtype=jnp.bfloat16) -> jax.Array:
+    """(E, C, K) x (E, K, N) batched variant."""
+    qt = QTensor(q=wq, scales=scales, bits=bits, group_size=group_size)
+    w = dequantize(qt).astype(jnp.float32)            # (E, K, N)
+    return jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32), w
+                      ).astype(out_dtype)

@@ -1,0 +1,31 @@
+"""Production mesh builders (spec-mandated shapes).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}; got {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices[:ndev],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    import numpy as np
+    ndev = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

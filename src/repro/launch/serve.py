@@ -1,0 +1,97 @@
+"""Serving launcher — the paper's adaptive MoE deployment as a CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        [--budget-gb 40] [--preference throughput|quality] [--num-q 128] \
+        [--requests 8] [--ckpt-dir DIR] [--trace budgets.csv]
+
+Smoke-reduced on CPU (same-family config); the planner/engine logic and
+the plan signatures are identical at full scale. ``--trace`` replays a
+CSV of ``budget_gb,preference[,num_q]`` lines — the multi-tenant scenario
+of the paper's Fig. 1.
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
+from repro.ft.checkpoint import CheckpointManager
+from repro.models.model import build_model
+from repro.serving.engine import AdaptiveServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=list(ARCH_IDS))
+    ap.add_argument("--budget-gb", type=float, default=None,
+                    help="HBM budget; default = full bf16 size * 0.6")
+    ap.add_argument("--preference", default="throughput",
+                    choices=("throughput", "quality"))
+    ap.add_argument("--num-q", type=int, default=None,
+                    help="Num_E4 for quality preference")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore trained params instead of random init")
+    ap.add_argument("--trace", default=None,
+                    help="CSV of budget_gb,preference[,num_q] to replay")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if cfg.moe is None:
+        raise SystemExit(f"{args.arch} has no routed experts — the MoP "
+                         "engine serves MoE archs (DESIGN.md §5); dense "
+                         "archs serve via the plain prefill/decode path "
+                         "(see examples/quickstart.py)")
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    model = build_model(cfg)
+    if args.ckpt_dir and CheckpointManager(args.ckpt_dir).latest_step():
+        tree, _ = CheckpointManager(args.ckpt_dir).restore()
+        params = jax.tree_util.tree_map(
+            jnp.asarray, tree.get("params", tree))
+        print(f"[serve] restored params from {args.ckpt_dir}")
+    else:
+        params = model.init(jax.random.key(0))
+
+    engine = AdaptiveServingEngine(cfg, params, max_batch=4,
+                                   max_len=32 + args.max_new_tokens)
+    full = engine.planner.size_ne + \
+        engine.planner.num_experts_total * engine.planner.size_e16
+
+    if args.trace:
+        points = []
+        for ln in Path(args.trace).read_text().splitlines():
+            parts = [p.strip() for p in ln.split(",")]
+            if not parts or parts[0].startswith("#"):
+                continue
+            points.append((float(parts[0]) * 1e9, parts[1],
+                           int(parts[2]) if len(parts) > 2 else None))
+    else:
+        budget = args.budget_gb * 1e9 if args.budget_gb else full * 0.6
+        points = [(budget, args.preference, args.num_q)]
+
+    rng = np.random.default_rng(0)
+    for budget, pref, nq in points:
+        res = engine.configure(budget, pref, nq)
+        print(f"[serve] {res.summary()}")
+        for _ in range(args.requests):
+            engine.submit(rng.integers(1, cfg.vocab_size, 16),
+                          max_new_tokens=args.max_new_tokens)
+        while engine.step(temperature=args.temperature):
+            pass
+        print(f"[serve] {engine.summary()}")
+    done = list(engine.done.values())[:2]
+    for r in done:
+        print(f"  req {r.rid}: {r.out_tokens[:12]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Encoder-decoder stack (SeamlessM4T backbone).
+
+The speech frontend is a stub per spec: the encoder consumes precomputed
+frame embeddings (B, S_src, d). The decoder is the shared decoder_forward
+with cross-attention; at prefill the encoder output is computed once and
+carried in the cache (cross-K/V are recomputed per call — simple and cheap
+relative to self-attention; caching them is a recorded optimization).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import _maybe_remat, _scan_or_loop, \
+    decoder_forward
+
+
+def encoder_forward(params, cfg: ModelConfig, src: jax.Array):
+    """src: (B, S_src, d) frontend embeddings -> (B, S_src, d)."""
+    positions = jnp.broadcast_to(jnp.arange(src.shape[1]), src.shape[:2])
+    acfg = cfg.attention.__class__(**{**cfg.attention.__dict__,
+                                      "causal": False})
+
+    def block(x, p):
+        h, _ = L.attention(p["attn"],
+                           L.rms_norm(x, p["attn_norm"]["scale"]),
+                           acfg, positions=positions)
+        x = x + h
+        h = L.mlp(p["mlp"], L.rms_norm(x, p["ffn_norm"]["scale"]), cfg.act)
+        return x + h, None
+
+    body = _maybe_remat(block, cfg)
+    x, _ = _scan_or_loop(body, src, params["encoder"], cfg)
+    return L.rms_norm(x, params["encoder_norm"]["scale"])
+
+
+def encdec_forward(params, cfg: ModelConfig, x, positions, *,
+                   caches=None, enc_out=None, src=None, **kw):
+    """Decoder over embedded targets ``x`` with cross-attention to
+    ``enc_out`` (or freshly encoded ``src``)."""
+    if enc_out is None:
+        assert src is not None, "enc-dec needs src embeddings or enc_out"
+        enc_out = encoder_forward(params, cfg, src)
+    dec_caches = None if caches is None else caches["self"]
+    y, new_self, aux = decoder_forward(
+        params, cfg, x, positions, caches=dec_caches, enc_out=enc_out, **kw)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"self": new_self, "enc_out": enc_out}
+    return y, new_caches, aux

@@ -1,0 +1,272 @@
+"""Shared neural layers (pure functions over param pytrees, no flax).
+
+Conventions:
+  * params are nested dicts keyed by the names in ModelConfig.param_shapes()
+  * activations are bf16, reductions/norms/softmax in f32
+  * attention supports GQA (kv<heads), MQA (kv=1), sliding-window (ring
+    buffer KV cache), qk-norm, cross-attention, causal & bidirectional
+  * decode caches carry explicit absolute-position tags so SWA ring buffers
+    mask correctly
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.dist.sharding import constrain
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# KV cache: fixed-size ring buffer (window = sliding_window or max length),
+# slots tagged with absolute positions (-1 = empty).
+# --------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, window: int, num_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, window, num_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, window, num_kv, head_dim), dtype),
+        "pos": jnp.full((batch, window), -1, jnp.int32),
+    }
+
+
+def _update_cache(cache, k_new, v_new, positions):
+    """Insert S_new entries at slots ``position % window`` (vectorized)."""
+    window = cache["k"].shape[1]
+    slots = positions % window                                 # (B, S_new)
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k = constrain(cache["k"].at[b_idx, slots].set(k_new), "kv_cache")
+    v = constrain(cache["v"].at[b_idx, slots].set(v_new), "kv_cache")
+    pos = cache["pos"].at[b_idx, slots].set(positions)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _prefill_cache(cache, k_new, v_new, positions):
+    """Prefill-from-empty cache write WITHOUT a scatter.
+
+    Positions are contiguous 0..S-1, so the ring-buffer content is a
+    (rolled) slice of k/v — a reshape GSPMD partitions for free, vs. the
+    general scatter which all-gathers the whole cache per layer."""
+    b, s, hkv, hd = k_new.shape
+    window = cache["k"].shape[1]
+    if s >= window:
+        shift = (s - window) % window      # slot of the first kept entry
+        cut = lambda a: jnp.roll(a[:, -window:], shift, axis=1)
+        k, v, pos = cut(k_new), cut(v_new), cut(positions)
+    else:
+        pad = [(0, 0), (0, window - s)] + [(0, 0)] * (k_new.ndim - 2)
+        k = jnp.pad(k_new, pad)
+        v = jnp.pad(v_new, pad)
+        pos = jnp.pad(positions, [(0, 0), (0, window - s)],
+                      constant_values=-1)
+    # NOTE: no sharding constraint here — constraining would CSE with the
+    # in-context attention's k/v and drag a seq-gather into every layer;
+    # the stacked cache output is resharded once at the jit boundary.
+    return {"k": k.astype(cache["k"].dtype),
+            "v": v.astype(cache["v"].dtype),
+            "pos": pos.astype(jnp.int32)}
+
+
+_Q_CHUNK = 512      # query-block size for long-sequence attention
+
+
+def _sdpa_block(q, k, v, mask, scale, score_name):
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = constrain(logits, score_name)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _sdpa_grouped_block(q, k, v, mask, scale, score_name: str) -> jax.Array:
+    """GQA without materializing repeated K/V: queries are reshaped to
+    (B, Sq, Hkv, G, hd) and contract the SHARED kv head dim directly —
+    the K/V cache is read once, not G times (§Perf kimi-decode iter 3:
+    the expand+transpose copy was the decode-path's dominant HBM term,
+    and the dK/dV all-reduce shrinks G-fold in training backward).
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q5 = q.reshape(b, sq, hkv, g, hd)
+    logits = jnp.einsum("bqcgd,bkcd->bcgqk", q5, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = constrain(logits, score_name)
+    logits = jnp.where(mask[:, :, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bcgqk,bkcd->bqcgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa(q, k, v, mask, score_name: str, grouped: bool = True
+          ) -> jax.Array:
+    """q: (B,Sq,H,hd) k,v: (B,Sk,Hkv,hd) mask: (B,1,Sq,Sk) bool.
+
+    GQA (hkv < h) always runs the grouped contraction — K/V are never
+    expanded. Long queries are processed in blocks of _Q_CHUNK (scan) so
+    the score tensor is O(chunk x Sk), never O(Sq x Sk) — flash-style
+    memory bound, exact softmax (each block sees all of K)."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    grouped = grouped and hkv != h
+    if not grouped and hkv != h:
+        # flat + head-sharded path (heads_ok archs): expand K/V; the
+        # expansion shards over "model" with the scores
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    block = _sdpa_grouped_block if grouped else _sdpa_block
+    name = score_name + ("_g" if grouped else "")
+    scale = hd ** -0.5
+    if sq <= 2 * _Q_CHUNK or sq % _Q_CHUNK:
+        return block(q, k, v, mask, scale, name)
+    nb = sq // _Q_CHUNK
+    qs = q.reshape(b, nb, _Q_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+    ms = mask.reshape(b, 1, nb, _Q_CHUNK, -1).transpose(2, 0, 1, 3, 4)
+
+    def body(_, qm):
+        qb, mb = qm
+        return None, block(qb, k, v, mb, scale, name)
+
+    _, out = jax.lax.scan(body, None, (qs, ms))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention(p: Dict[str, Any], x: jax.Array, acfg: AttentionConfig, *,
+              positions: jax.Array,
+              cache: Optional[Dict[str, jax.Array]] = None,
+              kv_x: Optional[jax.Array] = None,
+              use_rope: bool = True,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self- or cross-attention.
+
+    x: (B, S, d); positions: (B, S) absolute positions of x.
+    cache=None -> full attention over (kv_x or x) with causal/SWA mask.
+    cache given -> decode/prefill-with-cache: new k/v are written into the
+    ring buffer, attention runs over the buffer with position-tag masking.
+    kv_x -> cross-attention (no causal mask, no rope on kv side by default).
+    """
+    b, s, d = x.shape
+    h, hkv, hd = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    src = kv_x if kv_x is not None else x
+
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (src @ p["wk"]).reshape(b, src.shape[1], hkv, hd)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], hkv, hd)
+
+    if acfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+
+    cross = kv_x is not None
+    if use_rope and not cross:
+        q = rope(q, positions, acfg.rope_theta)
+        k = rope(k, positions, acfg.rope_theta)
+
+    # Full-attention paths: grouped GQA only when heads can't shard over
+    # "model" — measured (§Perf): flat+head-sharded beats grouped's 5D
+    # layout transitions for heads_ok archs (mixtral train 833->3213 GB
+    # collectives with grouped), while grouped+q-sharded wins 8x for
+    # 15-head smollm. Decode always groups (K/V never expanded).
+    from repro.dist.sharding import full_grouped_ok
+    g_full = full_grouped_ok(h, hkv)
+
+    new_cache = None
+    if cross:
+        # bidirectional over the (precomputed) source; mask only padding-free
+        mask = jnp.ones((b, 1, s, src.shape[1]), bool)
+        out = _sdpa(q, k, v, mask, "attn_scores_full", grouped=g_full)
+    elif cache is not None and s > 1:
+        # prefill-from-empty: attend over the in-context k/v directly
+        # (heads-sharded, zero extra comm) and write the ring buffer for
+        # the decode steps that follow. Attending *through* the window-
+        # sharded cache would psum every softmax (see DESIGN.md §4).
+        new_cache = _prefill_cache(cache, k, v, positions)
+        qpos = positions
+        mask = qpos[:, None, :, None] >= qpos[:, None, None, :]
+        if acfg.sliding_window:
+            mask &= (qpos[:, None, :, None] - qpos[:, None, None, :]
+                     < acfg.sliding_window)
+        out = _sdpa(q, k, v, mask, "attn_scores_full", grouped=g_full)
+    elif cache is not None:
+        new_cache = _update_cache(cache, k, v, positions)
+        kpos = new_cache["pos"]                                  # (B, W)
+        qpos = positions                                         # (B, S)
+        valid = kpos[:, None, None, :] >= 0
+        causal = kpos[:, None, None, :] <= qpos[:, None, :, None]
+        mask = valid & causal
+        if acfg.sliding_window:
+            mask &= (qpos[:, None, :, None] - kpos[:, None, None, :]
+                     < acfg.sliding_window)
+        out = _sdpa(q, new_cache["k"], new_cache["v"], mask,
+                    "attn_scores_cache", grouped=True)
+    else:
+        qpos = positions
+        mask = qpos[:, None, :, None] >= qpos[:, None, None, :] \
+            if acfg.causal else jnp.ones((b, 1, s, s), bool)
+        if acfg.causal and acfg.sliding_window:
+            mask &= (qpos[:, None, :, None] - qpos[:, None, None, :]
+                     < acfg.sliding_window)
+        out = _sdpa(q, k, v, mask, "attn_scores_full", grouped=g_full)
+
+    return out.reshape(b, s, h * hd) @ p["wo"], new_cache
+
+
+def mlp(p: Dict[str, Any], x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if act == "gelu":
+        return jax.nn.gelu(x @ p["w_up"], approximate=True) @ p["w_down"]
+    if act == "relu_sq":
+        return jnp.square(jax.nn.relu(x @ p["w_up"])) @ p["w_down"]
+    raise ValueError(act)
+
+
+def embed(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """(B,S,d) @ (V,d)^T -> (B,S,V) logits in f32 for a stable softmax."""
+    return jnp.einsum("bsd,vd->bsv", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 vocab_size: int) -> jax.Array:
+    """Mean NLL with padded-vocab masking (positions with label<0 ignored)."""
+    v_pad = logits.shape[-1]
+    if v_pad > vocab_size:
+        pad_mask = jnp.arange(v_pad) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1)

@@ -1,0 +1,278 @@
+"""build_model(cfg) -> Model: init / train loss / prefill / decode_step,
+uniform across all 10 architectures (+ the paper's mixtral-mop serving
+config). Frontend stubs (audio/vision) consume precomputed embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import mixed_moe
+from repro.core.precision_plan import PrecisionPlan
+from repro.models import layers as L
+from repro.models.encdec import encdec_forward, encoder_forward
+from repro.models.transformer import FORWARDS, _hybrid_layout
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (name-rule based; shapes from cfg.param_shapes())
+# ---------------------------------------------------------------------------
+
+def _init_one(key, name: str, shape, dtype):
+    last = name.rsplit("/", 1)[-1]
+    if last in ("scale", "norm", "ln_x", "D"):
+        return jnp.ones(shape, dtype)
+    if last == "A_log":
+        # mamba2: A in [1, 16]
+        return jnp.log(jnp.linspace(1.0, 16.0, shape[0])).astype(dtype)
+    if last == "dt_bias":
+        u = jax.random.uniform(key, shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inv softplus
+    if last in ("mix", "ffn_mix"):
+        return jnp.full(shape, 0.5, dtype)
+    if last == "decay_base":
+        return jnp.zeros(shape, dtype)
+    if last == "bonus":
+        return (jax.random.normal(key, shape, jnp.float32) * 0.1
+                ).astype(dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def nest(flat: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for name, v in flat.items():
+        node = out
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    shapes = cfg.param_shapes()
+    keys = jax.random.split(key, len(shapes))
+    flat = {}
+    for k, (name, shape) in zip(keys, shapes):
+        flat[name] = _init_one(k, name, shape, dtype)
+    return nest(flat)
+
+
+def abstract_params(cfg: ModelConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    dtype = jnp.dtype(cfg.dtype)
+    return nest({name: jax.ShapeDtypeStruct(shape, dtype)
+                 for name, shape in cfg.param_shapes()})
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> Any:
+    """Decode caches; ``abstract=True`` returns ShapeDtypeStructs."""
+    dt = jnp.dtype(cfg.dtype)
+    mk = (lambda s, d=dt: jax.ShapeDtypeStruct(s, d)) if abstract \
+        else (lambda s, d=dt: jnp.zeros(s, d) if d != jnp.int32
+              else jnp.full(s, -1, d))
+
+    def kv(n, window):
+        return {"k": mk((n, batch, window, cfg.attention.num_kv_heads,
+                         cfg.attention.head_dim)),
+                "v": mk((n, batch, window, cfg.attention.num_kv_heads,
+                         cfg.attention.head_dim)),
+                "pos": mk((n, batch, window), jnp.int32)}
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        window = min(max_len, cfg.attention.sliding_window or max_len)
+        return kv(cfg.num_layers, window)
+    if fam == "encdec":
+        window = max_len
+        return {"self": kv(cfg.num_layers, window),
+                "enc_out": mk((batch, cfg.frontend_len, cfg.d_model))}
+    if fam == "ssm":   # rwkv6
+        h = cfg.d_model // cfg.ssm.head_dim
+        n = cfg.num_layers
+        return {"state": mk((n, batch, h, cfg.ssm.head_dim,
+                             cfg.ssm.head_dim), jnp.float32),
+                "x_att": mk((n, batch, cfg.d_model)),
+                "x_ffn": mk((n, batch, cfg.d_model))}
+    if fam == "hybrid":
+        di = cfg.ssm.expand * cfg.d_model
+        h = di // cfg.ssm.head_dim
+        n = cfg.num_layers
+        full, g, rem = _hybrid_layout(cfg)
+        n_attn = full + 1
+        window = min(max_len, cfg.attention.sliding_window or max_len)
+        conv_ch = di + 2 * cfg.ssm.state_dim
+        return {
+            "mamba": {"state": mk((n, batch, h, cfg.ssm.head_dim,
+                                   cfg.ssm.state_dim), jnp.float32),
+                      "conv": mk((n, batch, 3, conv_ch))},
+            "attn": kv(n_attn, window),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# The Model bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable          # (params, batch) -> (loss, metrics)
+    prefill: Callable          # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable      # (params, cache, tokens, positions) -> (logits, cache)
+    init_cache: Callable
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """tokens (+ frontend embeddings) -> (x (B,S,d), positions (B,S))."""
+    tok = batch["tokens"]
+    x = L.embed(params["embed"]["table"], tok) \
+        * jnp.asarray(math.sqrt(cfg.d_model), params["embed"]["table"].dtype)
+    if cfg.frontend == "vision":
+        x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    return x, positions
+
+
+def _forward_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_forward
+    return FORWARDS[cfg.family]
+
+
+def build_model(cfg: ModelConfig, mesh=None, *,
+                dp_axes: Tuple[str, ...] = ("data",),
+                use_kernel: bool = False) -> Model:
+    """mesh=None builds a single-device (1,1) mesh (CPU tests)."""
+    import contextlib
+
+    from repro.dist import sharding as SH
+    if mesh is None:
+        dev = np.array(jax.devices()[:1]).reshape(1, 1)
+        mesh = jax.sharding.Mesh(dev, ("data", "model"))
+        dp_axes = ("data",)
+    # token-gather EP (DESIGN.md §4 / §Perf kimi-decode): the "data" axis
+    # doubles as the experts' d_ff (FSDP) shard axis; mixed_moe gathers
+    # tokens over it instead of re-gathering 1T-scale weights per layer.
+    fsdp_axis = "data" if "data" in mesh.shape else None
+    par = mixed_moe.MoEParallelism(mesh=mesh, dp_axes=dp_axes,
+                                   fsdp_axis=fsdp_axis)
+    fwd = _forward_fn(cfg)
+    multi_dev = int(np.prod(mesh.devices.shape)) > 1
+    act_ctx = (lambda: SH.activation_constraints(cfg, mesh, dp_axes)) \
+        if multi_dev else contextlib.nullcontext
+    act_ctx_train = (lambda: SH.activation_constraints(
+        cfg, mesh, dp_axes, train=True)) if multi_dev \
+        else contextlib.nullcontext
+
+    def loss_fn(params, batch):
+        with act_ctx_train():
+            x, positions = _embed_inputs(params, cfg, batch)
+            kw = dict(par=par, train=True, use_kernel=False)
+            if cfg.family == "encdec":
+                kw["src"] = batch["src"]
+            y, _, aux = fwd(params, cfg, x, positions, caches=None, **kw)
+            y = L.rms_norm(y, params["final_norm"]["scale"])
+            if cfg.frontend == "vision":   # loss over the text tail only
+                y = y[:, cfg.frontend_len:]
+            logits = L.unembed(params["lm_head"]["table"], y)
+            loss = L.softmax_xent(logits, batch["labels"], cfg.vocab_size)
+            metrics = {"nll": loss}
+            for k, v in aux.items():
+                loss = loss + v
+                metrics[k] = v
+            metrics["loss"] = loss
+            return loss, metrics
+
+    def prefill(params, batch, cache):
+        with act_ctx():
+            x, positions = _embed_inputs(params, cfg, batch)
+            kw = dict(par=par, train=False, use_kernel=use_kernel)
+            if cfg.family == "encdec":
+                kw["src"] = batch["src"]
+            y, new_cache, _ = fwd(params, cfg, x, positions, caches=cache,
+                                  **kw)
+            y = L.rms_norm(y[:, -1:], params["final_norm"]["scale"])
+            logits = L.unembed(params["lm_head"]["table"], y)
+            return logits[:, 0], new_cache
+
+    def decode_step(params, cache, tokens, positions):
+        """tokens (B,1); positions (B,) absolute position of the token."""
+        with act_ctx():
+            x = L.embed(params["embed"]["table"], tokens) \
+                * jnp.asarray(math.sqrt(cfg.d_model),
+                              params["embed"]["table"].dtype)
+            pos2 = positions[:, None]
+            kw = dict(par=par, train=False, use_kernel=use_kernel)
+            if cfg.family == "encdec":
+                kw["enc_out"] = cache["enc_out"]
+            y, new_cache, _ = fwd(params, cfg, x, pos2, caches=cache, **kw)
+            y = L.rms_norm(y, params["final_norm"]["scale"])
+            logits = L.unembed(params["lm_head"]["table"], y)
+            return logits[:, 0], new_cache
+
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=functools.partial(init_cache, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Applying a MoP PrecisionPlan to trained params (serve layout)
+# ---------------------------------------------------------------------------
+
+def apply_precision_plan(params, cfg: ModelConfig, plan: PrecisionPlan):
+    """Convert train-layout MoE params into dual-bank serve layout:
+    per-layer [q4 | f16] banks + router column permutation.
+
+    Works on stacked (L, ...) params; per-layer E4 counts are equal by
+    construction (balanced plan) so banks stack cleanly."""
+    assert cfg.moe is not None
+    moe_p = params["layers"]["moe"]
+    l = cfg.num_layers
+    banks_per_layer = []
+    routers = []
+    for li in range(l):
+        layer_p = {k: moe_p[k][li] for k in ("w_gate", "w_up", "w_down")}
+        banks, order = mixed_moe.build_mixed_banks(
+            layer_p, plan.quant[li], bits=plan.bits,
+            group_size=plan.group_size)
+        banks_per_layer.append(banks)
+        routers.append(jnp.take(moe_p["router"][li], order, axis=1))
+    stacked = {}
+    for bank in ("q4", "f16"):
+        if banks_per_layer[0][bank] is None:
+            stacked[bank] = None
+        else:
+            stacked[bank] = jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a),
+                *[b[bank] for b in banks_per_layer])
+    new_params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+    new_params["layers"] = dict(params["layers"])
+    new_params["layers"]["moe"] = {
+        "router": jnp.stack(routers),
+        "banks": stacked,
+    }
+    return new_params

@@ -1,0 +1,313 @@
+"""SSM blocks: Mamba2 (SSD, chunked) and RWKV6 (Finch, data-dependent decay).
+
+Both are *chunked linear attention* so the sequence dim parallelizes onto the
+MXU (DESIGN.md: TPU adaptation — the CUDA selective-scan kernel becomes a
+chunked matmul formulation):
+
+  Mamba2 state:  S_t = a_t * S_{t-1} + (dt_t x_t) B_t^T           (a scalar/head)
+  RWKV6 state:   S_t = diag(w_t) S_{t-1} + k_t v_t^T              (w vector/key)
+
+Within a chunk of Q tokens all pairwise decay products are exponentials of
+cumulative-log-decay differences: for Mamba the exponents are always <= 0
+(segsum form, no overflow); for RWKV's per-channel decay the factored matmul
+form needs exp(-cumsum) on the key side, so the per-token log decay is
+clamped to >= -DECAY_CLAMP and the chunk kept small enough that
+exp(DECAY_CLAMP * Q) stays in f32 range. The decode path and the test oracle
+use the *same* clamped decay, so chunked == recurrent exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+DECAY_CLAMP = 1.8      # |log w| cap; exp(1.8 * 32) < f32 max
+
+
+# ===========================================================================
+# Mamba2 SSD core
+# ===========================================================================
+
+def ssd_chunked(u: jax.Array, logdecay: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                s0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """u: (B,S,H,P) inputs (dt*x); logdecay: (B,S,H) <=0; b,c: (B,S,N).
+
+    Returns y (B,S,H,P), final state (B,H,P,N)."""
+    bsz, s_orig, h, p = u.shape
+    pad = (-s_orig) % chunk
+    if pad:   # no-op tail: decay=1 (log 0), zero inputs -> state unchanged
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        u, logdecay, b, c = map(zpad, (u, logdecay, b, c))
+    bsz, s, h, p = u.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    uc = u.reshape(bsz, nc, chunk, h, p)
+    ld = logdecay.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+    cum = jnp.cumsum(ld, axis=2)                       # inclusive (B,nc,Q,H)
+
+    # intra-chunk: att[b,t,h,i,j] = (c_i . b_j) exp(cum_i - cum_j), j<=i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("btin,btjn->btij", cc, bc)             # (B,nc,Q,Q)
+    att = cb[..., None] * dec                              # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("btijh,btjhp->btihp", att, uc.astype(jnp.float32))
+
+    # chunk-level state recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+    # state injected by chunk t: sum_j exp(cum_last - cum_j) u_j b_j^T
+    w_in = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nc,Q,H)
+    s_in = jnp.einsum("btjh,btjhp,btjn->bthpn",
+                      w_in, uc.astype(jnp.float32), bc)    # (B,nc,H,P,N)
+
+    def scan_fn(s_prev, inp):
+        dec_t, sin_t = inp
+        s_new = s_prev * dec_t[..., None, None] + sin_t
+        return s_new, s_prev
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32) if s0 is None \
+        else s0.astype(jnp.float32)
+    s_last, s_starts = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.swapaxes(0, 1), s_in.swapaxes(0, 1)))
+    s_starts = s_starts.swapaxes(0, 1)                     # (B,nc,H,P,N)
+
+    # carry-in contribution: y_i += (c_i exp(cum_i)) . S_start
+    w_carry = jnp.exp(cum)                                 # (B,nc,Q,H)
+    y_carry = jnp.einsum("btin,btih,bthpn->btihp",
+                         cc, w_carry, s_starts)
+    y = (y_intra + y_carry).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(u.dtype), s_last
+
+
+def ssd_step(s_prev: jax.Array, u_t: jax.Array, logdecay_t: jax.Array,
+             b_t: jax.Array, c_t: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. s_prev (B,H,P,N); u_t (B,H,P); ld (B,H);
+    b_t,c_t (B,N)."""
+    a = jnp.exp(logdecay_t.astype(jnp.float32))[..., None, None]
+    s_new = s_prev * a + jnp.einsum("bhp,bn->bhpn", u_t.astype(jnp.float32),
+                                    b_t.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c_t.astype(jnp.float32))
+    return y.astype(u_t.dtype), s_new
+
+
+def ssd_recurrent_ref(u, logdecay, b, c, s0=None):
+    """Naive per-token oracle for ssd_chunked (tests)."""
+    bsz, s, h, p = u.shape
+    n = b.shape[-1]
+    state = jnp.zeros((bsz, h, p, n), jnp.float32) if s0 is None else s0
+
+    def step(st, inp):
+        u_t, ld_t, b_t, c_t = inp
+        y, st = ssd_step(st, u_t, ld_t, b_t, c_t)
+        return st, y
+
+    _, ys = jax.lax.scan(step, state,
+                         (u.swapaxes(0, 1), logdecay.swapaxes(0, 1),
+                          b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)
+
+
+# ===========================================================================
+# RWKV6 linear-attention core
+# ===========================================================================
+
+def rwkv_chunked(r, k, v, logw, bonus, chunk,
+                 s0: Optional[jax.Array] = None):
+    """r,k: (B,S,H,K); v: (B,S,H,V); logw: (B,S,H,K) in [-DECAY_CLAMP,0];
+    bonus u: (H,K). Returns y (B,S,H,V), final state (B,H,K,V).
+
+    y_i = r_i . S_{i-1} + (r_i . (u*k_i)) v_i ;  S_i = diag(w_i) S_{i-1}
+          + k_i v_i^T
+    """
+    bsz, s_orig, h, dk = r.shape
+    pad = (-s_orig) % chunk
+    if pad:   # no-op tail: decay=1, zero r/k/v -> state unchanged
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        r, k, v, logw = map(zpad, (r, k, v, logw))
+    bsz, s, h, dk = r.shape
+    dv = v.shape[-1]
+    nc = s // chunk
+    rc = r.reshape(bsz, nc, chunk, h, dk).astype(jnp.float32)
+    kc = k.reshape(bsz, nc, chunk, h, dk).astype(jnp.float32)
+    vc = v.reshape(bsz, nc, chunk, h, dv).astype(jnp.float32)
+    lw = logw.reshape(bsz, nc, chunk, h, dk)
+    cum = jnp.cumsum(lw, axis=2)                            # (B,nc,Q,H,K)
+    cum_prev = cum - lw                                     # exclusive: c_{i-1}
+
+    r_dec = rc * jnp.exp(cum_prev)                          # r_i * e^{c_{i-1}}
+    k_dec = kc * jnp.exp(-cum)                              # k_j * e^{-c_j}
+    att = jnp.einsum("btihk,btjhk->bthij", r_dec, k_dec)    # j<i strict
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    diag = jnp.einsum("btihk,hk,btihk->bthi", rc, bonus.astype(jnp.float32),
+                      kc)
+    att += jnp.eye(chunk)[None, None, None] * diag[..., None]
+    y_intra = jnp.einsum("bthij,btjhv->btihv", att, vc)
+
+    chunk_decay = jnp.exp(cum[:, :, -1])                    # (B,nc,H,K)
+    w_in = jnp.exp(cum[:, :, -1:, :, :] - cum)              # (B,nc,Q,H,K)
+    s_in = jnp.einsum("btjhk,btjhv->bthkv", kc * w_in, vc)  # (B,nc,H,K,V)
+
+    def scan_fn(s_prev, inp):
+        dec_t, sin_t = inp
+        return s_prev * dec_t[..., None] + sin_t, s_prev
+
+    init = jnp.zeros((bsz, h, dk, dv), jnp.float32) if s0 is None \
+        else s0.astype(jnp.float32)
+    s_last, s_starts = jax.lax.scan(
+        scan_fn, init, (chunk_decay.swapaxes(0, 1), s_in.swapaxes(0, 1)))
+    s_starts = s_starts.swapaxes(0, 1)                      # (B,nc,H,K,V)
+
+    y_carry = jnp.einsum("btihk,bthkv->btihv", r_dec, s_starts)
+    y = (y_intra + y_carry).reshape(bsz, s, h, dv)[:, :s_orig]
+    return y.astype(r.dtype), s_last
+
+
+def rwkv_step(s_prev, r_t, k_t, v_t, logw_t, bonus):
+    """Decode step. s_prev (B,H,K,V); r,k (B,H,K); v (B,H,V); logw (B,H,K)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r_t, k_t, v_t))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf,
+                   s_prev + bonus.astype(jnp.float32)[None, :, :, None] * kv)
+    s_new = s_prev * jnp.exp(logw_t.astype(jnp.float32))[..., None] + kv
+    return y.astype(r_t.dtype), s_new
+
+
+def rwkv_recurrent_ref(r, k, v, logw, bonus, s0=None):
+    bsz, s, h, dk = r.shape
+    dv = v.shape[-1]
+    state = jnp.zeros((bsz, h, dk, dv), jnp.float32) if s0 is None else s0
+
+    def step(st, inp):
+        r_t, k_t, v_t, lw_t = inp
+        y, st = rwkv_step(st, r_t, k_t, v_t, lw_t, bonus)
+        return st, y
+
+    _, ys = jax.lax.scan(step, state,
+                         (r.swapaxes(0, 1), k.swapaxes(0, 1),
+                          v.swapaxes(0, 1), logw.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)
+
+
+# ===========================================================================
+# Full blocks (pre-norm residual wrappers live in transformer.py)
+# ===========================================================================
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv, window W. x (B,S,C); w (W,C).
+    state (B,W-1,C) from previous tokens; returns (y, new_state)."""
+    win = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], win - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)               # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(win))
+    return y, xp[:, -(win - 1):]
+
+
+def mamba2_block(p: Dict, x: jax.Array, scfg: SSMConfig,
+                 cache: Optional[Dict] = None):
+    """x: (B,S,d). cache (decode): {"state": (B,H,P,N), "conv": (B,3,C)}."""
+    bsz, s, d = x.shape
+    di = scfg.expand * d
+    n = scfg.state_dim
+    h = di // scfg.head_dim
+    proj = x @ p["w_in"]                                    # (B,S,2di+2N+h)
+    xin, z, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,) < 0
+    logdecay = jnp.maximum(dt * a, -DECAY_CLAMP * 4)
+    u = xin.reshape(bsz, s, h, scfg.head_dim) * dt[..., None].astype(x.dtype)
+
+    if cache is not None and s == 1:      # decode step
+        y, s_new = ssd_step(cache["state"], u[:, 0], logdecay[:, 0],
+                            bmat[:, 0], cmat[:, 0])
+        y = y[:, None]
+    else:                                 # train / prefill (chunked)
+        s0 = cache["state"] if cache is not None else None
+        y, s_new = ssd_chunked(u, logdecay, bmat, cmat,
+                               min(scfg.chunk_size, s), s0=s0)
+    new_cache = {"state": s_new, "conv": new_conv}
+    y = y + xin.reshape(bsz, s, h, scfg.head_dim) \
+        * p["D"].astype(x.dtype)[:, None]
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    # final rms norm over the inner dim (mamba2 gated norm)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm"]).astype(x.dtype)
+    return y @ p["w_out"], new_cache
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """xx_t = x_{t-1}; prev (B,d) is the last token of the previous call."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1), x[:, -1]
+
+
+def rwkv6_timemix(p: Dict, x: jax.Array, scfg: SSMConfig,
+                  cache: Optional[Dict] = None):
+    bsz, s, d = x.shape
+    hd = scfg.head_dim
+    h = d // hd
+    prev = cache["x_att"] if cache is not None else None
+    xx, last = _token_shift(x, prev)
+    mix = p["mix"]                                           # (5, d)
+    xr, xk, xv, xg, xw = (x + mix[i] * (xx - x) for i in range(5))
+    from repro.dist.sharding import constrain
+    r = constrain((xr @ p["w_r"]).reshape(bsz, s, h, hd), "ssm_inner")
+    k = constrain((xk @ p["w_k"]).reshape(bsz, s, h, hd), "ssm_inner")
+    v = constrain((xv @ p["w_v"]).reshape(bsz, s, h, hd), "ssm_inner")
+    g = jax.nn.silu(xg @ p["w_g"])
+    # data-dependent decay (LoRA): logw in [-DECAY_CLAMP, 0)
+    lora = jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    logw = -DECAY_CLAMP * jax.nn.sigmoid(
+        (p["decay_base"] + lora).astype(jnp.float32))
+    logw = logw.reshape(bsz, s, h, hd)
+
+    if cache is not None and s == 1:      # decode step
+        y, s_new = rwkv_step(cache["state"], r[:, 0], k[:, 0], v[:, 0],
+                             logw[:, 0], p["bonus"])
+        y = y[:, None]
+    else:                                 # train / prefill (chunked)
+        s0 = cache["state"] if cache is not None else None
+        y, s_new = rwkv_chunked(r, k, v, logw, p["bonus"],
+                                min(scfg.chunk_size, 32, s), s0=s0)
+    yf = y.reshape(bsz, s, d).astype(jnp.float32)
+    # per-head group norm (ln_x)
+    yf = yf.reshape(bsz, s, h, hd)
+    yf = (yf - yf.mean(-1, keepdims=True)) \
+        * jax.lax.rsqrt(yf.var(-1, keepdims=True) + 1e-5)
+    yf = yf.reshape(bsz, s, d) * p["ln_x"].astype(jnp.float32)
+    out = (yf.astype(x.dtype) * g) @ p["w_o"]
+    new_cache = {"state": s_new, "x_att": last}
+    return out, new_cache
+
+
+def rwkv6_channelmix(p: Dict, x: jax.Array,
+                     cache: Optional[Dict] = None):
+    prev = cache["x_ffn"] if cache is not None else None
+    xx, last = _token_shift(x, prev)
+    mix = p["ffn_mix"]
+    xk = x + mix[0] * (xx - x)
+    xr = x + mix[1] * (xx - x)
+    k = jnp.square(jax.nn.relu(xk @ p["ffn_k"]))
+    r = jax.nn.sigmoid(xr @ p["ffn_r"])
+    return r * (k @ p["ffn_v"]), {"x_ffn": last}

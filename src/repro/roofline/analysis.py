@@ -1,0 +1,230 @@
+"""Three-term roofline from the dry-run's compiled artifacts (DESIGN.md §7).
+
+This container is CPU-only; TPU v5e is the *target*. Per (arch × shape ×
+mesh) cell we derive, from ``results/dryrun/*.json``:
+
+    compute term    = HLO_FLOPs_per_dev / peak_FLOP/s          [s]
+    memory term     = HLO_bytes_per_dev / HBM_bw               [s]
+    collective term = collective_bytes_per_dev / ICI_link_bw   [s]
+
+HLO_FLOPs / HLO_bytes are the *trip-count-corrected* parses of the
+compiled post-SPMD HLO (``hlo_cost`` in the JSON — ``cost_analysis()``
+counts a scanned layer body once, see ``roofline/hlo_parse.py``);
+collective bytes are likewise trip-weighted wire payloads per device.
+
+We also report the analytic MODEL_FLOPS (6·N·D train / 2·N_active·D
+inference, D = tokens processed by the cell) and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs — remat recompute, redundant gathers and padding
+show up as ratio < 1.
+
+The *bound* on step time is max(terms); the achievable MFU bound is
+t_model / bound.  The perf loop (EXPERIMENTS.md §Perf) iterates on
+whichever term dominates.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """TPU v5e per-chip constants (spec)."""
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # B/s
+    ici_bw: float = 45e9            # B/s per link, bidirectional once
+    hbm_bytes: float = 16e9
+
+
+V5E = Hardware()
+
+MESH_CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    tokens: float                # tokens processed per step (global)
+    t_compute: float             # [s]
+    t_memory: float              # TPU-adjusted bytes (see hlo_parse)
+    t_collective: float
+    t_model: float               # MODEL_FLOPS/(chips*peak): ideal step time
+    model_flops: float           # global analytic FLOPs per step
+    hlo_flops: float             # per-device, trip-corrected
+    hlo_bytes: float             # TPU-adjusted
+    hlo_bytes_raw: float         # as-compiled (CPU backend, f32 dots)
+    coll_bytes: float
+    useful_ratio: float          # model_flops/chips / hlo_flops
+    peak_gib: float
+
+    @property
+    def bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def mfu_bound(self) -> float:
+        return self.t_model / self.bound if self.bound else 0.0
+
+    def advice(self) -> str:
+        d = self.dominant
+        if d == "collective":
+            return ("cut collective volume: fewer/smaller all-gathers "
+                    "(weight-stationary layout, reduce-scatter grads, "
+                    "overlap with compute)")
+        if d == "memory":
+            if self.useful_ratio < 0.5:
+                return ("HBM-bound with low useful ratio: reduce remat "
+                        "recompute / padding; quantized weights cut "
+                        "weight-read bytes 4x")
+            return ("HBM-bound: raise arithmetic intensity (bigger batch "
+                    "per device, fused dequant-matmul, KV-cache layout)")
+        if self.useful_ratio < 0.5:
+            return ("compute-bound but <50% useful FLOPs: remove remat or "
+                    "redundant compute before anything else")
+        return ("compute-bound near roofline: only kernel-level wins left "
+                "(MXU-aligned tiles, fusion)")
+
+
+def tokens_for(shape: str, rec: dict) -> float:
+    """Tokens processed per step (decode: one per sequence)."""
+    seq = {"train_4k": 4096, "prefill_32k": 32768,
+           "decode_32k": 1, "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32,
+             "decode_32k": 128, "long_500k": 1}[shape]
+    return float(seq * batch)
+
+
+def model_flops_for(shape: str, rec: dict) -> float:
+    """Analytic MODEL_FLOPS per step: 6·N·D (train) / 2·N_active·D (inf)."""
+    n_active = rec["active_params_b"] * 1e9
+    d = tokens_for(shape, rec)
+    mult = 6.0 if shape.startswith("train") else 2.0
+    return mult * n_active * d
+
+
+def load_cell(path: Path, hw: Hardware = V5E) -> Optional[CellRoofline]:
+    rec = json.loads(path.read_text())
+    if not rec.get("ok"):
+        return None
+    chips = MESH_CHIPS[rec["mesh"]]
+    hc = rec.get("hlo_cost") or rec.get("cost_analysis", {})
+    hlo_flops = float(hc.get("flops", 0.0))
+    raw_bytes = float(hc.get("bytes_accessed",
+                             rec.get("cost_analysis", {})
+                             .get("bytes accessed", 0.0)))
+    hlo_bytes = float(rec.get("hlo_cost_tpu", {})
+                      .get("bytes_accessed", raw_bytes))
+    coll = float(rec.get("collectives", {}).get("total_bytes", 0.0))
+    mf = model_flops_for(rec["shape"], rec)
+    return CellRoofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        tokens=tokens_for(rec["shape"], rec),
+        t_compute=hlo_flops / hw.peak_flops,
+        t_memory=hlo_bytes / hw.hbm_bw,
+        t_collective=coll / hw.ici_bw,
+        t_model=mf / (chips * hw.peak_flops),
+        model_flops=mf,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, hlo_bytes_raw=raw_bytes,
+        coll_bytes=coll,
+        useful_ratio=(mf / chips) / hlo_flops if hlo_flops else 0.0,
+        peak_gib=rec.get("memory", {}).get("peak_per_device_gib", 0.0),
+    )
+
+
+def load_all(results: Path = RESULTS, mesh: Optional[str] = None,
+             tag: str = "") -> List[CellRoofline]:
+    cells = []
+    for p in sorted(results.glob(f"*__*{tag}.json")):
+        stem_parts = p.stem.split("__")
+        if len(stem_parts) != 3 or (tag and not stem_parts[2].endswith(tag)):
+            continue
+        if tag == "" and not stem_parts[2].startswith("pod"):
+            continue
+        if tag == "" and stem_parts[2] not in MESH_CHIPS:
+            continue  # skip tagged perf-variant files in the baseline table
+        c = load_cell(p)
+        if c and (mesh is None or c.mesh == mesh):
+            cells.append(c)
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def markdown_table(cells: List[CellRoofline]) -> str:
+    hdr = ("| arch | shape | mesh | t_comp | t_mem | t_coll | bound "
+           "| dominant | MFU-bound | useful | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape, c.mesh)):
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {_fmt_s(c.t_compute)} "
+            f"| {_fmt_s(c.t_memory)} | {_fmt_s(c.t_collective)} "
+            f"| {_fmt_s(c.bound)} | {c.dominant} | {c.mfu_bound:.1%} "
+            f"| {c.useful_ratio:.2f} | {c.peak_gib:.1f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def pick_hillclimb_cells(cells: List[CellRoofline]) -> Dict[str, CellRoofline]:
+    """The three §Perf targets: worst MFU-bound, most collective-bound,
+    and the paper-representative cell (mixtral decode — the paper's own
+    serving workload).
+
+    The worst-fraction pick is restricted to TRAIN cells: decode steps have
+    t_model ~ 2*N_active*B/(chips*peak) = microseconds against a mandatory
+    one-HBM-pass-of-the-weights memory floor, so their MFU-bound is ~0 by
+    construction and not a defect signal. For decode cells the defect
+    signal is t_mem vs the analytic weight+cache read floor instead."""
+    single = [c for c in cells if c.mesh == "pod16x16"]
+    train = [c for c in single if c.shape.startswith("train")] or single
+    worst = min(train, key=lambda c: c.mfu_bound)
+    coll = max(single, key=lambda c: (c.t_collective / c.bound
+                                      if c.bound else 0.0))
+    paper = next((c for c in single
+                  if c.arch == "mixtral-8x7b" and c.shape == "decode_32k"),
+                 single[0])
+    return {"worst-mfu": worst, "most-collective": coll,
+            "paper-representative": paper}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=list(MESH_CHIPS), default=None)
+    ap.add_argument("--md", type=Path, default=None,
+                    help="write markdown table here")
+    ap.add_argument("--pick", action="store_true",
+                    help="print the three hillclimb targets")
+    args = ap.parse_args()
+    cells = load_all(mesh=args.mesh)
+    table = markdown_table(cells)
+    print(table)
+    if args.md:
+        args.md.write_text(table)
+    if args.pick:
+        for why, c in pick_hillclimb_cells(cells).items():
+            print(f"{why:22s} {c.arch} {c.shape} dominant={c.dominant} "
+                  f"mfu_bound={c.mfu_bound:.1%}")
+
+
+if __name__ == "__main__":
+    main()

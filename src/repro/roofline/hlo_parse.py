@@ -1,0 +1,558 @@
+"""Parse collective ops out of compiled (post-SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` does not report collective traffic, and counts
+a while-loop (lax.scan) body ONCE. This parser:
+
+  * attributes every collective op to its enclosing computation,
+  * recovers while-loop trip counts from the loop-condition comparison
+    constant (scan lowers to ``while`` with an induction-variable bound),
+  * multiplies per-body collective bytes by the trip count (nested loops
+    multiply through),
+  * returns bytes per collective kind — the roofline's collective term.
+
+Byte convention (per device, per step): the *wire payload* — max(result
+bytes, summed operand bytes). all-gather counts the gathered result,
+reduce-scatter counts the pre-scatter operand, all-reduce counts the
+(equal-sized) buffer once.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\(")
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.+?)\s+("
+    + "|".join(COLLECTIVES) + r")(-start|-done)?\(([^)]*)\)")
+
+_COMP_OPEN_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$|"
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*\{\s*$")
+
+
+def shape_bytes(text: str) -> float:
+    """Total bytes of every typed shape literal in ``text``."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> body lines.
+
+    HLO computation headers start at column 0 and end with '{' (their param
+    lists may contain nested parens, so we don't parse them); body lines are
+    indented; '}' at column 0 closes."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{") and not line.startswith((" ", "}")):
+                m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+        else:
+            comps[cur].append(line)
+    return comps
+
+
+def _while_edges(comps: Dict[str, List[str]]):
+    """[(parent, body, cond, trip_count|None)] for every while op.
+
+    XLA annotates scan-derived loops with backend_config
+    known_trip_count — preferred; else fall back to the condition const."""
+    edges = []
+    for parent, lines in comps.items():
+        for ln in lines:
+            if re.search(r"\bwhile\(", ln):
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                mt = re.search(r'known_trip_count[^0-9]*?"(\d+)"', ln)
+                if mb and mc:
+                    edges.append((parent, mb.group(1), mc.group(1),
+                                  int(mt.group(1)) if mt else None))
+    return edges
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Loop bound from the condition's comparison constant (scan pattern)."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.search(r"%?([\w\.\-]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)",
+                      ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" in ln:
+            for name, val in consts.items():
+                if re.search(rf"%?{re.escape(name)}\b", ln):
+                    return max(val, 1)
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+def comp_multipliers(hlo: str) -> Dict[str, int]:
+    """computation -> times executed per step (while nesting, fixpoint)."""
+    comps = _split_computations(hlo)
+    edges = _while_edges(comps)
+    mult: Dict[str, int] = defaultdict(lambda: 1)
+    for _ in range(8):
+        changed = False
+        for parent, body, cond, trip in edges:
+            t = trip if trip is not None else \
+                _trip_count(comps.get(cond, []))
+            want = mult[parent] * t
+            if mult[body] != want:
+                mult[body] = want
+                changed = True
+            mult[cond] = want
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _symbol_table(lines: List[str]) -> Dict[str, str]:
+    """op name -> result type string (within one computation)."""
+    table = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# Ops whose container-level appearance is NOT an HBM read/write (control
+# flow, aliasing, or already accounted inside their body computation).
+_TRAFFIC_SKIP = ("parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "conditional", "after-all",
+                 "add-dependency", "partition-id", "replica-id")
+
+
+def _call_edges(comps: Dict[str, List[str]]):
+    """[(parent, child)] for fusion/reduce/branch-called computations."""
+    edges = []
+    for parent, lines in comps.items():
+        for ln in lines:
+            if re.search(r"\bwhile\(", ln):
+                continue  # body=/condition= handled by _while_edges
+            for child in _CALLS_RE.findall(ln):
+                edges.append((parent, child))
+            mb = _BRANCH_RE.search(ln)
+            if mb:
+                for child in re.findall(r"%?([\w\.\-]+)", mb.group(1)):
+                    edges.append((parent, child))
+    return edges
+
+
+def comp_multipliers_full(hlo: str) -> Tuple[Dict[str, List[str]],
+                                             Dict[str, int], set]:
+    """(computations, multiplier incl. call-propagation, called-set).
+
+    ``called`` = computations reached via calls=/to_apply=/branches — their
+    bodies are *inside* a container op, so container-level traffic must not
+    walk them (but FLOP counting must, at the propagated multiplier)."""
+    comps = _split_computations(hlo)
+    wmult = comp_multipliers(hlo)
+    mult: Dict[str, int] = defaultdict(lambda: 1)
+    mult.update(wmult)
+    calls = _call_edges(comps)
+    called = {c for _, c in calls}
+    for _ in range(8):
+        changed = False
+        for parent, child in calls:
+            if mult[child] != mult[parent]:
+                mult[child] = mult[parent]
+                changed = True
+        if not changed:
+            break
+    return comps, dict(mult), called
+
+
+def _dot_flops(ln: str, table: Dict[str, str]) -> float:
+    """2 * prod(result dims) * prod(lhs contracting sizes)."""
+    m = _DEF_RE.match(ln)
+    if not m:
+        return 0.0
+    result_type = m.group(2)
+    dims_m = _SHAPE_RE.search(result_type)
+    if not dims_m:
+        return 0.0
+    out_n = 1
+    if dims_m.group(2):
+        for d in dims_m.group(2).split(","):
+            out_n *= int(d)
+    cm = _LHS_CONTRACT_RE.search(ln)
+    operands = re.findall(r"%([\w\.\-]+)", ln.split("dot(", 1)[1])
+    if not cm or not operands:
+        return 0.0
+    lhs_type = table.get(operands[0], "")
+    lm = _SHAPE_RE.search(lhs_type)
+    if not lm:
+        return 0.0
+    lhs_dims = [int(d) for d in lm.group(2).split(",")] if lm.group(2) else []
+    k = 1
+    for ci in cm.group(1).split(","):
+        if ci != "" and int(ci) < len(lhs_dims):
+            k *= lhs_dims[int(ci)]
+    return 2.0 * out_n * k
+
+
+def _operand_names(ln: str) -> List[str]:
+    """Operand op-names of an HLO instruction line (metadata refs come
+    after the closing paren and are filtered by the symbol-table lookup)."""
+    inner = ln.split("(", 1)
+    if len(inner) < 2:
+        return []
+    return re.findall(r"%([\w\.\-]+)", inner[1].split(")", 1)[0])
+
+
+# Ops that consume only a *window* of their big operand — counting the full
+# operand would charge a scanned weight stack once per iteration.
+_SLICING_OPS = ("dynamic-slice", "slice", "gather")
+
+
+def _op_traffic(ln: str, op: str, table: Dict[str, str],
+                body: Optional[List[str]] = None) -> float:
+    """HBM bytes for one container-level instruction.
+
+    Conventions (matching XLA's utilization-aware bytes-accessed):
+      * slicing ops read+write the slice, not the whole operand;
+      * dynamic-update-slice reads+writes the update region (the target
+        buffer is aliased in place);
+      * scatter reads+writes the update region (+indices, ignored);
+      * fusion: walk the body — a parameter consumed only by slicing ops
+        contributes the slice bytes; a root that is a DUS (or tuple of
+        DUSes) contributes update bytes, not the whole aliased buffer.
+    """
+    dm = _DEF_RE.match(ln)
+    res_b = shape_bytes(dm.group(2))
+    names = _operand_names(ln)
+    if op in _SLICING_OPS:
+        return 2 * res_b
+    if op == "dynamic-update-slice":
+        upd = shape_bytes(table.get(names[1], "")) if len(names) > 1 else 0.0
+        return 2 * upd
+    if op == "scatter":
+        upd = shape_bytes(table.get(names[2], "")) if len(names) > 2 else res_b
+        return 2 * upd + res_b  # read region + write + read target row
+    if op != "fusion" or body is None:
+        return res_b + sum(shape_bytes(table.get(n, "")) for n in names)
+    return _fusion_traffic(res_b, names, table, body)
+
+
+# Pass-through ops an in-place update chain may route through — on the TPU
+# target these do not break input/output buffer aliasing.
+_PASSTHROUGH = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+
+def _fusion_traffic(res_b: float, names: List[str], table: Dict[str, str],
+                    body: List[str]) -> float:
+    """Utilization-aware traffic of one fusion op (see _op_traffic)."""
+    btable = _symbol_table(body)
+    defs: Dict[str, Tuple[str, List[str]]] = {}
+    params: Dict[int, str] = {}
+    for bl in body:
+        bm = _DEF_RE.match(bl)
+        if not bm:
+            continue
+        defs[bm.group(1)] = (bm.group(3), _operand_names(bl))
+        if bm.group(3) == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", bl)
+            if pm:
+                params[int(pm.group(1))] = bm.group(1)
+
+    def resolve(name: str) -> str:
+        """Follow single-operand pass-through chains to the source op."""
+        seen = 0
+        while name in defs and defs[name][0] in _PASSTHROUGH \
+                and defs[name][1] and seen < 16:
+            name = defs[name][1][0]
+            seen += 1
+        return name
+
+    # ---- in-place update roots: DUS / scatter alias their target param
+    aliased: Dict[str, float] = {}   # param name -> read bytes to charge
+    upd_write = 0.0
+    has_update_root = False
+    for bl in body:
+        bm = _DEF_RE.match(bl)
+        if not bm or bm.group(3) not in ("dynamic-update-slice", "scatter"):
+            continue
+        kind, ons = bm.group(3), _operand_names(bl)
+        if not ons:
+            continue
+        src = resolve(ons[0])
+        upd_idx = 1 if kind == "dynamic-update-slice" else 2
+        upd_name = resolve(ons[upd_idx]) if len(ons) > upd_idx else ""
+        upd_b = shape_bytes(btable.get(ons[upd_idx], "")) \
+            if len(ons) > upd_idx else 0.0
+        if upd_b == 0.0 and upd_name in btable:
+            upd_b = shape_bytes(btable.get(upd_name, ""))
+        if src in params.values():
+            # scatter-add reads the touched region before writing it
+            aliased[src] = aliased.get(src, 0.0) + (
+                upd_b if kind == "scatter" else 0.0)
+            has_update_root = True
+            upd_write += upd_b
+
+    read = 0.0
+    for idx, name in enumerate(names):
+        full = shape_bytes(table.get(name, ""))
+        pname = params.get(idx)
+        if pname is None:
+            read += full
+            continue
+        if pname in aliased:
+            read += min(aliased[pname], full)
+            continue
+        consumed = 0.0
+        sliced_only = True
+        for bname, (kind, ons) in defs.items():
+            if pname not in ons:
+                continue
+            if kind in _SLICING_OPS:
+                consumed += shape_bytes(btable.get(bname, ""))
+            elif kind in ("dynamic-update-slice", "scatter") \
+                    and ons and resolve(ons[0]) == pname:
+                continue
+            else:
+                sliced_only = False
+        read += min(consumed, full) if sliced_only else full
+
+    write = min(upd_write, res_b) if has_update_root else res_b
+    return read + write
+
+
+_PURE_BODY_OPS = set(_PASSTHROUGH) | {"parameter", "constant"}
+
+
+def _pure_convert_fusions(comps: Dict[str, List[str]]
+                          ) -> Tuple[set, Dict[str, float]]:
+    """(pure, sliced) fusion-body classification for the TPU adjustment.
+
+    ``pure``: bodies that only convert/relayout — fold into the consumer
+    on TPU (the MXU reads bf16 natively; these exist because the CPU
+    backend computes dots in f32). Charged 0; resolution passes through.
+
+    ``sliced``: convert bodies that also dynamic-slice (the per-layer
+    weight slice of a scanned stack, converted for the CPU dot). On TPU
+    the consumer reads the bf16 slice directly: maps body name -> slice
+    bytes AT SOURCE DTYPE."""
+    pure = set()
+    sliced: Dict[str, float] = {}
+    for comp, lines in comps.items():
+        ops = []
+        for ln in lines:
+            bm = _DEF_RE.match(ln)
+            if bm:
+                ops.append((bm.group(3), bm.group(2)))
+        kinds = {k for k, _ in ops}
+        if not ops:
+            continue
+        if kinds <= _PURE_BODY_OPS:
+            pure.add(comp)
+            continue
+        if kinds <= (_PURE_BODY_OPS | {"dynamic-slice", "slice"}):
+            # slice bytes at the narrowest dtype seen in the body (the
+            # source param dtype before any widening convert)
+            widths = [_DTYPE_BYTES[m.group(1)]
+                      for _, t in ops
+                      for m in [_SHAPE_RE.search(t)] if m]
+            narrow = min(widths) if widths else 2
+            b = 0.0
+            for k, t in ops:
+                if k in ("dynamic-slice", "slice"):
+                    m = _SHAPE_RE.search(t)
+                    if m:
+                        n = 1
+                        for dim in (m.group(2).split(",")
+                                    if m.group(2) else []):
+                            n *= int(dim)
+                        b += n * narrow
+            sliced[comp] = b
+    return pure, sliced
+
+
+def cost_summary(hlo: str, tpu_adjusted: bool = False) -> Dict[str, float]:
+    """Trip-count-corrected FLOPs and HBM-traffic estimate (per device,
+    per step) from compiled post-SPMD HLO.
+
+    * flops — matmul FLOPs: every ``dot`` op in every computation (fusion
+      bodies included), weighted by how many times its computation runs.
+      Elementwise/reduce FLOPs are excluded (matmuls dominate; compare
+      against cost_analysis()['flops'] for the residual).
+    * bytes_accessed — container-level traffic model: for each op in a
+      computation that is NOT a fusion/reduce body (i.e. entry, while
+      bodies, branch bodies), count utilization-aware operand + result
+      bytes (see _op_traffic), trip-count weighted.
+
+    ``tpu_adjusted=True`` removes the CPU-backend f32-promotion artifacts
+    for the TPU roofline: pure dtype/layout-convert fusions are charged 0
+    (the MXU consumes bf16 operands directly), and dot operands that are
+    f32 views of narrower tensors are charged at the SOURCE dtype.
+    """
+    comps, mult, called = comp_multipliers_full(hlo)
+    pure, sliced = _pure_convert_fusions(comps) if tpu_adjusted \
+        else (set(), {})
+    flops = 0.0
+    dot_count = 0
+    traffic = 0.0
+    for comp, lines in comps.items():
+        m = mult.get(comp, 1)
+        table = _symbol_table(lines)
+        kinds: Dict[str, Tuple[str, List[str]]] = {}
+        if tpu_adjusted:
+            for ln in lines:
+                bm = _DEF_RE.match(ln)
+                if bm:
+                    kinds[bm.group(1)] = (bm.group(3), _operand_names(ln))
+
+        def source_bytes(name: str) -> float:
+            """Bytes of ``name`` charged at its pre-convert source."""
+            seen = 0
+            while seen < 16 and name in kinds:
+                kind, ons = kinds[name]
+                if kind in _PASSTHROUGH and ons:
+                    name = ons[0]
+                elif kind == "fusion":
+                    cm2 = _CALLS_RE.search(
+                        next(l for l in lines
+                             if re.match(rf"\s*(?:ROOT\s+)?%?"
+                                         rf"{re.escape(name)}\s*=", l)))
+                    if cm2 and cm2.group(1) in sliced:
+                        return sliced[cm2.group(1)]
+                    if cm2 and cm2.group(1) in pure and ons:
+                        name = max(ons, key=lambda n: shape_bytes(
+                            table.get(n, "")))
+                    else:
+                        break
+                else:
+                    break
+                seen += 1
+            return shape_bytes(table.get(name, ""))
+
+        for ln in lines:
+            if re.search(r"\bdot\(", ln):
+                flops += _dot_flops(ln, table) * m
+                dot_count += m
+        if comp in called:
+            continue  # fusion/reduce body: traffic counted at call site
+        for ln in lines:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            op = dm.group(3)
+            if op in _TRAFFIC_SKIP:
+                continue
+            body = None
+            if op == "fusion":
+                cm = _CALLS_RE.search(ln)
+                if cm:
+                    if cm.group(1) in pure or cm.group(1) in sliced:
+                        continue        # folds into the consumer on TPU
+                    body = comps.get(cm.group(1))
+            if tpu_adjusted and op == "dot":
+                res_b = shape_bytes(dm.group(2)) / 2.0   # f32 out -> bf16
+                names = _operand_names(ln)
+                traffic += (res_b + sum(
+                    min(source_bytes(n), shape_bytes(table.get(n, "")))
+                    for n in names)) * m
+                continue
+            traffic += _op_traffic(ln, op, table, body) * m
+    return {"flops": flops, "bytes_accessed": traffic,
+            "dot_count": dot_count}
+
+
+def collective_summary(hlo: str, tpu_adjusted: bool = False
+                       ) -> Dict[str, float]:
+    """bytes per collective kind, trip-count weighted (per device, per
+    step), plus op counts.
+
+    ``tpu_adjusted``: a collective whose operand is a pure f32 view of a
+    bf16 tensor (CPU dots compute in f32) is charged at the source dtype
+    — the TPU graph reduces the bf16 tensor directly."""
+    comps = _split_computations(hlo)
+    mult = comp_multipliers(hlo)
+    pure = _pure_convert_fusions(comps)[0] if tpu_adjusted else set()
+    bytes_by_kind: Dict[str, float] = defaultdict(float)
+    count_by_kind: Dict[str, int] = defaultdict(int)
+    for comp, lines in comps.items():
+        m = mult.get(comp, 1)
+        table = _symbol_table(lines)
+        kinds: Dict[str, Tuple[str, List[str]]] = {}
+        if tpu_adjusted:
+            for ln in lines:
+                bm = _DEF_RE.match(ln)
+                if bm:
+                    kinds[bm.group(1)] = (bm.group(3), _operand_names(ln))
+
+        def op_bytes(name: str) -> float:
+            full = shape_bytes(table.get(name, ""))
+            if not tpu_adjusted:
+                return full
+            seen = 0
+            while seen < 16 and name in kinds:
+                kind, ons = kinds[name]
+                is_pure_fusion = False
+                if kind == "fusion":
+                    ln2 = next((l for l in lines if re.match(
+                        rf"\s*(?:ROOT\s+)?%?{re.escape(name)}\s*=", l)), "")
+                    cm2 = _CALLS_RE.search(ln2)
+                    is_pure_fusion = bool(cm2) and cm2.group(1) in pure
+                if (kind in _PASSTHROUGH or is_pure_fusion) and ons:
+                    name = max(ons, key=lambda n: shape_bytes(
+                        table.get(n, "")))
+                    seen += 1
+                else:
+                    break
+            return min(full, shape_bytes(table.get(name, "")) or full)
+
+        for ln in lines:
+            cm = _COLL_RE.match(ln)
+            if not cm:
+                continue
+            result_type, kind, suffix, operands = cm.groups()
+            if suffix == "-done":
+                continue              # payload counted at -start
+            names = re.findall(r"%([\w\.\-]+)", operands)
+            op_b_raw = sum(shape_bytes(table.get(n, "")) for n in names)
+            op_b = sum(op_bytes(n) for n in names)
+            res_b = shape_bytes(result_type)
+            if tpu_adjusted and op_b_raw > 0:
+                res_b *= op_b / op_b_raw      # result narrows with operands
+            bytes_by_kind[kind] += max(res_b, op_b) * m
+            count_by_kind[kind] += m
+    out: Dict[str, float] = {}
+    for k in COLLECTIVES:
+        out[f"{k}_bytes"] = round(bytes_by_kind.get(k, 0.0), 1)
+        out[f"{k}_count"] = count_by_kind.get(k, 0)
+    out["total_bytes"] = round(sum(bytes_by_kind.values()), 1)
+    return out

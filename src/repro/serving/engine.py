@@ -1,0 +1,215 @@
+"""Adaptive MoE serving engine — the paper's Fig. 1 system.
+
+Pipeline: request queue -> batch assembly -> prefill -> decode loop, with
+the Adaptive Partitioner & Planner deciding {#4-bit experts, residency}
+from the live memory budget + task preference, and *incremental*
+reconfiguration when constraints change.
+
+Fidelity model on this CPU container (DESIGN.md §2):
+  * model compute is REAL (jitted prefill/decode with the plan's dual-bank
+    mixed-precision params; tokens/s from wall-clock);
+  * host<->HBM expert streaming cost is ACCOUNTED from (a) the measured
+    device_put bandwidth of an expert-sized buffer and (b) the expected
+    miss rate under the paper's uniform-routing assumption (the same
+    assumption eq. 1 rests on). The LRU cache itself is real and unit
+    tested (core/expert_cache.py); on a TPU deployment the fetches run
+    through it per layer.
+
+Reconfiguration: placement-only changes are graph-free; changing the
+(E4, E16) bank split re-specializes the jitted step (one compile per bank
+signature, cached) — this is the "minimal downtime" path the paper
+describes, measured in metrics["reconfig_s"].
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import HardwareModel
+from repro.core.planner import AdaptivePlanner, PlanResult
+from repro.models.model import Model, apply_precision_plan, build_model
+from repro.serving.sampler import sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_done: Optional[float] = None
+
+
+def measure_host_link_bw(nbytes: int = 1 << 24) -> float:
+    """Measured device_put bandwidth (host->device), B/s."""
+    buf = np.ones(nbytes, np.uint8)
+    dev = jax.devices()[0]
+    jax.block_until_ready(jax.device_put(buf[:1024], dev))  # warm
+    t0 = time.perf_counter()
+    jax.block_until_ready(jax.device_put(buf, dev))
+    return nbytes / max(time.perf_counter() - t0, 1e-9)
+
+
+class AdaptiveServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None,
+                 hw: Optional[HardwareModel] = None,
+                 max_batch: int = 8, max_len: int = 256,
+                 use_kernel: bool = False):
+        if cfg.moe is None:
+            raise ValueError("the adaptive engine serves MoE models")
+        self.cfg = cfg
+        self.params_train = params        # train-layout master copy
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.use_kernel = use_kernel
+        self.hw = hw or HardwareModel(host_link_bw=measure_host_link_bw())
+        self.planner = AdaptivePlanner(cfg, hw=self.hw)
+        self.model: Model = build_model(cfg, mesh, use_kernel=use_kernel)
+        self.queue: deque = deque()
+        self.done: Dict[int, Request] = {}
+        self._rid = 0
+        self._serve_params = None
+        self._plan_result: Optional[PlanResult] = None
+        self._compiled: Dict[Tuple[int, int], Any] = {}
+        self.metrics: Dict[str, Any] = {
+            "tokens_generated": 0, "decode_s": 0.0, "prefill_s": 0.0,
+            "transfer_s_est": 0.0, "reconfig_s": 0.0, "reconfigs": 0,
+            "miss_rate": 0.0,
+        }
+
+    # ------------------------------------------------------------------
+    # Planner integration
+    # ------------------------------------------------------------------
+    def configure(self, mem_budget_bytes: float, preference: str,
+                  num_q_experts: Optional[int] = None) -> PlanResult:
+        t0 = time.perf_counter()
+        result, delta = self.planner.replan(
+            mem_budget_bytes, preference, num_q_experts,
+            batch_size=self.max_batch)
+        plan = result.plan
+        sig = plan.bank_sizes()
+        rebuild = (self._plan_result is None
+                   or self._plan_result.plan.bank_sizes() != sig
+                   or self._plan_result.plan.seed != plan.seed)
+        if rebuild:
+            # bank split changed -> re-specialize the step functions
+            self._serve_params = apply_precision_plan(
+                self.params_train, self.cfg, plan)
+            self._compiled.clear()
+        self._plan_result = result
+        self.metrics["reconfig_s"] += time.perf_counter() - t0
+        self.metrics["reconfigs"] += 1
+        if delta is not None:
+            self.metrics["last_delta_traffic_gib"] = \
+                delta["traffic_bytes"] / 2**30
+        return result
+
+    # ------------------------------------------------------------------
+    # Request lifecycle
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        self._rid += 1
+        self.queue.append(Request(rid=self._rid,
+                                  prompt=np.asarray(prompt, np.int32),
+                                  max_new_tokens=max_new_tokens,
+                                  t_submit=time.perf_counter()))
+        return self._rid
+
+    def _take_batch(self) -> List[Request]:
+        batch = []
+        while self.queue and len(batch) < self.max_batch:
+            batch.append(self.queue.popleft())
+        return batch
+
+    def _jit(self, name, fn):
+        if name not in self._compiled:
+            self._compiled[name] = jax.jit(fn)
+        return self._compiled[name]
+
+    def step(self, *, temperature: float = 0.0, seed: int = 0) -> int:
+        """Serve one batch to completion; returns #requests finished."""
+        if self._plan_result is None:
+            raise RuntimeError("configure() the engine first")
+        reqs = self._take_batch()
+        if not reqs:
+            return 0
+        b = len(reqs)
+        s_max = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, s_max), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, s_max - len(r.prompt):] = r.prompt   # left-pad
+        batch = {"tokens": jnp.asarray(toks),
+                 "labels": jnp.zeros_like(jnp.asarray(toks))}
+        cache = self.model.init_cache(
+            b, s_max + max(r.max_new_tokens for r in reqs))
+
+        t0 = time.perf_counter()
+        logits, cache = self._jit("prefill", self.model.prefill)(
+            self._serve_params, batch, cache)
+        jax.block_until_ready(logits)
+        self.metrics["prefill_s"] += time.perf_counter() - t0
+
+        key = jax.random.key(seed)
+        positions = jnp.full((b,), s_max, jnp.int32)
+        tok = sample(logits, key=key, temperature=temperature,
+                     vocab_size=self.cfg.vocab_size)
+        n_steps = max(r.max_new_tokens for r in reqs)
+        decode = self._jit("decode", self.model.decode_step)
+        t0 = time.perf_counter()
+        for step_i in range(n_steps):
+            for i, r in enumerate(reqs):
+                if step_i < r.max_new_tokens:
+                    r.out_tokens.append(int(tok[i]))
+            if step_i == n_steps - 1:
+                break
+            key, sub = jax.random.split(key)
+            logits, cache = decode(self._serve_params, cache,
+                                   tok[:, None], positions)
+            tok = sample(logits, key=sub, temperature=temperature,
+                         vocab_size=self.cfg.vocab_size)
+            positions = positions + 1
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        self.metrics["decode_s"] += dt
+        ntok = sum(min(n_steps, r.max_new_tokens) for r in reqs)
+        self.metrics["tokens_generated"] += ntok
+
+        # expected streaming cost under the plan (paper's uniform-routing
+        # assumption; see module docstring)
+        from repro.core.cost_model import expert_access_stats
+        hit, miss_bytes_per_tok = expert_access_stats(
+            self.cfg, self._plan_result.plan)
+        self.metrics["miss_rate"] = 1.0 - hit
+        self.metrics["transfer_s_est"] += \
+            ntok / b * miss_bytes_per_tok / self.hw.host_link_bw
+
+        now = time.perf_counter()
+        for r in reqs:
+            r.t_done = now
+            self.done[r.rid] = r
+        return len(reqs)
+
+    # ------------------------------------------------------------------
+    def throughput_tokens_per_s(self, include_transfer: bool = True) -> float:
+        t = self.metrics["decode_s"]
+        if include_transfer:
+            t += self.metrics["transfer_s_est"]
+        return self.metrics["tokens_generated"] / max(t, 1e-9)
+
+    def summary(self) -> str:
+        p = self._plan_result
+        return (f"plan[{p.preference} E4={p.plan.num_q_experts}"
+                f"/{p.plan.quant.size} res={p.plan.resident_fraction():.0%}]"
+                f" gen={self.metrics['tokens_generated']}tok"
+                f" decode={self.metrics['decode_s']:.2f}s"
+                f" +transfer~{self.metrics['transfer_s_est']:.2f}s"
+                f" -> {self.throughput_tokens_per_s():.2f} tok/s")

@@ -1,0 +1,20 @@
+"""Token samplers (greedy / temperature / top-k) for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, *, key: jax.Array, temperature: float = 0.0,
+           top_k: int = 0, vocab_size: int = 0) -> jax.Array:
+    """logits: (B, V_padded) -> (B,) int32."""
+    if vocab_size and logits.shape[-1] > vocab_size:
+        mask = jnp.arange(logits.shape[-1]) >= vocab_size
+        logits = jnp.where(mask, -1e30, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        thresh = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < thresh, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,59 @@
+"""Adafactor (factored second moment, no first moment) — the memory-lean
+optimizer option for the 1T-param Kimi-K2 cell (DESIGN.md / EXPERIMENTS.md
+§Dry-run memory notes)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import OptConfig, global_norm, schedule
+
+
+def init_adafactor_state(params) -> Dict[str, Any]:
+    def factors(x):
+        if x.ndim < 2:
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+        return {"vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)}
+    return {"f": jax.tree_util.tree_map(factors, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    b2 = 1.0 - (step.astype(jnp.float32)) ** -0.8
+
+    def upd(p, g, f):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if p.ndim < 2:
+            v = b2 * f["v"] + (1 - b2) * g2
+            u = g * jax.lax.rsqrt(v + 1e-30)
+            newf = {"v": v}
+        else:
+            vr = b2 * f["vr"] + (1 - b2) * g2.mean(-1)
+            vc = b2 * f["vc"] + (1 - b2) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+            newf = {"vr": vr, "vc": vc}
+        # update clipping (Adafactor RMS rule)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        newp = (p.astype(jnp.float32) - lr * u
+                - lr * cfg.weight_decay * p.astype(jnp.float32) * (p.ndim >= 2)
+                ).astype(p.dtype)
+        return newp, newf
+
+    # params is the structure tree: each param leaf pairs with the whole
+    # factor sub-dict of state["f"]
+    pairs = jax.tree_util.tree_map(upd, params, grads, state["f"])
+    is_pair = lambda x: isinstance(x, tuple)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_f = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return new_p, {"f": new_f, "step": step}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,68 @@
+"""int8 gradient compression with error feedback (1-bit-Adam-style).
+
+Large-scale data parallelism ships gradients across pods every step; at
+(2, 16, 16) the pod-axis all-reduce moves the full gradient set over the
+slow inter-pod links. Compressing to int8 (per-tensor absmax scale)
+quarters the wire bytes; the quantization error is fed back into the
+next step's gradient (error feedback), which provably preserves SGD/Adam
+convergence rates for smooth objectives.
+
+Semantics implemented here:
+
+    g_corrected = g + ef                     (apply residual)
+    q, scale    = quantize_int8(g_corrected) (what crosses the wire)
+    g_hat       = q * scale                  (all ranks decode identically)
+    ef'         = g_corrected - g_hat        (residual stays local)
+
+``g_hat`` feeds the optimizer. Under pjit the data/pod-axis reduction is
+inserted by GSPMD, so the int8 *representation* is validated numerically
+here (tests/test_compression.py: convergence + bounded residual), and
+the wire-level int8 all-reduce is a runtime substitution on the reduced
+tensor — the math above is exactly what each rank computes either way.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_grad(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (codes, scale)."""
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, ef):
+    """(decoded grads, new error feedback). Apply between accumulation
+    and the optimizer update."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_grad(corrected)
+        g_hat = q.astype(jnp.float32) * scale
+        return g_hat.astype(g.dtype), corrected - g_hat
+
+    flat = jax.tree_util.tree_map(one, grads, ef)
+    g_hat = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, new_ef
+
+
+def wire_bytes(params, compressed: bool) -> int:
+    """Gradient all-reduce payload per step (reporting helper)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        total += leaf.size * (1 if compressed else 4) + \
+            (4 if compressed else 0)
+    return total

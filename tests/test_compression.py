@@ -1,0 +1,83 @@
+"""int8 + error-feedback gradient compression: convergence & invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training.compression import (compress_grads, init_error_feedback,
+                                        quantize_grad, wire_bytes)
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import (TrainConfig, init_train_state,
+                                       make_train_step)
+from tests.test_training import make_problem, quad_loss
+
+
+class TestQuantize:
+    def test_roundtrip_error_bounded(self):
+        g = jax.random.normal(jax.random.key(0), (256, 64)) * 3.0
+        q, scale = quantize_grad(g)
+        err = jnp.abs(q.astype(jnp.float32) * scale - g)
+        assert float(err.max()) <= float(scale) / 2 + 1e-6
+        assert q.dtype == jnp.int8
+
+    @settings(deadline=None, max_examples=20)
+    @given(st.floats(min_value=1e-6, max_value=1e6),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    def test_scale_invariance_property(self, scale_f, seed):
+        g = jax.random.normal(jax.random.key(seed), (64,)) * scale_f
+        q, s = quantize_grad(g)
+        rel = jnp.abs(q.astype(jnp.float32) * s - g) / (jnp.max(jnp.abs(g))
+                                                        + 1e-12)
+        assert float(rel.max()) < 1.0 / 127 + 1e-5
+
+    def test_zero_grad(self):
+        q, s = quantize_grad(jnp.zeros((8,)))
+        assert float(jnp.abs(q).max()) == 0
+
+    def test_error_feedback_catches_residual(self):
+        g = {"w": jnp.asarray([1e-4, 2e-4, 127.0])}  # tiny values crushed
+        ef = init_error_feedback(g)
+        g_hat, new_ef = compress_grads(g, ef)
+        # residual = what quantization lost, exactly
+        np.testing.assert_allclose(
+            np.asarray(g_hat["w"] + new_ef["w"]), np.asarray(g["w"]),
+            rtol=1e-6)
+
+
+class TestConvergence:
+    @pytest.mark.parametrize("optname", ["adamw", "adafactor"])
+    def test_compressed_training_converges(self, optname):
+        params, batch = make_problem()
+        cfg = OptConfig(lr=0.05, warmup_steps=5, total_steps=200,
+                        weight_decay=0.0)
+        tcfg = TrainConfig(opt=cfg, optimizer=optname,
+                           grad_compression="int8")
+        state = init_train_state(params, tcfg)
+        assert "ef" in state
+        step = jax.jit(make_train_step(quad_loss, tcfg))
+        losses = []
+        for _ in range(60):
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["nll"]))
+        assert losses[-1] < 0.05 * losses[0]
+
+    def test_compressed_close_to_uncompressed(self):
+        params, batch = make_problem()
+        cfg = OptConfig(lr=0.02, warmup_steps=0, weight_decay=0.0)
+        outs = {}
+        for comp in (None, "int8"):
+            p = jax.tree_util.tree_map(lambda x: x, params)
+            tcfg = TrainConfig(opt=cfg, grad_compression=comp,
+                               grad_dtype=jnp.float32)
+            st_ = init_train_state(p, tcfg)
+            step = jax.jit(make_train_step(quad_loss, tcfg))
+            for _ in range(30):
+                p, st_, m = step(p, st_, batch)
+            outs[comp] = float(m["nll"])
+        # error feedback keeps the trajectory close
+        assert abs(outs["int8"] - outs[None]) < 0.1 * (outs[None] + 1e-3)
+
+    def test_wire_bytes_quartered(self):
+        params = {"w": jnp.zeros((1024, 1024))}
+        assert wire_bytes(params, True) < 0.26 * wire_bytes(params, False)

@@ -1,0 +1,87 @@
+"""LRU expert cache + swap space semantics (paper §3 runtime path)."""
+import numpy as np
+import pytest
+
+from repro.core.expert_cache import ExpertCache, PrefetchingExpertCache
+
+
+def make_cache(capacity_experts=4, expert_kb=1, cls=ExpertCache):
+    nbytes = expert_kb * 1024
+    store = {}
+
+    def fetch(key):
+        store.setdefault(key, np.zeros(nbytes, np.uint8) + (key[1] % 250))
+        return store[key]
+
+    return cls(fetch, capacity_bytes=capacity_experts * nbytes), store
+
+
+class TestLRU:
+    def test_hit_miss_accounting(self):
+        c, _ = make_cache()
+        c.get(("l0", 0))
+        c.get(("l0", 0))
+        c.get(("l0", 1))
+        assert c.stats.hits == 1
+        assert c.stats.misses == 2
+
+    def test_eviction_order_lru(self):
+        c, _ = make_cache(capacity_experts=2)
+        c.get(("l", 0))
+        c.get(("l", 1))
+        c.get(("l", 0))          # 0 now MRU
+        c.get(("l", 2))          # evicts 1
+        assert ("l", 1) not in c.resident_keys()
+        assert ("l", 0) in c.resident_keys()
+        assert c.stats.evictions == 1
+
+    def test_capacity_respected(self):
+        c, _ = make_cache(capacity_experts=3)
+        for i in range(10):
+            c.get(("l", i))
+        assert len(c.resident_keys()) <= 3
+        assert c.used_bytes <= c.capacity
+
+    def test_resize_evicts(self):
+        c, _ = make_cache(capacity_experts=4)
+        for i in range(4):
+            c.get(("l", i))
+        c.resize(2 * 1024)
+        assert len(c.resident_keys()) <= 2
+
+    def test_pin_and_invalidate(self):
+        c, _ = make_cache(capacity_experts=4)
+        c.pin([("l", i) for i in range(3)])
+        assert len(c.resident_keys()) == 3
+        c.invalidate([("l", 0)])
+        assert ("l", 0) not in c.resident_keys()
+        c.invalidate()
+        assert not c.resident_keys()
+        assert c.used_bytes == 0
+
+    def test_bytes_in_tracks_transfers(self):
+        c, _ = make_cache(capacity_experts=2, expert_kb=2)
+        c.get(("l", 0))
+        c.get(("l", 1))
+        assert c.stats.bytes_in == 2 * 2048
+
+    def test_hit_rate_uniform_access_matches_capacity_ratio(self):
+        """Paper assumption: uniform access -> hit rate ~= resident/total."""
+        n_experts, capacity = 16, 8
+        c, _ = make_cache(capacity_experts=capacity)
+        rng = np.random.default_rng(0)
+        for _ in range(2000):
+            c.get(("l", int(rng.integers(n_experts))))
+        assert c.stats.hit_rate == pytest.approx(capacity / n_experts,
+                                                 abs=0.06)
+
+
+class TestPrefetch:
+    def test_hint_avoids_demand_miss(self):
+        c, _ = make_cache(capacity_experts=4, cls=PrefetchingExpertCache)
+        c.hint([("l1", 0), ("l1", 1)])
+        before = c.stats.misses
+        c.get(("l1", 0))
+        c.get(("l1", 1))
+        assert c.stats.misses == before
+        assert c.stats.hits >= 2

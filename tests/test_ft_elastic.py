@@ -1,0 +1,106 @@
+"""Failure detector, straggler monitor, elastic mesh planning, recovery loop."""
+import numpy as np
+import pytest
+
+from repro.ft.elastic import (ElasticPlan, HeartbeatFailureDetector,
+                              StragglerMonitor, WorkerFailure, plan_mesh,
+                              remap_data_shards, run_with_recovery)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestFailureDetector:
+    def test_timeout_detection(self):
+        clk = FakeClock()
+        d = HeartbeatFailureDetector(["w0", "w1"], timeout_s=10, clock=clk)
+        clk.t = 5
+        d.heartbeat("w0")
+        clk.t = 12
+        assert d.failed() == ["w1"]
+        assert d.healthy() == ["w0"]
+
+    def test_explicit_failure(self):
+        d = HeartbeatFailureDetector(["w0", "w1"], timeout_s=1e9)
+        d.mark_failed("w0")
+        assert d.failed() == ["w0"]
+
+
+class TestStraggler:
+    def test_flags_persistent_straggler(self):
+        workers = [f"w{i}" for i in range(8)]
+        m = StragglerMonitor(workers, z_thresh=3.0, patience=2)
+        for _ in range(3):
+            t = {w: 1.0 + np.random.default_rng(0).normal() * 0.01
+                 for w in workers}
+            t["w3"] = 5.0
+            m.record_step(t)
+        assert m.quarantine() == ["w3"]
+
+    def test_no_false_positives_on_noise(self):
+        workers = [f"w{i}" for i in range(8)]
+        m = StragglerMonitor(workers, z_thresh=4.0, patience=3)
+        rng = np.random.default_rng(1)
+        for _ in range(10):
+            m.record_step({w: 1.0 + rng.normal() * 0.05 for w in workers})
+        assert m.quarantine() == []
+
+
+class TestElasticPlan:
+    def test_full_fleet(self):
+        p = plan_mesh(512)
+        assert p.mesh_shape == (2, 16, 16)
+        assert not p.degraded
+
+    def test_one_pod(self):
+        p = plan_mesh(256)
+        assert p.mesh_shape == (16, 16)
+
+    def test_partial_failures_shrink(self):
+        p = plan_mesh(300)
+        assert p.mesh_shape == (16, 16)
+        assert p.dropped_workers == 44
+
+    def test_small(self):
+        assert plan_mesh(17).mesh_shape == (1, 16)
+
+    def test_impossible(self):
+        with pytest.raises(RuntimeError):
+            plan_mesh(3)
+
+    def test_remap_gap_free(self):
+        mapping = remap_data_shards(16, 8, step=0)
+        covered = sorted(s for shards in mapping for s in shards)
+        assert covered == list(range(16))
+
+
+class TestRecoveryLoop:
+    def test_recovers_from_failure(self):
+        state = {"restores": 0, "saved": 0}
+        d = HeartbeatFailureDetector([f"w{i}" for i in range(17)],
+                                     timeout_s=1e9)
+
+        def step_fn(step):
+            if step == 7 and state["restores"] == 0:
+                raise WorkerFailure("w2")
+
+        def save_fn(step):
+            state["saved"] = step
+
+        def restore_fn():
+            state["restores"] += 1
+            return state["saved"]
+
+        hist = run_with_recovery(
+            step_fn=step_fn, save_fn=save_fn, restore_fn=restore_fn,
+            detector=d, max_steps=12, checkpoint_every=5,
+            on_rescale=lambda plan, dead: None)
+        assert hist["failures"] == 1
+        assert state["restores"] == 1
+        assert len(hist["rescales"]) == 1
+        assert hist["completed"] >= 12

@@ -1,0 +1,81 @@
+"""Unit tests for the HLO collective parser (roofline input)."""
+import pytest
+
+from repro.roofline.hlo_parse import (collective_summary, comp_multipliers,
+                                      shape_bytes)
+
+SYNTH = """\
+HloModule jit_step, num_partitions=16
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,256]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[128,256]{1,0} all-reduce(%x), to_apply=%add
+  %ag = f32[128,512]{1,0} all-gather(%x), dimensions={1}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256]{1,0} parameter(0)
+  %big = bf16[1024,1024]{1,0} all-reduce(%x2), to_apply=%add
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[128,256]) tuple(%zero, %x)
+  %w = (s32[], f32[128,256]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestShapeBytes:
+    def test_basic(self):
+        assert shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+        assert shape_bytes("bf16[8]") == 16
+        assert shape_bytes("s8[4,4]") == 16
+        assert shape_bytes("f32[]") == 4
+
+    def test_tuple(self):
+        assert shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+class TestSummary:
+    def test_trip_count_weighting(self):
+        mult = comp_multipliers(SYNTH)
+        assert mult.get("body") == 12
+
+    def test_collective_bytes(self):
+        s = collective_summary(SYNTH)
+        # 12 loop iterations x (AR 128*256*4) + entry AR 1024*1024*2
+        assert s["all-reduce_bytes"] == 12 * 128 * 256 * 4 + 1024 * 1024 * 2
+        assert s["all-reduce_count"] == 13
+        # all-gather counts the gathered result
+        assert s["all-gather_bytes"] == 12 * 128 * 512 * 4
+        assert s["total_bytes"] == (s["all-reduce_bytes"]
+                                    + s["all-gather_bytes"])
+
+    def test_known_trip_count_attr_preferred(self):
+        hlo = SYNTH.replace(
+            "condition=%cond, body=%body",
+            'condition=%cond, body=%body, backend_config='
+            '{"known_trip_count":{"n":"7"}}')
+        assert comp_multipliers(hlo).get("body") == 7
+
+    def test_no_collectives(self):
+        s = collective_summary("ENTRY %e (x: f32[2]) -> f32[2] {\n"
+                               "  ROOT %x = f32[2]{0} parameter(0)\n}\n")
+        assert s["total_bytes"] == 0

@@ -1,0 +1,141 @@
+"""Per-kernel allclose vs the pure-jnp oracle (interpret mode on CPU).
+
+Sweeps shapes/dtypes per the deliverable-(c) requirement and adds
+hypothesis property tests on tiling invariance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import QTensor, quantize
+from repro.kernels import (
+    expert_matmul_ref, q_expert_matmul, q_matmul, quantized_matmul_ref,
+)
+from repro.kernels.q4_matmul import quantized_matmul
+
+
+def make_case(m, k, n, bits, group, seed=0, xdtype=jnp.bfloat16):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), xdtype)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    return x, quantize(w, bits, group)
+
+
+def assert_matches_oracle(out, x, qt, rtol=5e-2, atol=5e-2):
+    ref = quantized_matmul_ref(x, qt.q, qt.scales, bits=qt.bits,
+                               group_size=qt.group_size,
+                               out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=rtol, atol=atol * float(
+                                   jnp.abs(ref).max()))
+
+
+class TestQ4MatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [
+        (128, 128, 256), (128, 256, 256), (256, 512, 512), (128, 1024, 256),
+    ])
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_shape_sweep(self, m, k, n, bits):
+        x, qt = make_case(m, k, n, bits, 64)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=bits, group_size=64,
+                               interpret=True)
+        assert out.shape == (m, n) and out.dtype == jnp.bfloat16
+        assert_matches_oracle(out, x, qt)
+
+    @pytest.mark.parametrize("xdtype", [jnp.bfloat16, jnp.float32])
+    @pytest.mark.parametrize("odtype", [jnp.bfloat16, jnp.float32])
+    def test_dtype_sweep(self, xdtype, odtype):
+        x, qt = make_case(128, 256, 256, 4, 64, xdtype=xdtype)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=4, group_size=64,
+                               out_dtype=odtype, interpret=True)
+        assert out.dtype == odtype
+        assert_matches_oracle(out, x, qt)
+
+    @pytest.mark.parametrize("group", [32, 64, 128])
+    def test_group_sweep(self, group):
+        x, qt = make_case(128, 256, 256, 4, group)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=4, group_size=group,
+                               interpret=True)
+        assert_matches_oracle(out, x, qt)
+
+    @pytest.mark.parametrize("bm,bn,bk", [
+        (128, 128, 128), (64, 256, 64), (128, 256, 256), (32, 128, 128),
+    ])
+    def test_tile_sweep(self, bm, bn, bk):
+        x, qt = make_case(128, 512, 256, 4, 32)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=4, group_size=32,
+                               block_m=bm, block_n=bn, block_k=bk,
+                               interpret=True)
+        assert_matches_oracle(out, x, qt)
+
+    @given(mi=st.integers(1, 3), ki=st.integers(1, 4), ni=st.integers(1, 2),
+           bits=st.sampled_from([4, 8]), seed=st.integers(0, 99))
+    @settings(max_examples=12, deadline=None)
+    def test_property_tiling_invariance(self, mi, ki, ni, bits, seed):
+        """Output is independent of the tiling decomposition."""
+        m, k, n = 64 * mi, 128 * ki, 128 * ni
+        x, qt = make_case(m, k, n, bits, 32, seed)
+        outs = [
+            np.asarray(quantized_matmul(
+                x, qt.q, qt.scales, bits=bits, group_size=32,
+                block_m=bm, block_n=bn, block_k=bk, out_dtype=jnp.float32,
+                interpret=True))
+            for (bm, bn, bk) in ((64, 128, 128), (m, n, 32), (32, 128, 64))]
+        np.testing.assert_allclose(outs[0], outs[1], rtol=2e-5, atol=1e-3)
+        np.testing.assert_allclose(outs[0], outs[2], rtol=2e-5, atol=1e-3)
+        assert_matches_oracle(outs[0], x, qt)
+
+    def test_error_on_bad_scales(self):
+        x, qt = make_case(128, 256, 128, 4, 64)
+        with pytest.raises(ValueError):
+            quantized_matmul(x, qt.q, qt.scales[:1], bits=4, group_size=64,
+                             interpret=True)
+
+
+class TestOpsWrappers:
+    @pytest.mark.parametrize("m", [1, 7, 128, 200])
+    def test_q_matmul_pads_m(self, m):
+        """Decode calls with tiny M must work (padding inside the wrapper)."""
+        x, qt = make_case(m, 256, 256, 4, 64)
+        out = q_matmul(x, qt, interpret=True)
+        assert out.shape == (m, 256)
+        assert_matches_oracle(out, x, qt)
+
+    def test_q_expert_matmul_matches_batched_oracle(self):
+        rng = np.random.default_rng(3)
+        e, c, k, n = 4, 64, 128, 256
+        x = jnp.asarray(rng.standard_normal((e, c, k)), jnp.bfloat16)
+        w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+        qt = quantize(w, 4, 64)
+        out = q_expert_matmul(x, qt, block_m=64, interpret=True)
+        ref = expert_matmul_ref(x, qt.q, qt.scales, bits=4, group_size=64,
+                                out_dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=5e-2, atol=5e-2 * float(jnp.abs(ref).max()))
+
+    def test_grad_does_not_exist(self):
+        """Quantized weights are serving-only: no grad path expected."""
+        x, qt = make_case(64, 128, 128, 4, 64)
+        with pytest.raises(Exception):
+            jax.grad(lambda x: q_matmul(x, qt, interpret=True).sum())(x)
+
+
+class TestKernelNumerics:
+    def test_exact_on_integer_friendly_scales(self):
+        """With scales=1 and integer x the kernel result is exact."""
+        k, n, m = 128, 128, 32
+        rng = np.random.default_rng(0)
+        q = rng.integers(-8, 8, (k, n)).astype(np.int8)
+        from repro.core.quantization import pack_int4
+        packed = pack_int4(jnp.asarray(q))
+        scales = jnp.ones((k // 64, n), jnp.float32)
+        x = jnp.asarray(rng.integers(-4, 5, (m, k)), jnp.float32)
+        out = quantized_matmul(x, packed, scales, bits=4, group_size=64,
+                               block_m=32, block_n=128, block_k=128,
+                               out_dtype=jnp.float32, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(x, np.float32) @ q.astype(np.float32))

@@ -1,0 +1,165 @@
+"""Planner / precision-plan / cost-model tests against the paper's numbers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (
+    AdaptivePlanner, DEVICE, HOST, balanced_random_plan, estimate_qos,
+    num_e16_eq1, pareto_frontier, reconfig_delta,
+)
+from repro.core.cost_model import HardwareModel
+from repro.core.precision_plan import delta_cost_bytes
+
+GIB = 2**30
+MIXTRAL = get_config("mixtral-8x7b")
+
+
+class TestPaperConstants:
+    def test_expert_size_matches_paper(self):
+        """Paper §4.1: 'Each expert occupies 336 MB'."""
+        assert MIXTRAL.expert_param_bytes(16) == 336 * 2**20
+
+    def test_non_expert_size_close_to_paper(self):
+        """Paper §4.1: non-expert layers total 3.16 GB (ours ~3.0 GB — the
+        paper includes framework buffers)."""
+        ne = MIXTRAL.non_expert_bytes() / 1e9
+        assert 2.5 < ne < 3.5
+
+    def test_eq1_regimes(self):
+        s_ne = MIXTRAL.non_expert_bytes()
+        s4 = MIXTRAL.expert_param_bytes(4)
+        s16 = MIXTRAL.expert_param_bytes(16)
+        # below the all-4-bit footprint -> 0 sixteen-bit experts
+        assert num_e16_eq1(20 * GIB, s_ne, 256, s4, s16) == 0
+        # enough for everything in 16-bit -> all 256
+        assert num_e16_eq1(95 * GIB, s_ne, 256, s4, s16) == 256
+        # monotone in the budget
+        vals = [num_e16_eq1(g * GIB, s_ne, 256, s4, s16)
+                for g in range(20, 96, 5)]
+        assert vals == sorted(vals)
+
+
+class TestBalancedRandomPlan:
+    @given(nq=st.integers(0, 256), seed=st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_counts_balanced(self, nq, seed):
+        p = balanced_random_plan(32, 8, nq, seed=seed)
+        per_layer = p.quant.sum(axis=1)
+        assert (per_layer == per_layer[0]).all()
+        assert abs(p.num_q_experts - nq) <= 16  # rounding to L multiples
+
+    def test_randomness_across_layers(self):
+        p = balanced_random_plan(32, 8, 128, seed=0)
+        # with 4 of 8 quantized per layer, layers should differ
+        assert len({tuple(r) for r in p.quant}) > 4
+
+    def test_priority_quantized_resident_first(self):
+        """Paper §3: 4-bit experts get device priority."""
+        p = balanced_random_plan(4, 8, 16, resident_experts=16, seed=1)
+        assert ((p.location == DEVICE) == p.quant).all()
+
+    def test_resident_zero_and_all(self):
+        p0 = balanced_random_plan(4, 8, 8, resident_experts=0)
+        assert (p0.location == HOST).all()
+        p1 = balanced_random_plan(4, 8, 8, resident_experts=32)
+        assert (p1.location == DEVICE).all()
+
+    def test_expert_order_is_permutation(self):
+        p = balanced_random_plan(8, 8, 24, seed=3)
+        order = p.expert_order()
+        for l in range(8):
+            assert sorted(order[l]) == list(range(8))
+            e4 = p.bank_sizes()[0]
+            assert p.quant[l, order[l][:e4]].all()
+            assert not p.quant[l, order[l][e4:]].any()
+
+
+class TestPlanner:
+    def setup_method(self, _):
+        self.pl = AdaptivePlanner(MIXTRAL)
+
+    @pytest.mark.parametrize("gb", [10, 20, 26.28, 40, 53.03, 94])
+    def test_budget_respected(self, gb):
+        r = self.pl.plan(gb * GIB, "throughput")
+        assert r.qos.device_bytes <= gb * GIB * 1.001
+
+    def test_throughput_monotone_in_budget_offload_region(self):
+        """Fig. 3: more memory -> fewer misses -> faster (hyperbolic)."""
+        ts = [self.pl.plan(g * GIB, "throughput").qos.tokens_per_s
+              for g in (8, 12, 16, 20, 24, 26)]
+        assert ts == sorted(ts)
+
+    def test_quality_mode_more_q4_is_faster_but_worse(self):
+        lo = self.pl.plan(30 * GIB, "quality", num_q_experts=64)
+        hi = self.pl.plan(30 * GIB, "quality", num_q_experts=256)
+        assert hi.qos.tokens_per_s > lo.qos.tokens_per_s
+        assert hi.qos.quality_proxy > lo.qos.quality_proxy
+
+    def test_paper_throughput_range_covered(self):
+        """Paper: 26.28..53.03 GB budgets span ~0.63..13 tok/s on A100+PCIe.
+        With paper-like hardware constants (no fused-kernel advantage) our
+        model must cover a comparable dynamic range."""
+        hw = HardwareModel(host_link_bw=20e9, hbm_bw=1555e9, mbu=0.35,
+                           q4_speedup_decode=0.9)
+        pl = AdaptivePlanner(MIXTRAL, hw=hw)
+        lo = pl.plan(8 * GIB, "throughput").qos.tokens_per_s
+        hi = pl.plan(53.03 * GIB, "throughput").qos.tokens_per_s
+        assert hi / lo > 5.0
+        assert 0.1 < lo < 5.0
+        assert 3.0 < hi < 60.0
+
+    def test_reconfig_delta_minimal(self):
+        r1, _ = self.pl.replan(40 * GIB, "quality", num_q_experts=128)
+        r2, delta = self.pl.replan(40 * GIB, "quality", num_q_experts=128)
+        # identical plan -> zero ops
+        assert delta["traffic_bytes"] == 0
+        assert len(delta["to_quantize"]) == 0
+
+    def test_reconfig_traffic_less_than_reload(self):
+        r1, _ = self.pl.replan(40 * GIB, "quality", num_q_experts=128)
+        r2, delta = self.pl.replan(36 * GIB, "quality", num_q_experts=160)
+        assert delta["traffic_bytes"] < r2.qos.device_bytes
+
+    def test_sweep_pareto(self):
+        res, pareto = self.pl.sweep(40 * GIB)
+        assert len(res) >= 9
+        pts = [(r.qos.tokens_per_s, r.qos.quality_proxy) for r in res]
+        # every non-pareto point is dominated by some pareto point
+        for i, p in enumerate(pts):
+            if i in pareto:
+                continue
+            assert any(pts[j][0] >= p[0] and pts[j][1] <= p[1]
+                       for j in pareto)
+
+    def test_dense_arch_rejected(self):
+        with pytest.raises(ValueError):
+            AdaptivePlanner(get_config("qwen3-8b"))
+
+    def test_kimi_scale(self):
+        """1T-param MoE: planner must handle per-chip budgets that hold only
+        a small expert fraction."""
+        pl = AdaptivePlanner(get_config("kimi-k2-1t-a32b"))
+        r = pl.plan(100 * GIB, "throughput")
+        assert r.plan.num_q_experts == 61 * 384       # all 4-bit
+        assert 0 < r.plan.resident_fraction() < 0.5
+        assert r.qos.device_bytes <= 100 * GIB
+
+
+class TestParetoFrontier:
+    def test_simple(self):
+        pts = [(1.0, 1.0), (2.0, 1.05), (0.5, 0.99), (2.0, 1.2)]
+        f = pareto_frontier(pts)
+        assert 1 in f and 2 in f and 3 not in f
+
+    @given(st.lists(st.tuples(st.floats(0.1, 100), st.floats(1.0, 2.0)),
+                    min_size=1, max_size=30))
+    @settings(max_examples=30, deadline=None)
+    def test_frontier_nonempty_and_nondominated(self, pts):
+        f = pareto_frontier(pts)
+        assert f
+        for i in f:
+            for j in f:
+                if i != j:
+                    assert not (pts[j][0] >= pts[i][0]
+                                and pts[j][1] < pts[i][1])

@@ -1,0 +1,37 @@
+"""capture_routing hook + cache_sim plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.core.mixed_moe import capture_routing, route
+
+
+class TestCaptureRouting:
+    def test_eager_capture(self):
+        moe = MoEConfig(num_experts=4, top_k=2, d_ff_expert=8)
+        w = jax.random.normal(jax.random.key(0), (16, 4), jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (6, 16), jnp.float32)
+        with capture_routing() as ids:
+            route(w, x, moe, train=False)
+            route(w, x, moe, train=False)
+        assert len(ids) == 2
+        assert ids[0].shape == (6, 2)
+        assert ids[0].dtype == np.int32
+        assert (ids[0] >= 0).all() and (ids[0] < 4).all()
+
+    def test_no_capture_outside_context(self):
+        moe = MoEConfig(num_experts=4, top_k=1, d_ff_expert=8)
+        w = jnp.zeros((16, 4))
+        x = jnp.ones((2, 16))
+        route(w, x, moe, train=False)   # must not raise / leak state
+
+    def test_jitted_route_not_captured(self):
+        """Tracers are skipped — jit under the context stays silent."""
+        moe = MoEConfig(num_experts=4, top_k=1, d_ff_expert=8)
+        w = jnp.zeros((16, 4))
+        x = jnp.ones((2, 16))
+        f = jax.jit(lambda w, x: route(w, x, moe, train=False)[1])
+        with capture_routing() as ids:
+            f(w, x)
+        assert ids == []

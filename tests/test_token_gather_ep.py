@@ -1,0 +1,88 @@
+"""Token-gather EP dispatch (§Perf kimi iteration B1): numerical
+equivalence with the dense oracle and with the weight-gather path, plus
+the regime gate."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core import mixed_moe as MM
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() != 1, reason="spawns its own multi-device subprocess")
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import mixed_moe as MM
+from repro.configs.base import MoEConfig
+
+mesh = jax.make_mesh((4, 4), ("data", "model"))
+moe = MoEConfig(num_experts=8, top_k=2, d_ff_expert=64, capacity_factor=8.0)
+d, t = 32, 16
+ks = jax.random.split(jax.random.key(0), 5)
+params = {
+    "router": jax.random.normal(ks[0], (d, 8), jnp.float32) * 0.1,
+    "w_gate": jax.random.normal(ks[1], (8, d, 64), jnp.bfloat16) * 0.1,
+    "w_up": jax.random.normal(ks[2], (8, d, 64), jnp.bfloat16) * 0.1,
+    "w_down": jax.random.normal(ks[3], (8, 64, d), jnp.bfloat16) * 0.1,
+}
+x = jax.random.normal(ks[4], (t, d), jnp.bfloat16)
+ref = MM.moe_dense_ref(params, x, moe)
+banks16 = {"q4": None,
+           "f16": {k: params[k] for k in ("w_gate", "w_up", "w_down")}}
+w, ids, _ = MM.route(params["router"], x, moe, train=False)
+outs = {}
+with jax.set_mesh(mesh):
+    for fsdp in (None, "data"):
+        par = MM.MoEParallelism(mesh=mesh, dp_axes=("data",),
+                                fsdp_axis=fsdp)
+        y = MM.moe_apply(banks16, x, w, ids, moe, par)
+        err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        outs[str(fsdp)] = err
+for k, v in outs.items():
+    print(f"RESULT {k} {v:.6f}")
+assert all(v < 5e-3 for v in outs.values()), outs
+print("OK")
+"""
+
+
+class TestTokenGatherEP:
+    def test_matches_oracle_on_mesh(self):
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.abspath(
+                       os.path.join(os.path.dirname(__file__), "..", "src")))
+        env.pop("XLA_FLAGS", None)
+        r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                           capture_output=True, text=True, timeout=300)
+        assert "OK" in r.stdout, r.stdout + r.stderr
+
+    def test_regime_gate_decode_vs_train(self):
+        """Gate math: decode token sets gather; train-scale don't."""
+        d = 7168
+        fs = 16
+        decode_tokens = 128 // 16          # per dp rank
+        train_tokens = 65536 // 16
+        assert decode_tokens * fs * d * 2 <= MM.TOKEN_GATHER_MAX_BYTES
+        assert train_tokens * fs * d * 2 > MM.TOKEN_GATHER_MAX_BYTES
+
+    def test_fsdp_inactive_without_axis(self):
+        """fsdp never activates on a 1-device mesh / without the axis."""
+        moe = MoEConfig(num_experts=8, top_k=2, d_ff_expert=64)
+        dev = np.array(jax.devices()[:1]).reshape(1, 1)
+        mesh = jax.sharding.Mesh(dev, ("data", "model"))
+        par = MM.MoEParallelism(mesh=mesh, dp_axes=("data",),
+                                fsdp_axis="data")
+        assert par.fsdp_size == 1
+        banks = {"q4": None,
+                 "f16": {"w_gate": jnp.zeros((8, 32, 64), jnp.bfloat16),
+                         "w_up": jnp.zeros((8, 32, 64), jnp.bfloat16),
+                         "w_down": jnp.zeros((8, 64, 32), jnp.bfloat16)}}
+        assert not MM._fsdp_active(banks, moe, par, ep=True)
