@@ -15,10 +15,13 @@ Two modes:
          paper's stack (bnb 4-bit matmul slower than 16-bit) — our Pallas
          fused dequant-matmul inverts this (beyond-paper; §Perf).
 
-2. MEASURED, reduced scale: the AdaptiveServingEngine on the trained bench
-   MoE, on this container's CPU — real tokens, wall-clock decode, expert
-   streaming accounted from the measured host-link bandwidth. Validates
-   the same qualitative shape end-to-end through the real serving stack.
+2. MEASURED, reduced scale: the continuous-batching AdaptiveServingEngine
+   on the trained bench MoE, on this container's CPU — Poisson request
+   arrivals joining/leaving decode slots mid-batch, real tokens,
+   wall-clock decode, expert streaming MEASURED through the runtime
+   ExpertCache (the analytical estimate is reported alongside as a
+   cross-check). Reports tokens/s AND p50/p95 per-request latency —
+   the QoS pair the paper's knobs trade against each other.
 """
 from __future__ import annotations
 
@@ -73,6 +76,7 @@ def analytic_surface(hw: HardwareModel, tag: str) -> List[Dict]:
 
 
 def measured_small_scale(quick: bool = False) -> List[Dict]:
+    from repro.serving.driver import drive_poisson
     from repro.serving.engine import AdaptiveServingEngine
     cfg, params, _ = common.get_trained_model()
     rng = np.random.default_rng(0)
@@ -89,24 +93,28 @@ def measured_small_scale(quick: bool = False) -> List[Dict]:
     for name, budget, frac in budgets:
         nq = int(round(frac * cfg.num_layers * cfg.moe.num_experts))
         engine.configure(budget, "quality", nq)
-        for _ in range(2 if quick else 4):
-            engine.submit(rng.integers(1, cfg.vocab_size, 16),
-                          max_new_tokens=16)
-        while engine.step():
-            pass
+        rids = drive_poisson(engine, rng,
+                             n_requests=4 if quick else 8,
+                             mean_gap_s=0.05)
+        lats = [engine.done[r].latency_s for r in rids]
         rows.append({
             "bench": "fig3_measured", "point": name,
             "budget_mb": round(budget / 1e6, 2),
             "frac_q": frac,
-            "miss_rate": round(engine.metrics["miss_rate"], 3),
+            "miss_rate_est": round(engine.metrics["miss_rate"], 3),
+            "miss_rate_measured": round(
+                engine.metrics["miss_rate_measured"], 3),
+            "transfer_s_measured": round(engine.metrics["transfer_s"], 4),
+            "transfer_s_est": round(engine.metrics["transfer_s_est"], 4),
             "tok_s_compute_only": round(
                 engine.throughput_tokens_per_s(include_transfer=False), 2),
             "tok_s_with_transfer": round(
                 engine.throughput_tokens_per_s(include_transfer=True), 2),
+            "latency_p50_ms": round(float(np.percentile(lats, 50)) * 1e3, 1),
+            "latency_p95_ms": round(float(np.percentile(lats, 95)) * 1e3, 1),
         })
-        # reset counters between operating points
-        for k in ("tokens_generated", "decode_s", "transfer_s_est"):
-            engine.metrics[k] = 0 if k == "tokens_generated" else 0.0
+        # reset throughput counters between operating points
+        engine.reset_counters()
     return rows
 
 

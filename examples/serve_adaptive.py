@@ -1,7 +1,10 @@
-"""Adaptive serving under a CHANGING memory budget — the paper's Fig. 1
-scenario end-to-end: a multi-tenant job manager shrinks and grows this
-job's HBM allocation while requests stream in; the engine replans and
-partially reconfigures between batches with minimal downtime.
+"""Adaptive continuous-batching serving under a CHANGING memory budget —
+the paper's Fig. 1 scenario end-to-end: a multi-tenant job manager shrinks
+and grows this job's HBM allocation while Poisson-arriving requests stream
+in. Requests join and leave the fixed decode slots at every iteration;
+placement-only replans apply MID-FLIGHT (between decode iterations,
+in-flight requests keep their outputs), bank-split changes drain the
+slots gracefully first.
 
     PYTHONPATH=src python examples/serve_adaptive.py
 """
@@ -11,17 +14,26 @@ import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.models.model import build_model
+from repro.serving.driver import drive_poisson
 from repro.serving.engine import AdaptiveServingEngine
 
 # (time-ordered) budget schedule as fractions of the full bf16 model size,
-# alternating preference — a synthetic multi-tenant trace.
+# alternating preference — a synthetic multi-tenant trace. Each point is
+# applied while the previous point's tail requests are still decoding.
 TRACE = [
     (1.20, "throughput", None),   # plenty of memory: all-resident, some bf16
     (0.50, "throughput", None),   # squeezed: quantize + offload
     (0.50, "quality", 0),         # same memory, quality-first: 0 quantized
+    (0.80, "quality", 0),         # more memory, SAME bank split: this one
+                                  # is placement-only — applied mid-flight
+                                  # with zero drain, in-flight requests
+                                  # keep decoding
     (0.35, "throughput", None),   # heavy pressure
     (1.00, "quality", 16),        # recovered: user allows 16 4-bit experts
 ]
+
+REQUESTS_PER_PHASE = 6
+MEAN_GAP_S = 0.03                 # Poisson arrivals: exp(0.03s) inter-arrival
 
 
 def main():
@@ -37,32 +49,49 @@ def main():
     rng = np.random.default_rng(0)
 
     print(f"model {cfg.arch_id}: full bf16 size {full/1e6:.1f} MB, "
-          f"{engine.planner.num_experts_total} experts")
+          f"{engine.planner.num_experts_total} experts, "
+          f"{engine.max_slots} decode slots")
     for i, (frac, pref, nq) in enumerate(TRACE):
         budget = full * frac
-        t0 = time.perf_counter()
-        res = engine.configure(budget, pref, nq)
-        dt = time.perf_counter() - t0
+        in_flight = engine.scheduler.num_active
+        phase_start = time.perf_counter()   # drain completions count here
+        reconfig0 = engine.metrics["reconfig_s"]
+        res = engine.configure(budget, pref, nq)   # mid-flight replan
+        # the engine's own accounting: replan/re-specialization time only
+        # (a graceful drain is ordinary decoding, reported separately)
+        dt = engine.metrics["reconfig_s"] - reconfig0
         d = engine.metrics.get("last_delta_traffic_gib", 0.0)
         print(f"\n[t={i}] budget {budget/1e6:7.1f} MB pref={pref:10s} "
               f"-> {res.summary()}")
-        print(f"      reconfig {dt*1e3:.0f} ms"
-              f" (delta traffic {d:.3f} GiB)")
-        for _ in range(4):
-            engine.submit(rng.integers(1, cfg.vocab_size, 12),
-                          max_new_tokens=12)
-        done = 0
-        while True:
-            n = engine.step()
-            if not n:
-                break
-            done += n
-        print(f"      served {done} requests | {engine.summary()}")
+        print(f"      reconfig {dt*1e3:.0f} ms with {in_flight} request(s)"
+              f" in flight (delta traffic {d:.3f} GiB,"
+              f" drains so far {engine.metrics['drains']})")
+        # Poisson arrival process for this phase; the LAST phase runs to
+        # empty, earlier phases leave their tail in flight so the next
+        # configure() exercises mid-flight reconfiguration.
+        drive_poisson(engine, rng,
+                      n_requests=REQUESTS_PER_PHASE,
+                      mean_gap_s=MEAN_GAP_S,
+                      prompt_len=lambda r: int(r.integers(6, 16)),
+                      max_new_tokens=lambda r: int(r.integers(4, 13)),
+                      drain=(i == len(TRACE) - 1))
+        # latency over requests COMPLETED during this phase only
+        lats = [r.latency_s for r in engine.done.values()
+                if r.t_done is not None and r.t_done >= phase_start]
+        lat = {q: float(np.percentile(lats, q)) if lats else 0.0
+               for q in (50, 95)}
+        print(f"      {len(engine.done)} done total | {engine.summary()}")
+        print(f"      phase latency p50 {lat[50]*1e3:.0f} ms "
+              f"p95 {lat[95]*1e3:.0f} ms | "
+              f"expert fetches {engine.metrics['expert_fetches']}"
+              f"/{engine.metrics['expert_accesses']} accesses")
 
     m = engine.metrics
-    print(f"\ntotals: {m['tokens_generated']} tokens, "
-          f"{m['reconfigs']} reconfigs ({m['reconfig_s']:.2f}s), "
-          f"decode {m['decode_s']:.2f}s")
+    print(f"\ntotals: {m['tokens_generated']} tokens over "
+          f"{m['iterations']} iterations, "
+          f"{m['reconfigs']} reconfigs ({m['reconfig_s']:.2f}s, "
+          f"{m['drains']} drains), decode {m['decode_s']:.2f}s, "
+          f"transfer {m['transfer_s']:.3f}s (est {m['transfer_s_est']:.3f}s)")
 
 
 if __name__ == "__main__":

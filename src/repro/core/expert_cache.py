@@ -89,12 +89,14 @@ class ExpertCache:
 
     def invalidate(self, keys=None):
         if keys is None:
+            self.stats.evictions += len(self._cache)
             self._cache.clear()
             self._used = 0
             return
         for k in list(keys):
             if k in self._cache:
                 self._used -= self._cache.pop(k)[1]
+                self.stats.evictions += 1
 
     def resize(self, capacity_bytes: int):
         self.capacity = int(capacity_bytes)

@@ -338,13 +338,23 @@ def moe_apply(banks, x: jax.Array, weights: jax.Array, ids: jax.Array,
                                      tiled=True)
         return jax.lax.psum(y, par.ep_axis)
 
-    fn = jax.shard_map(
-        local_fn,
-        mesh=par.mesh,
-        in_specs=(bank_specs, dp, dp, dp),
-        out_specs=dp,
-        check_vma=False,
-    )
+    if hasattr(jax, "shard_map"):                    # jax >= 0.6
+        fn = jax.shard_map(
+            local_fn,
+            mesh=par.mesh,
+            in_specs=(bank_specs, dp, dp, dp),
+            out_specs=dp,
+            check_vma=False,
+        )
+    else:                                            # 0.4.x compat
+        from jax.experimental.shard_map import shard_map as _shard_map
+        fn = _shard_map(
+            local_fn,
+            mesh=par.mesh,
+            in_specs=(bank_specs, dp, dp, dp),
+            out_specs=dp,
+            check_rep=False,
+        )
     return fn(banks, x, weights, ids)
 
 

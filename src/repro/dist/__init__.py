@@ -1,0 +1,2 @@
+"""Distribution utilities: sharding rules for params, activations and IO."""
+from repro.dist import sharding  # noqa: F401

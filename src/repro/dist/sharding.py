@@ -1,0 +1,289 @@
+"""Sharding rules (DESIGN.md §4): one module owns every GSPMD annotation.
+
+Three layers of API, all name-rule based so model code never mentions mesh
+axes directly:
+
+* **Activation constraints** — ``activation_constraints(cfg, mesh, dp_axes)``
+  installs a thread-local table mapping *logical activation names*
+  ("residual", "kv_cache", "attn_scores_full", ...) to PartitionSpecs;
+  ``constrain(x, name)`` applied inside the forwards looks the name up and
+  becomes a no-op outside the context (single-device tests trace with no
+  context at all, so smoke runs carry zero sharding overhead).
+
+* **Parameter rules** — ``param_specs`` / ``param_shardings`` walk a param
+  pytree and assign megatron-style specs by leaf name: column-parallel
+  up-projections, row-parallel down-projections, vocab-sharded embedding
+  tables, EP- or TP-sharded expert banks (mirroring
+  ``mixed_moe._bank_specs``, plus the stacked leading layer dim).
+
+* **IO specs** — ``input_specs`` / ``cache_specs`` build the abstract
+  (ShapeDtypeStruct) inputs and their shardings for the dry-run driver.
+
+Every rule degrades to replication when a dim does not divide the mesh
+axis — a spec must never make a program fail to compile.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+_ACTIVE = threading.local()          # .rules: Dict[str, P] | None, .mesh
+
+
+# ---------------------------------------------------------------------------
+# Small helpers
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, axis: str) -> int:
+    try:
+        return int(mesh.shape[axis]) if axis in mesh.shape else 1
+    except TypeError:
+        return 1
+
+
+def _dp_entry(dp_axes: Tuple[str, ...]):
+    """The PartitionSpec entry for the batch/token dim."""
+    if not dp_axes:
+        return None
+    return dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+
+def batch_axes(mesh, global_batch: int) -> Tuple[str, ...]:
+    """Data-parallel axes for this (mesh, batch): the ("pod","data") prefix
+    whose total size divides the global batch; drops axes (pod first) until
+    it does — long_500k's batch=1 shards over nothing."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    while axes:
+        n = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if n and global_batch % n == 0:
+            break
+        axes.pop(0)
+    return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+def _activation_rules(cfg, mesh, dp_axes: Tuple[str, ...],
+                      train: bool = False) -> Dict[str, P]:
+    dp = _dp_entry(dp_axes)
+    m = MODEL_AXIS
+    msize = _axis_size(mesh, m)
+    h = cfg.attention.num_heads if cfg.attention else 0
+    heads_ok = h > 0 and msize > 1 and h % msize == 0
+    ssm_h = 0
+    if cfg.ssm is not None:
+        di = cfg.ssm.expand * cfg.d_model if cfg.ssm.kind == "mamba2" \
+            else cfg.d_model
+        ssm_h = di // cfg.ssm.head_dim
+    ssm_ok = ssm_h > 0 and msize > 1 and ssm_h % msize == 0
+    rules = {
+        # (B, S, d): residual stream shards over tokens only — the d dim
+        # stays replicated so norms/routers need no collective.
+        "residual": P(dp, None, None),
+        # (B, W, hkv, hd): ring-buffer KV shards over batch.
+        "kv_cache": P(dp, None, None, None),
+        # (B, H, Sq, Sk): flat scores shard heads when they divide.
+        "attn_scores_full": P(dp, m if heads_ok else None, None, None),
+        # (B, Hkv, G, Sq, Sk): grouped scores (taken when heads can NOT
+        # shard) shard the query blocks instead (§Perf smollm).
+        "attn_scores_full_g": P(dp, None, None,
+                                m if msize > 1 else None, None),
+        # decode reads the window-sharded-free cache; batch-only (sharding
+        # Sk would psum every softmax — DESIGN.md §4).
+        "attn_scores_cache_g": P(dp, None, None, None, None),
+        "attn_scores_cache": P(dp, None, None, None),
+        # (B, S, H, P) rwkv/mamba inner activations.
+        "ssm_inner": P(dp, None, m if ssm_ok else None, None),
+    }
+    return rules
+
+
+@contextlib.contextmanager
+def activation_constraints(cfg, mesh, dp_axes: Tuple[str, ...],
+                           train: bool = False):
+    """Install the named-constraint table for the duration of a trace."""
+    prev = (getattr(_ACTIVE, "rules", None), getattr(_ACTIVE, "mesh", None))
+    _ACTIVE.rules = _activation_rules(cfg, mesh, dp_axes, train=train)
+    _ACTIVE.mesh = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE.rules, _ACTIVE.mesh = prev
+
+
+def constrain(x, name: str):
+    """Apply the active sharding rule for ``name`` (no-op outside an
+    ``activation_constraints`` context or for unknown/mismatched names)."""
+    rules = getattr(_ACTIVE, "rules", None)
+    if not rules:
+        return x
+    spec = rules.get(name)
+    if spec is None or len(spec) > x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE.mesh, spec))
+
+
+def full_grouped_ok(h: int, hkv: int) -> bool:
+    """Should the FULL-attention path use the grouped GQA contraction?
+
+    Measured rule (§Perf): when heads shard evenly over the model axis the
+    flat+head-sharded path wins (grouped 5D layouts inflate collectives);
+    when they don't (e.g. 15-head smollm), grouped+q-sharded wins. Outside
+    a mesh context (single-device smoke) grouped wins on memory: K/V are
+    never expanded G-fold."""
+    mesh = getattr(_ACTIVE, "mesh", None)
+    if hkv == h:
+        return False
+    if mesh is None:
+        return True
+    msize = _axis_size(mesh, MODEL_AXIS)
+    return not (h % msize == 0)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# 2D weights sharded on the OUTPUT dim (column-parallel)
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "ffn_k", "w_r",
+                 "w_k", "w_v", "w_g", "w_in", "ffn_r"}
+# 2D weights sharded on the INPUT (reduction) dim (row-parallel)
+_ROW_PARALLEL = {"wo", "w_down", "ffn_v", "w_out", "w_o"}
+# Embedding/unembedding tables: vocab-sharded (padded_vocab divides)
+_VOCAB_SHARDED = {"table"}
+
+
+def _expert_spec(path: str, shape, msize: int) -> P:
+    """Spec for a (stacked) expert-bank leaf: (L, E, ...) arrays, the
+    QTensor ``q``/``scales`` included. EP shards E when it divides the
+    model axis, otherwise TP shards the d_ff dim (dim -2 for w_down and
+    its scales, dim -1 for up/gate) — mirrors ``mixed_moe._bank_specs``."""
+    if len(shape) < 3:
+        return P(*([None] * len(shape)))
+    e = shape[1]
+    spec = [None] * len(shape)
+    if msize > 1 and e % msize == 0:
+        spec[1] = MODEL_AXIS                           # EP over experts
+        return P(*spec)
+    fdim = len(shape) - 2 if "w_down" in path else len(shape) - 1
+    if msize > 1 and shape[fdim] % msize == 0:
+        spec[fdim] = MODEL_AXIS                        # TP over d_ff
+    return P(*spec)
+
+
+def _leaf_spec(path: str, shape, msize: int) -> P:
+    """Megatron-style spec by leaf name; stacked (L, ...) leaves get a
+    leading None automatically (layer dims are never sharded)."""
+    parts = [p for p in path.split("/") if p]
+    last = parts[-1] if parts else ""
+    ndim = len(shape)
+    if msize <= 1 or ndim == 0:
+        return P(*([None] * ndim))
+    if "moe" in parts and last != "router":
+        return _expert_spec(path, shape, msize)
+    if last in _VOCAB_SHARDED and ndim == 2:
+        return P(MODEL_AXIS if shape[0] % msize == 0 else None, None)
+    # find the trailing 2D weight inside a possibly stacked leaf
+    if last in _COL_PARALLEL and ndim >= 2:
+        spec = [None] * ndim
+        if shape[-1] % msize == 0:
+            spec[-1] = MODEL_AXIS
+        return P(*spec)
+    if last in _ROW_PARALLEL and ndim >= 2:
+        spec = [None] * ndim
+        if shape[-2] % msize == 0:
+            spec[-2] = MODEL_AXIS
+        return P(*spec)
+    return P(*([None] * ndim))
+
+
+def _walk_specs(tree, msize: int, path: str = ""):
+    if isinstance(tree, dict):
+        return {k: _walk_specs(v, msize, f"{path}/{k}")
+                for k, v in tree.items()}
+    if tree is None:
+        return None
+    # QTensor and other registered containers: map over their array leaves
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if len(leaves) != 1 or leaves[0] is not tree:
+        specs = [_leaf_spec(path, leaf.shape, msize) for leaf in leaves]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+    return _leaf_spec(path, tree.shape, msize)
+
+
+def param_specs(cfg, mesh, tree) -> Any:
+    """PartitionSpec pytree for a (train- or serve-layout) param tree."""
+    return _walk_specs(tree, _axis_size(mesh, MODEL_AXIS))
+
+
+def param_shardings(cfg, mesh, tree) -> Any:
+    """NamedSharding pytree (same structure as ``tree``)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(cfg, mesh, tree),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# IO specs for the dry-run driver
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape, mesh):
+    """(abstract inputs, NamedShardings) for one dry-run cell."""
+    import jax.numpy as jnp
+    dp = batch_axes(mesh, shape.global_batch)
+    lead = _dp_entry(dp)
+    b, s = shape.global_batch, shape.seq_len
+    ns = lambda spec: NamedSharding(mesh, spec)
+    if shape.kind == "decode":
+        inp = {"tokens": _sds((b, 1), jnp.int32),
+               "positions": _sds((b,), jnp.int32)}
+        sh = {"tokens": ns(P(lead, None)), "positions": ns(P(lead))}
+        return inp, sh
+    inp = {"tokens": _sds((b, s), jnp.int32),
+           "labels": _sds((b, s), jnp.int32)}
+    sh = {"tokens": ns(P(lead, None)), "labels": ns(P(lead, None))}
+    if cfg.family == "encdec":
+        # precomputed frontend frame embeddings (B, S_src, d)
+        inp["src"] = _sds((b, cfg.frontend_len or s, cfg.d_model),
+                          jnp.dtype(cfg.dtype))
+        sh["src"] = ns(P(lead, None, None))
+    if cfg.frontend == "vision":
+        inp["frontend"] = _sds((b, cfg.frontend_len, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        sh["frontend"] = ns(P(lead, None, None))
+    return inp, sh
+
+
+def cache_specs(cfg, shape, mesh):
+    """(abstract decode cache, NamedShardings). Caches shard over the batch
+    dim only — window/state dims stay local (DESIGN.md §4)."""
+    from repro.models.model import init_cache  # deferred: avoids cycle
+    dp = batch_axes(mesh, shape.global_batch)
+    lead = _dp_entry(dp)
+    b = shape.global_batch
+    cache = init_cache(cfg, b, shape.seq_len, abstract=True)
+
+    def spec_of(leaf):
+        sh = leaf.shape
+        spec = [None] * len(sh)
+        if len(sh) >= 2 and sh[1] == b:
+            spec[1] = lead                 # (L, B, ...) stacks
+        elif len(sh) >= 1 and sh[0] == b:
+            spec[0] = lead                 # (B, ...) e.g. enc_out
+        return NamedSharding(mesh, P(*spec))
+
+    return cache, jax.tree_util.tree_map(spec_of, cache)

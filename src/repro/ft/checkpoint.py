@@ -26,7 +26,12 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # container without the wheel: stdlib fallback
+    zstandard = None
+    import zlib
 
 _FLAG = "COMMITTED"
 
@@ -80,11 +85,20 @@ def encode_tree(tree, level: int = 3) -> bytes:
         payload[k] = {"d": arr.dtype.name, "s": list(arr.shape),
                       "b": arr.tobytes()}
     raw = msgpack.packb(payload, use_bin_type=True)
+    if zstandard is None:
+        return zlib.compress(raw, level)
     return zstandard.ZstdCompressor(level=level).compress(raw)
 
 
 def decode_tree(data: bytes):
-    raw = zstandard.ZstdDecompressor().decompress(data)
+    if data[:4] == b"\x28\xb5\x2f\xfd":        # zstd frame magic
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "zstandard module is unavailable")
+        raw = zstandard.ZstdDecompressor().decompress(data)
+    else:                                       # zlib fallback frame
+        import zlib as _zlib
+        raw = _zlib.decompress(data)
     payload = msgpack.unpackb(raw, raw=False)
     flat = {}
     for k, v in payload.items():

@@ -5,7 +5,26 @@ touches jax device state.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def _make_mesh(shape, axes, devices):
+    """jax.make_mesh across versions (axis_types only where supported)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh: ``jax.set_mesh``
+    on new jax, the legacy global-mesh context on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh if hasattr(mesh, "__enter__") else contextlib.nullcontext()
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,13 +38,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {ndev} devices for mesh {shape}; got {len(devices)} — "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "BEFORE importing jax (launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes, devices=devices[:ndev],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices[:ndev])
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires forced host device count)."""
     import numpy as np
     ndev = int(np.prod(shape))
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, jax.devices()[:ndev])

@@ -209,7 +209,11 @@ def attention(p: Dict[str, Any], x: jax.Array, acfg: AttentionConfig, *,
         # sharded cache would psum every softmax (see DESIGN.md §4).
         new_cache = _prefill_cache(cache, k, v, positions)
         qpos = positions
-        mask = qpos[:, None, :, None] >= qpos[:, None, None, :]
+        # key validity: right-padded slot prefills tag pads with pos=-1;
+        # they must never be attended (and their ring-buffer entries stay
+        # tagged invalid for the decode steps that follow)
+        mask = (qpos[:, None, :, None] >= qpos[:, None, None, :]) \
+            & (qpos[:, None, None, :] >= 0)
         if acfg.sliding_window:
             mask &= (qpos[:, None, :, None] - qpos[:, None, None, :]
                      < acfg.sliding_window)

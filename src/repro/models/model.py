@@ -139,6 +139,15 @@ class Model:
     prefill: Callable          # (params, batch, cache) -> (logits, cache)
     decode_step: Callable      # (params, cache, tokens, positions) -> (logits, cache)
     init_cache: Callable
+    # Slot-based serving API (continuous batching, DESIGN.md §3); None for
+    # families whose decode cache is not the plain ring-buffer KV dict.
+    prefill_into_slot: Optional[Callable] = None
+    # (params, cache, tokens (1,S), positions (1,S), slot, last_idx)
+    #   -> (last-token logits (1,V), cache with slot row replaced)
+    decode_step_routed: Optional[Callable] = None
+    # (params, cache, tokens, positions) -> (logits, cache, route_ids)
+    reset_slot: Optional[Callable] = None
+    # (cache, slot) -> cache with the slot's position tags invalidated
 
 
 def _embed_inputs(params, cfg: ModelConfig, batch):
@@ -214,8 +223,11 @@ def build_model(cfg: ModelConfig, mesh=None, *,
             logits = L.unembed(params["lm_head"]["table"], y)
             return logits[:, 0], new_cache
 
-    def decode_step(params, cache, tokens, positions):
-        """tokens (B,1); positions (B,) absolute position of the token."""
+    def _decode_step(params, cache, tokens, positions, collect_routes):
+        """tokens (B,1); positions (B,) absolute position of the token.
+
+        Idle slots pass position=-1: their ring-buffer write lands with an
+        invalid (-1) tag, so a retired slot never pollutes its cache row."""
         with act_ctx():
             x = L.embed(params["embed"]["table"], tokens) \
                 * jnp.asarray(math.sqrt(cfg.d_model),
@@ -224,10 +236,60 @@ def build_model(cfg: ModelConfig, mesh=None, *,
             kw = dict(par=par, train=False, use_kernel=use_kernel)
             if cfg.family == "encdec":
                 kw["enc_out"] = cache["enc_out"]
-            y, new_cache, _ = fwd(params, cfg, x, pos2, caches=cache, **kw)
+            if collect_routes:
+                kw["collect_routes"] = True
+            y, new_cache, aux = fwd(params, cfg, x, pos2, caches=cache, **kw)
             y = L.rms_norm(y, params["final_norm"]["scale"])
             logits = L.unembed(params["lm_head"]["table"], y)
+            if collect_routes:
+                return logits[:, 0], new_cache, aux["route_ids"]
             return logits[:, 0], new_cache
+
+    def decode_step(params, cache, tokens, positions):
+        return _decode_step(params, cache, tokens, positions, False)
+
+    slot_api = cfg.family in ("dense", "moe", "vlm") \
+        and cfg.frontend == "none"
+
+    def decode_step_routed(params, cache, tokens, positions):
+        """decode_step that also returns the per-layer routed expert ids
+        (L, B, top_k) in bank order — the engine's expert-cache feed."""
+        return _decode_step(params, cache, tokens, positions, True)
+
+    def prefill_into_slot(params, cache, tokens, positions, slot, last_idx):
+        """Prefill ONE request into decode slot ``slot`` of a live batch
+        cache without touching the other slots (continuous batching,
+        DESIGN.md §3).
+
+        tokens/positions: (1, S) RIGHT-padded; pad positions are -1 (the
+        attention mask and the ring-buffer tags treat them as invalid).
+        ``slot`` and ``last_idx`` (index of the last real token) are traced
+        scalars — one compile per padded length, none per slot. Returns
+        (next-token logits (1, V), cache with slot row replaced)."""
+        window = cache["k"].shape[2]
+        with act_ctx():
+            x = L.embed(params["embed"]["table"], tokens) \
+                * jnp.asarray(math.sqrt(cfg.d_model),
+                              params["embed"]["table"].dtype)
+            n, _, _, hkv, hd = cache["k"].shape
+            sub = {"k": jnp.zeros((n, 1, window, hkv, hd),
+                                  cache["k"].dtype),
+                   "v": jnp.zeros((n, 1, window, hkv, hd),
+                                  cache["v"].dtype),
+                   "pos": jnp.full((n, 1, window), -1, jnp.int32)}
+            y, new_sub, _ = fwd(params, cfg, x, positions, caches=sub,
+                                par=par, train=False, use_kernel=use_kernel)
+            y_last = jnp.take(y, last_idx, axis=1, mode="clip")[:, None]
+            y_last = L.rms_norm(y_last, params["final_norm"]["scale"])
+            logits = L.unembed(params["lm_head"]["table"], y_last)
+            merged = {key: cache[key].at[:, slot].set(new_sub[key][:, 0])
+                      for key in ("k", "v", "pos")}
+            return logits[:, 0], merged
+
+    def reset_slot(cache, slot):
+        """Invalidate a retired slot's ring buffer (tags only — k/v bytes
+        are dead once every tag is -1)."""
+        return dict(cache, pos=cache["pos"].at[:, slot].set(-1))
 
     return Model(
         cfg=cfg,
@@ -236,6 +298,10 @@ def build_model(cfg: ModelConfig, mesh=None, *,
         prefill=prefill,
         decode_step=decode_step,
         init_cache=functools.partial(init_cache, cfg),
+        prefill_into_slot=prefill_into_slot if slot_api else None,
+        decode_step_routed=decode_step_routed if cfg.moe is not None
+        else None,
+        reset_slot=reset_slot if slot_api else None,
     )
 
 

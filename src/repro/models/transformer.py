@@ -50,13 +50,25 @@ def _scan_or_loop(body, x, xs, cfg: ModelConfig):
 # Dense / MoE transformer
 # ---------------------------------------------------------------------------
 
-def _ffn_or_moe(p, xn, cfg: ModelConfig, par, train, use_kernel, aux_acc):
+def _ffn_or_moe(p, xn, cfg: ModelConfig, par, train, use_kernel, aux_acc,
+                token_valid=None):
+    """Returns (y, aux_acc, route_ids|None) — ids are the (T, k) routed
+    expert slots in BANK order (serve layout permutes experts q4-first).
+
+    ``token_valid`` (B, S) bool masks idle decode slots / prefill pads out
+    of the dispatch: their ids are remapped to the out-of-range sentinel
+    ``num_experts`` (dropped by ``_local_slot``) so they never occupy
+    expert capacity and displace real tokens."""
     if cfg.moe is None:
-        return L.mlp(p["mlp"], xn, cfg.act), aux_acc
+        return L.mlp(p["mlp"], xn, cfg.act), aux_acc, None
     b, s, d = xn.shape
     x2 = xn.reshape(b * s, d)
     weights, ids, aux = mixed_moe.route(p["moe"]["router"], x2, cfg.moe,
                                         train=train)
+    if token_valid is not None:
+        v = token_valid.reshape(b * s)
+        ids = jnp.where(v[:, None], ids, cfg.moe.num_experts)
+        weights = jnp.where(v[:, None], weights, 0.0)
     banks = p["moe"].get("banks")
     if banks is None:
         banks = mixed_moe.train_banks(p["moe"])
@@ -64,18 +76,28 @@ def _ffn_or_moe(p, xn, cfg: ModelConfig, par, train, use_kernel, aux_acc):
                             act=cfg.act, use_kernel=use_kernel)
     for k, v in aux.items():
         aux_acc[k] = aux_acc.get(k, 0.0) + v
-    return y.reshape(b, s, d), aux_acc
+    return y.reshape(b, s, d), aux_acc, ids
 
 
 def decoder_forward(params, cfg: ModelConfig, x, positions, *,
                     caches=None, par=None, train=False, use_kernel=False,
-                    enc_out=None):
-    """x: (B,S,d) embedded input. Returns (y, new_caches, aux)."""
+                    enc_out=None, collect_routes=False):
+    """x: (B,S,d) embedded input. Returns (y, new_caches, aux).
+
+    ``collect_routes=True`` (MoE serving) additionally stacks the per-layer
+    routed expert ids into ``aux["route_ids"]`` (L, T, k) so the engine can
+    drive the runtime expert cache (DESIGN.md §3)."""
+    if collect_routes and cfg.moe is None:
+        raise ValueError("collect_routes needs routed experts")
     # scan carries must have a fixed structure: pre-seed the aux keys
     zero = jnp.zeros((), jnp.float32)
     aux_total: Dict[str, Any] = \
         {"load_balance": zero, "router_z": zero} if (cfg.moe and train) \
         else {}
+    # Serving paths carry pad/idle rows tagged position=-1; keep them out
+    # of the MoE dispatch (train positions are always valid — skip the op).
+    token_valid = (positions >= 0) if (caches is not None
+                                       and cfg.moe is not None) else None
 
     def block(carry, xs):
         x, aux = carry
@@ -91,12 +113,19 @@ def decoder_forward(params, cfg: ModelConfig, x, positions, *,
                 cfg.attention, positions=positions, kv_x=enc_out)
             x = L.constrain(x + h, "residual")
         xn = L.rms_norm(x, p["ffn_norm"]["scale"])
-        h, aux = _ffn_or_moe(p, xn, cfg, par, train, use_kernel, aux)
-        return (L.constrain(x + h, "residual"), aux), new_kv
+        h, aux, ids = _ffn_or_moe(p, xn, cfg, par, train, use_kernel, aux,
+                                  token_valid=token_valid)
+        ys = (new_kv, ids) if collect_routes else new_kv
+        return (L.constrain(x + h, "residual"), aux), ys
 
     body = _maybe_remat(block, cfg)
-    (x, aux_total), new_caches = _scan_or_loop(
+    (x, aux_total), ys = _scan_or_loop(
         body, (x, aux_total), (params["layers"], caches), cfg)
+    if collect_routes:
+        new_caches, route_ids = ys
+        aux_total = dict(aux_total, route_ids=route_ids)
+    else:
+        new_caches = ys
     return x, new_caches, aux_total
 
 

@@ -1,30 +1,42 @@
-"""Adaptive MoE serving engine — the paper's Fig. 1 system.
+"""Adaptive MoE serving engine — continuous batching over fixed decode
+slots (the paper's Fig. 1 system + an iteration-level scheduler,
+DESIGN.md §3).
 
-Pipeline: request queue -> batch assembly -> prefill -> decode loop, with
-the Adaptive Partitioner & Planner deciding {#4-bit experts, residency}
-from the live memory budget + task preference, and *incremental*
-reconfiguration when constraints change.
+Architecture:
 
-Fidelity model on this CPU container (DESIGN.md §2):
-  * model compute is REAL (jitted prefill/decode with the plan's dual-bank
-    mixed-precision params; tokens/s from wall-clock);
-  * host<->HBM expert streaming cost is ACCOUNTED from (a) the measured
-    device_put bandwidth of an expert-sized buffer and (b) the expected
-    miss rate under the paper's uniform-routing assumption (the same
-    assumption eq. 1 rests on). The LRU cache itself is real and unit
-    tested (core/expert_cache.py); on a TPU deployment the fetches run
-    through it per layer.
+  * ``ContinuousScheduler`` (serving/scheduler.py) owns requests: the
+    admission queue, per-slot request state, join/retire at EVERY decode
+    iteration.
+  * this engine owns the model side: one slot-based KV cache of
+    ``max_slots`` rows, a jitted decode step specialized ONCE for the full
+    slot count (idle slots ride along masked by position=-1), and
+    per-bucket jitted prefill-into-slot functions so a new request joins a
+    live batch without recompiling or re-padding it.
+  * the runtime expert path: non-resident experts under the active
+    ``PrecisionPlan`` are fetched through the real
+    ``ExpertCache``/``PrefetchingExpertCache`` (core/expert_cache.py) from
+    the routed expert ids of every decode iteration. ``metrics`` reports
+    the MEASURED ``transfer_s``/``miss_rate_measured`` next to the
+    retained analytical ``transfer_s_est``/``miss_rate`` so the cost model
+    is cross-validated on every run.
 
-Reconfiguration: placement-only changes are graph-free; changing the
-(E4, E16) bank split re-specializes the jitted step (one compile per bank
-signature, cached) — this is the "minimal downtime" path the paper
-describes, measured in metrics["reconfig_s"].
+Fidelity model on this CPU container (DESIGN.md §2): model compute is
+REAL (jitted decode with the plan's dual-bank mixed-precision params);
+expert streaming runs through the real LRU cache with real ``device_put``
+staging — on this single-memory container the jitted banks stay resident,
+so the transfers are measured but not consumed by the matmuls; on a TPU
+deployment the fetched buffers are donated into the step.
+
+Reconfiguration (``configure``) is safe mid-flight: placement-only
+replans apply between decode iterations without touching in-flight
+requests (placement never changes outputs — tested); a bank-split change
+first DRAINS the active slots (finishing their requests, admitting no new
+ones), then re-specializes the step functions — the paper's "minimal
+downtime" path, measured in ``metrics["reconfig_s"]``.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -32,20 +44,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cost_model import HardwareModel
+from repro.core.cost_model import HardwareModel, expert_access_stats
+from repro.core.expert_cache import ExpertCache, PrefetchingExpertCache
 from repro.core.planner import AdaptivePlanner, PlanResult
+from repro.core.precision_plan import DEVICE
 from repro.models.model import Model, apply_precision_plan, build_model
 from repro.serving.sampler import sample
+from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     SchedulerConfig)
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int = 16
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    t_submit: float = 0.0
-    t_done: Optional[float] = None
+__all__ = ["AdaptiveServingEngine", "Request", "measure_host_link_bw"]
 
 
 def measure_host_link_bw(nbytes: int = 1 << 24) -> float:
@@ -58,55 +66,142 @@ def measure_host_link_bw(nbytes: int = 1 << 24) -> float:
     return nbytes / max(time.perf_counter() - t0, 1e-9)
 
 
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two >= n: bounds prefill recompiles to log(max_len)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 class AdaptiveServingEngine:
+    """Continuous-batching adaptive engine. ``max_batch`` (kept for
+    backward compat) is the number of decode slots."""
+
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
                  hw: Optional[HardwareModel] = None,
                  max_batch: int = 8, max_len: int = 256,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 max_active_tokens: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 swap_bytes: Optional[int] = None,
+                 prefetch: bool = False):
         if cfg.moe is None:
             raise ValueError("the adaptive engine serves MoE models")
         self.cfg = cfg
         self.params_train = params        # train-layout master copy
         self.mesh = mesh
-        self.max_batch = max_batch
+        self.max_slots = max_batch
         self.max_len = max_len
         self.use_kernel = use_kernel
         self.hw = hw or HardwareModel(host_link_bw=measure_host_link_bw())
         self.planner = AdaptivePlanner(cfg, hw=self.hw)
         self.model: Model = build_model(cfg, mesh, use_kernel=use_kernel)
-        self.queue: deque = deque()
-        self.done: Dict[int, Request] = {}
-        self._rid = 0
+        if self.model.prefill_into_slot is None:
+            raise ValueError(f"{cfg.arch_id}: family {cfg.family} has no "
+                             "slot-cache decode path")
+        self.cache = self.model.init_cache(self.max_slots, max_len)
+        self.window = int(self.cache["k"].shape[2])
+        self.scheduler = ContinuousScheduler(SchedulerConfig(
+            max_slots=self.max_slots, max_len=max_len,
+            max_prompt_len=self.window,
+            max_active_tokens=max_active_tokens, max_queue=max_queue))
+        # runtime expert streaming: host master store + device LRU swap
+        self._swap_bytes = swap_bytes
+        cache_cls = PrefetchingExpertCache if prefetch else ExpertCache
+        self.expert_cache = cache_cls(
+            self._fetch_expert,
+            capacity_bytes=swap_bytes
+            or 4 * max(cfg.expert_param_bytes(16), 1))
+        self._prefetch = prefetch
+        self._prev_demanded: List[Tuple[int, int]] = []
+        self._host_store: Dict[Tuple[int, int], Any] = {}
+        self._resident: set = set()
+        self._miss_bytes_per_tok = 0.0
+        self._order: Optional[np.ndarray] = None   # bank slot -> expert id
         self._serve_params = None
         self._plan_result: Optional[PlanResult] = None
-        self._compiled: Dict[Tuple[int, int], Any] = {}
+        self._compiled: Dict[Any, Any] = {}
+        self._key = jax.random.key(0)
         self.metrics: Dict[str, Any] = {
             "tokens_generated": 0, "decode_s": 0.0, "prefill_s": 0.0,
-            "transfer_s_est": 0.0, "reconfig_s": 0.0, "reconfigs": 0,
-            "miss_rate": 0.0,
+            "transfer_s": 0.0, "transfer_s_est": 0.0, "stage_s": 0.0,
+            "reconfig_s": 0.0, "reconfigs": 0,
+            "drains": 0, "drain_s": 0.0,
+            "miss_rate": 0.0, "miss_rate_measured": 0.0,
+            "expert_accesses": 0, "expert_fetches": 0,
+            "iterations": 0,
         }
 
     # ------------------------------------------------------------------
-    # Planner integration
+    # Compatibility surface
+    # ------------------------------------------------------------------
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self.scheduler.done
+
+    @property
+    def max_batch(self) -> int:
+        return self.max_slots
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # ------------------------------------------------------------------
+    # Planner integration / mid-flight reconfiguration
     # ------------------------------------------------------------------
     def configure(self, mem_budget_bytes: float, preference: str,
                   num_q_experts: Optional[int] = None) -> PlanResult:
+        """Replan under new constraints; safe to call with requests in
+        flight. Placement-only changes apply immediately (between decode
+        iterations); a bank-split change drains the active slots first."""
         t0 = time.perf_counter()
         result, delta = self.planner.replan(
             mem_budget_bytes, preference, num_q_experts,
-            batch_size=self.max_batch)
+            batch_size=self.max_slots)
         plan = result.plan
         sig = plan.bank_sizes()
         rebuild = (self._plan_result is None
                    or self._plan_result.plan.bank_sizes() != sig
                    or self._plan_result.plan.seed != plan.seed)
+        drain_s = 0.0
         if rebuild:
+            if self.scheduler.num_active:
+                # graceful drain: finish in-flight requests on the OLD
+                # banks; the queue holds until the new plan is live. The
+                # drain is ordinary decoding (counted in decode_s/drain_s),
+                # NOT reconfiguration downtime.
+                self.metrics["drains"] += 1
+                t_drain = time.perf_counter()
+                while self.scheduler.num_active:
+                    self.run_iteration(admit=False)
+                drain_s = time.perf_counter() - t_drain
+                self.metrics["drain_s"] += drain_s
             # bank split changed -> re-specialize the step functions
             self._serve_params = apply_precision_plan(
                 self.params_train, self.cfg, plan)
             self._compiled.clear()
+            self._host_store.clear()
+            self.expert_cache.invalidate()
         self._plan_result = result
-        self.metrics["reconfig_s"] += time.perf_counter() - t0
+        self._order = plan.expert_order()
+        newly_resident = {
+            (li, ei) for li, ei in np.argwhere(plan.location == DEVICE)}
+        if not rebuild:
+            # placement-only: swap entries that moved on-device are now
+            # HBM-resident — drop them from the swap cache
+            self.expert_cache.invalidate(
+                [k for k in self.expert_cache.resident_keys()
+                 if k[:2] in newly_resident])
+        self._resident = newly_resident
+        self._prev_demanded = []     # stale-plan hints must not re-stage
+        hit, self._miss_bytes_per_tok = expert_access_stats(self.cfg, plan)
+        self.metrics["miss_rate"] = 1.0 - hit
+        self.metrics["reconfig_s"] += time.perf_counter() - t0 - drain_s
         self.metrics["reconfigs"] += 1
         if delta is not None:
             self.metrics["last_delta_traffic_gib"] = \
@@ -117,99 +212,225 @@ class AdaptiveServingEngine:
     # Request lifecycle
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
-        self._rid += 1
-        self.queue.append(Request(rid=self._rid,
-                                  prompt=np.asarray(prompt, np.int32),
-                                  max_new_tokens=max_new_tokens,
-                                  t_submit=time.perf_counter()))
-        return self._rid
-
-    def _take_batch(self) -> List[Request]:
-        batch = []
-        while self.queue and len(batch) < self.max_batch:
-            batch.append(self.queue.popleft())
-        return batch
+        return self.scheduler.submit(prompt, max_new_tokens)
 
     def _jit(self, name, fn):
         if name not in self._compiled:
             self._compiled[name] = jax.jit(fn)
         return self._compiled[name]
 
-    def step(self, *, temperature: float = 0.0, seed: int = 0) -> int:
-        """Serve one batch to completion; returns #requests finished."""
-        if self._plan_result is None:
-            raise RuntimeError("configure() the engine first")
-        reqs = self._take_batch()
-        if not reqs:
-            return 0
-        b = len(reqs)
-        s_max = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((b, s_max), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, s_max - len(r.prompt):] = r.prompt   # left-pad
-        batch = {"tokens": jnp.asarray(toks),
-                 "labels": jnp.zeros_like(jnp.asarray(toks))}
-        cache = self.model.init_cache(
-            b, s_max + max(r.max_new_tokens for r in reqs))
+    # -- expert streaming ----------------------------------------------
+    def _fetch_expert(self, key):
+        """Host loader for the expert swap cache: the expert's weights in
+        the precision the active plan assigns it (packed int4 + scales or
+        bf16), staged from the train-layout master copy."""
+        li, ei = key[0], key[1]
+        blob = self._host_store.get((li, ei))
+        if blob is None:
+            t0 = time.perf_counter()
+            moe_p = self.params_train["layers"]["moe"]
+            w = {k: np.asarray(moe_p[k][li, ei])
+                 for k in ("w_gate", "w_up", "w_down")}
+            if self._plan_result.plan.quant[li, ei]:
+                from repro.core.quantization import quantize
+                bits = self._plan_result.plan.bits
+                gs = self._plan_result.plan.group_size
+                blob = {}
+                for k, v in w.items():
+                    qt = quantize(jnp.asarray(v), bits, gs)
+                    blob[k] = {"q": np.asarray(qt.q),
+                               "scales": np.asarray(qt.scales)}
+            else:
+                blob = w
+            self._host_store[(li, ei)] = blob
+            # host-side staging (extraction + on-the-fly quantization) is
+            # real request-latency but neither decode nor transfer time
+            self.metrics["stage_s"] += time.perf_counter() - t0
+        return blob
 
+    def _stream_experts(self, route_ids: np.ndarray, rows: List[int]):
+        """Feed the routed (layer, expert) accesses of one decode
+        iteration through the runtime cache; resident experts are HBM
+        hits, the rest go through the LRU swap space.
+
+        Metric semantics: ``miss_rate`` (analytic) assumes every
+        non-resident access streams (the paper's memoryless model);
+        ``miss_rate_measured`` counts accesses that actually transferred —
+        LRU swap hits don't stream, so measured < estimated quantifies the
+        temporal locality the paper's uniform-routing model ignores.
+        Caveat at smoke scale: ``transfer_s`` can exceed ``transfer_s_est``
+        because the bandwidth term is calibrated on a bulk transfer while
+        smoke-scale experts are small enough that per-``device_put``
+        latency dominates; at paper-scale expert sizes (hundreds of MB)
+        the bandwidth term is the honest model."""
+        st = self.expert_cache.stats
+        if self._prefetch and self._prev_demanded:
+            # temporal-locality prefetch BEFORE this iteration's demand:
+            # decode re-demands most of the previous iteration's experts
+            # (same requests, adjacent tokens); anything evicted since is
+            # re-staged speculatively so the demand below hits.
+            self.expert_cache.hint(self._prev_demanded)
+        order = self._order
+        demanded = set()
+        for li in range(route_ids.shape[0]):
+            for b in rows:
+                for slot_id in route_ids[li, b]:
+                    demanded.add((li, int(order[li, int(slot_id)])))
+        misses0 = st.misses
+        for key in sorted(demanded):
+            self.metrics["expert_accesses"] += 1
+            if key in self._resident:
+                continue
+            self.expert_cache.get(key)
+        self.metrics["expert_fetches"] += st.misses - misses0
+        self._prev_demanded = [k for k in sorted(demanded)
+                               if k not in self._resident]
+        self.metrics["transfer_s"] = st.transfer_s
+        if self.metrics["expert_accesses"]:
+            self.metrics["miss_rate_measured"] = \
+                self.metrics["expert_fetches"] \
+                / self.metrics["expert_accesses"]
+
+    # -- iteration-level serving ----------------------------------------
+    def _prefill_slot(self, slot: int, req: Request,
+                      temperature: float) -> Optional[int]:
+        """Join ``req`` into ``slot``; returns its rid if it already
+        retired (max_new_tokens == 1 — the prefill logit is the whole
+        generation), else None."""
+        s = len(req.prompt)
+        sb = min(_bucket(s), self.window)
+        toks = np.zeros((1, sb), np.int32)
+        pos = np.full((1, sb), -1, np.int32)
+        toks[0, :s] = req.prompt
+        pos[0, :s] = np.arange(s)
+        fn = self._jit(("prefill_slot", sb), self.model.prefill_into_slot)
         t0 = time.perf_counter()
-        logits, cache = self._jit("prefill", self.model.prefill)(
-            self._serve_params, batch, cache)
+        logits, self.cache = fn(self._serve_params, self.cache,
+                                jnp.asarray(toks), jnp.asarray(pos),
+                                jnp.int32(slot), jnp.int32(s - 1))
         jax.block_until_ready(logits)
         self.metrics["prefill_s"] += time.perf_counter() - t0
-
-        key = jax.random.key(seed)
-        positions = jnp.full((b,), s_max, jnp.int32)
-        tok = sample(logits, key=key, temperature=temperature,
-                     vocab_size=self.cfg.vocab_size)
-        n_steps = max(r.max_new_tokens for r in reqs)
-        decode = self._jit("decode", self.model.decode_step)
-        t0 = time.perf_counter()
-        for step_i in range(n_steps):
-            for i, r in enumerate(reqs):
-                if step_i < r.max_new_tokens:
-                    r.out_tokens.append(int(tok[i]))
-            if step_i == n_steps - 1:
-                break
-            key, sub = jax.random.split(key)
-            logits, cache = decode(self._serve_params, cache,
-                                   tok[:, None], positions)
-            tok = sample(logits, key=sub, temperature=temperature,
-                         vocab_size=self.cfg.vocab_size)
-            positions = positions + 1
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
-        self.metrics["decode_s"] += dt
-        ntok = sum(min(n_steps, r.max_new_tokens) for r in reqs)
-        self.metrics["tokens_generated"] += ntok
-
-        # expected streaming cost under the plan (paper's uniform-routing
-        # assumption; see module docstring)
-        from repro.core.cost_model import expert_access_stats
-        hit, miss_bytes_per_tok = expert_access_stats(
-            self.cfg, self._plan_result.plan)
-        self.metrics["miss_rate"] = 1.0 - hit
-        self.metrics["transfer_s_est"] += \
-            ntok / b * miss_bytes_per_tok / self.hw.host_link_bw
-
+        self._key, sub = jax.random.split(self._key)
+        tok = int(sample(logits, key=sub, temperature=temperature,
+                         vocab_size=self.cfg.vocab_size)[0])
         now = time.perf_counter()
-        for r in reqs:
-            r.t_done = now
-            self.done[r.rid] = r
-        return len(reqs)
+        req.out_tokens.append(tok)
+        req.t_first = now
+        self.metrics["tokens_generated"] += 1
+        st = self.scheduler.slots[slot]
+        st.last_token = tok
+        if req.done():                      # max_new_tokens == 1
+            self.scheduler.retire(slot, now=now)
+            self.cache = self._jit("reset_slot", self.model.reset_slot)(
+                self.cache, jnp.int32(slot))
+            return req.rid
+        return None
+
+    def run_iteration(self, *, admit: bool = True,
+                      temperature: float = 0.0) -> List[int]:
+        """One scheduler iteration: join new requests into free slots,
+        decode ONE token for every active slot, retire finished requests.
+        Returns the rids retired this iteration."""
+        if self._plan_result is None:
+            raise RuntimeError("configure() the engine first")
+        retired: List[int] = []
+        if admit:
+            for slot, req in self.scheduler.admit():
+                rid = self._prefill_slot(slot, req, temperature)
+                if rid is not None:
+                    retired.append(rid)
+        active = self.scheduler.active()
+        if not active:
+            return retired
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        pos = np.full((self.max_slots,), -1, np.int32)  # idle rows masked
+        for i, st in active:
+            toks[i, 0] = st.last_token
+            pos[i] = st.position
+        decode = self._jit("decode", self.model.decode_step_routed)
+        t0 = time.perf_counter()
+        logits, self.cache, route_ids = decode(
+            self._serve_params, self.cache, jnp.asarray(toks),
+            jnp.asarray(pos))
+        jax.block_until_ready(logits)
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["iterations"] += 1
+        self._key, sub = jax.random.split(self._key)
+        new_toks = np.asarray(sample(logits, key=sub,
+                                     temperature=temperature,
+                                     vocab_size=self.cfg.vocab_size))
+        self._stream_experts(np.asarray(route_ids), [i for i, _ in active])
+        # analytical cross-check: expected UNIQUE streamed bytes of this
+        # iteration under uniform routing. n_active rows draw
+        # d = top_k * n_active experts per layer; each off-device expert
+        # streams iff drawn at least once, so the per-token expectation
+        # (miss_bytes_per_tok = sum_offdev size/E * top_k) is rescaled by
+        # E * (1 - (1-1/E)^d) / top_k. Measured below this estimate then
+        # isolates CROSS-iteration locality (the LRU's contribution).
+        e = self.cfg.moe.num_experts
+        d = self.cfg.moe.top_k * len(active)
+        uniq = e * (1.0 - (1.0 - 1.0 / e) ** d)
+        self.metrics["transfer_s_est"] += \
+            self._miss_bytes_per_tok * uniq / self.cfg.moe.top_k \
+            / self.hw.host_link_bw
+        now = time.perf_counter()
+        for i, st in active:
+            st.req.out_tokens.append(int(new_toks[i]))
+            self.metrics["tokens_generated"] += 1
+            st.position += 1
+            st.last_token = int(new_toks[i])
+            if st.req.done():
+                self.scheduler.retire(i, now=now)
+                self.cache = self._jit(
+                    "reset_slot", self.model.reset_slot)(
+                        self.cache, jnp.int32(i))
+                retired.append(st.req.rid)
+        return retired
+
+    def step(self, *, temperature: float = 0.0, seed: Optional[int] = None
+             ) -> int:
+        """Serve until the queue and all slots are empty; returns the
+        number of requests finished by this call. (Compatibility wrapper —
+        iteration-level control lives in ``run_iteration``.)"""
+        if self._plan_result is None:
+            raise RuntimeError("configure() the engine first")
+        if seed is not None:
+            self._key = jax.random.key(seed)
+        finished = 0
+        while self.scheduler.has_work():
+            finished += len(self.run_iteration(temperature=temperature))
+        return finished
 
     # ------------------------------------------------------------------
-    def throughput_tokens_per_s(self, include_transfer: bool = True) -> float:
+    # Reporting
+    # ------------------------------------------------------------------
+    def throughput_tokens_per_s(self, include_transfer: bool = True
+                                ) -> float:
         t = self.metrics["decode_s"]
         if include_transfer:
-            t += self.metrics["transfer_s_est"]
+            t += self.metrics["transfer_s"]
         return self.metrics["tokens_generated"] / max(t, 1e-9)
+
+    def latency_percentiles(self, qs=(50, 95)) -> Dict[str, float]:
+        return self.scheduler.latency_percentiles(qs)
+
+    def reset_counters(self):
+        """Zero the throughput counters (between benchmark operating
+        points); plan/reconfig counters are preserved."""
+        for k in ("tokens_generated", "decode_s", "prefill_s",
+                  "transfer_s", "transfer_s_est", "stage_s",
+                  "expert_accesses", "expert_fetches", "iterations"):
+            self.metrics[k] = 0 if isinstance(self.metrics[k], int) else 0.0
+        self.expert_cache.stats.reset()
 
     def summary(self) -> str:
         p = self._plan_result
+        lat = self.latency_percentiles()
         return (f"plan[{p.preference} E4={p.plan.num_q_experts}"
                 f"/{p.plan.quant.size} res={p.plan.resident_fraction():.0%}]"
                 f" gen={self.metrics['tokens_generated']}tok"
                 f" decode={self.metrics['decode_s']:.2f}s"
-                f" +transfer~{self.metrics['transfer_s_est']:.2f}s"
-                f" -> {self.throughput_tokens_per_s():.2f} tok/s")
+                f" +transfer={self.metrics['transfer_s']:.3f}s"
+                f" (est {self.metrics['transfer_s_est']:.3f}s)"
+                f" -> {self.throughput_tokens_per_s():.2f} tok/s"
+                f" p50={lat['p50']*1e3:.0f}ms p95={lat['p95']*1e3:.0f}ms")

@@ -1,0 +1,191 @@
+"""Iteration-level request scheduler for the continuous-batching engine
+(DESIGN.md §3).
+
+The engine owns a FIXED number of decode slots (rows of one slot-based KV
+cache); the scheduler owns everything about *requests*: the admission
+queue, per-slot request state, and the join/retire decisions taken at
+EVERY decode iteration — a short request retires and frees its slot while
+its neighbours keep decoding, and the next queued request joins mid-batch
+via a prefill-into-slot (no recompile, no re-padding: the decode step is
+jitted once for the full slot count).
+
+Admission policy (``SchedulerConfig``):
+  * ``max_slots``  — concurrent requests (the decode batch width);
+  * ``max_len``    — per-slot KV window: prompt + max_new_tokens must fit;
+  * ``max_active_tokens`` — optional cap on the summed token claim
+    (prompt + max_new) of all in-flight requests, the knob that trades
+    batch occupancy against KV memory under a tight budget.
+
+The scheduler is pure bookkeeping (no jax) and unit-testable on its own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None    # joined a slot (prefill ran)
+    t_first: Optional[float] = None    # first output token sampled
+    t_done: Optional[float] = None
+
+    @property
+    def token_claim(self) -> int:
+        """KV-window footprint this request may grow to."""
+        return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (queueing + prefill)."""
+        if self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Runtime state of one decode slot."""
+    req: Request
+    position: int          # absolute position of the NEXT token to decode
+    last_token: int        # token fed to the next decode step
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_slots: int = 8
+    max_len: int = 256                 # prompt + max_new_tokens cap
+    # Prompt cap — the KV ring window. For sliding-window models this is
+    # smaller than max_len: generation may extend PAST the window (the
+    # ring wraps, SWA masking handles it) but a prompt must fit in one
+    # prefill write.
+    max_prompt_len: Optional[int] = None
+    max_queue: Optional[int] = None
+    max_active_tokens: Optional[int] = None
+
+
+class ContinuousScheduler:
+    """Admission queue + slot table. The engine calls, per iteration:
+
+        for slot, req in sched.admit(): ...prefill req into slot...
+        for slot, st in sched.active(): ...decode one token...
+        sched.retire(slot)              # when st.req.done()
+    """
+
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[SlotState]] = [None] * cfg.max_slots
+        self.done: Dict[int, Request] = {}
+        self._rid = 0
+
+    # -- submission --------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               now: Optional[float] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) < 1:
+            raise ValueError("prompt must hold at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the prefill "
+                             "logit already yields one token)")
+        if len(prompt) + max_new_tokens > self.cfg.max_len:
+            raise ValueError(
+                f"request needs {len(prompt)}+{max_new_tokens} tokens; "
+                f"slot window is {self.cfg.max_len}")
+        if self.cfg.max_prompt_len is not None \
+                and len(prompt) > self.cfg.max_prompt_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the prefill "
+                f"window {self.cfg.max_prompt_len}")
+        if self.cfg.max_queue is not None \
+                and len(self.queue) >= self.cfg.max_queue:
+            raise RuntimeError("admission queue full")
+        self._rid += 1
+        self.queue.append(Request(
+            rid=self._rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            t_submit=time.perf_counter() if now is None else now))
+        return self._rid
+
+    # -- introspection -----------------------------------------------------
+    def active(self) -> List[Tuple[int, SlotState]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def active_token_claim(self) -> int:
+        return sum(s.req.token_claim for s in self.slots if s is not None)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.num_active > 0
+
+    # -- join / retire -----------------------------------------------------
+    def admit(self, now: Optional[float] = None
+              ) -> List[Tuple[int, Request]]:
+        """Pop queued requests into free slots (FIFO) subject to the token
+        budget; returns [(slot, request)] for the engine to prefill."""
+        joined: List[Tuple[int, Request]] = []
+        claim = self.active_token_claim
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            nxt = self.queue[0]
+            if self.cfg.max_active_tokens is not None and \
+                    claim + nxt.token_claim > self.cfg.max_active_tokens \
+                    and self.num_active > 0:
+                break                      # wait for retirements
+            req = self.queue.popleft()
+            req.t_admit = time.perf_counter() if now is None else now
+            # position of the first decode step = prompt length; the first
+            # output token comes from the prefill logits (engine fills it)
+            self.slots[slot] = SlotState(req=req,
+                                         position=len(req.prompt),
+                                         last_token=-1)
+            claim += req.token_claim
+            joined.append((slot, req))
+        return joined
+
+    def retire(self, slot: int, now: Optional[float] = None) -> Request:
+        st = self.slots[slot]
+        assert st is not None, f"slot {slot} already free"
+        st.req.t_done = time.perf_counter() if now is None else now
+        self.slots[slot] = None
+        self.done[st.req.rid] = st.req
+        return st.req
+
+    def drain_queue(self) -> List[Request]:
+        """Remove all queued (not yet admitted) requests; returns them."""
+        out = list(self.queue)
+        self.queue.clear()
+        return out
+
+    # -- metrics -----------------------------------------------------------
+    def latency_percentiles(self, qs=(50, 95)) -> Dict[str, float]:
+        lats = [r.latency_s for r in self.done.values()
+                if r.latency_s is not None]
+        if not lats:
+            return {f"p{q}": 0.0 for q in qs}
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}

@@ -1,0 +1,88 @@
+"""Test bootstrap.
+
+This container has no ``hypothesis`` wheel and nothing may be pip-installed,
+so when the real package is missing we register a minimal deterministic
+stand-in: ``@given`` degrades to N seeded examples per test (seeded from the
+test's qualified name, so runs are reproducible). With the real package
+installed the stub never activates.
+"""
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when present)
+except ImportError:
+
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    def _span(min_value, max_value, args):
+        if args:                      # positional (min, max) call style
+            min_value, max_value = args
+        return min_value, max_value
+
+    def integers(min_value=0, max_value=None, *args):
+        lo, hi = _span(min_value, max_value, args)
+        hi = (1 << 31) - 1 if hi is None else hi
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def floats(min_value=0.0, max_value=1.0, *args, **_):
+        lo, hi = _span(min_value, max_value, args)
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    def lists(elem, min_size=0, max_size=None, **_):
+        hi = min_size + 10 if max_size is None else max_size
+        return _Strategy(lambda rng: [elem.draw(rng) for _ in
+                                      range(rng.randint(min_size, hi))])
+
+    def settings(**kw):
+        def deco(fn):
+            merged = {**getattr(fn, "_hyp_settings", {}), **kw}
+            fn._hyp_settings = merged
+            return fn
+        return deco
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            # NB: no functools.wraps — __wrapped__ would make pytest
+            # introspect fn's signature and hunt fixtures for drawn args
+            def wrapper(*args, **kwargs):
+                conf = {**getattr(fn, "_hyp_settings", {}),
+                        **getattr(wrapper, "_hyp_settings", {})}
+                n = conf.get("max_examples", 10)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = [g.draw(rng) for g in gargs]
+                    dkw = {k: g.draw(rng) for k, g in gkwargs.items()}
+                    fn(*args, *drawn, **kwargs, **dkw)
+            for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+                setattr(wrapper, attr, getattr(fn, attr, None))
+            wrapper._hyp_settings = getattr(fn, "_hyp_settings", {})
+            return wrapper
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name, _fn in (("integers", integers), ("floats", floats),
+                       ("sampled_from", sampled_from), ("tuples", tuples),
+                       ("lists", lists)):
+        setattr(_st, _name, _fn)
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow="too_slow")
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -24,6 +24,7 @@ from repro.core import mixed_moe as MM
 from repro.configs.base import MoEConfig
 
 mesh = jax.make_mesh((4, 4), ("data", "model"))
+from repro.launch.mesh import use_mesh
 moe = MoEConfig(num_experts=8, top_k=2, d_ff_expert=64, capacity_factor=8.0)
 d, t = 32, 16
 ks = jax.random.split(jax.random.key(0), 5)
@@ -39,7 +40,7 @@ banks16 = {"q4": None,
            "f16": {k: params[k] for k in ("w_gate", "w_up", "w_down")}}
 w, ids, _ = MM.route(params["router"], x, moe, train=False)
 outs = {}
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     for fsdp in (None, "data"):
         par = MM.MoEParallelism(mesh=mesh, dp_axes=("data",),
                                 fsdp_axis=fsdp)
