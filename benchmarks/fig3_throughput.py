@@ -76,31 +76,50 @@ def analytic_surface(hw: HardwareModel, tag: str) -> List[Dict]:
 
 
 def measured_small_scale(quick: bool = False) -> List[Dict]:
+    """Declarative-surface measured mode (DESIGN.md §9): each operating
+    point is a QoSTarget and the engine picks the frontier point."""
+    import math
+    from repro.serving.api import EngineConfig, QoSTarget, build_engine
     from repro.serving.driver import drive_poisson
-    from repro.serving.engine import AdaptiveServingEngine
+    from repro.serving.qos import QoSController
     cfg, params, _ = common.get_trained_model()
     rng = np.random.default_rng(0)
     rows = []
-    engine = AdaptiveServingEngine(cfg, params, max_batch=4, max_len=96)
+    engine = build_engine(cfg, params,
+                          EngineConfig(max_slots=4, max_len=96))
+    controller = QoSController(engine)
     size16 = common.model_size_bytes(cfg, 0)
     size4 = common.model_size_bytes(cfg, cfg.num_layers
                                     * cfg.moe.num_experts)
     ne = cfg.non_expert_bytes()
-    # budgets relative to the EXPERT bytes (non-expert floor always fits)
-    budgets = [("all_resident_fp16", size16 * 1.05, 0.0),
-               ("all_resident_q4", size4 * 1.3, 1.0),
-               ("offload_half", ne + (size4 - ne) * 0.5, 1.0)]
-    for name, budget, frac in budgets:
-        nq = int(round(frac * cfg.num_layers * cfg.moe.num_experts))
-        engine.configure(budget, "quality", nq)
+    # budgets relative to the EXPERT bytes (non-expert floor always
+    # fits); max_quality_loss=0 pins the bf16 point, inf tokens/s chases
+    # the fastest (all-4-bit) point under the budget
+    targets = [
+        ("all_resident_fp16",
+         QoSTarget(mem_budget_bytes=size16 * 1.05, max_quality_loss=0.0,
+                   min_tokens_per_s=math.inf)),
+        ("all_resident_q4",
+         QoSTarget(mem_budget_bytes=size4 * 1.3,
+                   min_tokens_per_s=math.inf)),
+        ("offload_half",
+         QoSTarget(mem_budget_bytes=ne + (size4 - ne) * 0.5,
+                   min_tokens_per_s=math.inf)),
+    ]
+    for name, target in targets:
+        point = controller.set_target(target)
         rids = drive_poisson(engine, rng,
                              n_requests=4 if quick else 8,
-                             mean_gap_s=0.05)
+                             mean_gap_s=0.05,
+                             on_iteration=controller.step)
         lats = [engine.done[r].latency_s for r in rids]
+        plan = engine.planner.current.plan
         rows.append({
             "bench": "fig3_measured", "point": name,
-            "budget_mb": round(budget / 1e6, 2),
-            "frac_q": frac,
+            "slo": target.describe(),
+            "selected": point.summary(),
+            "budget_mb": round(target.mem_budget_bytes / 1e6, 2),
+            "frac_q": round(plan.num_q_experts / plan.quant.size, 3),
             "miss_rate_est": round(engine.metrics["miss_rate"], 3),
             "miss_rate_measured": round(
                 engine.metrics["miss_rate_measured"], 3),

@@ -1,16 +1,21 @@
 """Pareto explorer — the paper's core contribution as a picture.
 
-Sweeps the planner's quality knob (Num_E4: how many experts are 4-bit)
-under several memory budgets for the REAL Mixtral-8x7B config and prints
-the (throughput, quality-proxy) design space with its Pareto frontier —
-the fine-grained configuration space of paper Figs. 2+3.
+Builds the first-class :class:`ParetoFrontier` (core/pareto.py) over the
+full (Num_E4 × residency) configuration space for the REAL Mixtral-8x7B
+config, prints the budget-constrained design space with its Pareto
+frontier — the fine-grained configuration space of paper Figs. 2+3 — and
+then resolves a few declarative :class:`QoSTarget` queries against it,
+the way a deployment would (DESIGN.md §9).
 
     PYTHONPATH=src python examples/pareto_explorer.py [--budget-gb 40]
+        [--min-tps 5] [--max-ppl-x 1.05]
 """
 import argparse
+import math
 
 from repro.configs import get_config
 from repro.core.cost_model import HardwareModel
+from repro.core.pareto import InfeasibleTarget, QoSTarget
 from repro.core.planner import AdaptivePlanner
 
 
@@ -24,24 +29,28 @@ def main():
     ap.add_argument("--budget-gb", type=float, default=40.0)
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--min-tps", type=float, default=None,
+                    help="demo QoSTarget: minimum tokens/s")
+    ap.add_argument("--max-ppl-x", type=float, default=None,
+                    help="demo QoSTarget: perplexity ceiling, e.g. 1.05")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     planner = AdaptivePlanner(cfg, hw=HardwareModel())
-    results, pareto = planner.sweep(args.budget_gb * 1e9,
-                                    batch_size=args.batch)
+    frontier = planner.frontier(batch_size=args.batch)
+    budget = args.budget_gb * 1e9
+
+    results, pareto = planner.sweep(budget, batch_size=args.batch)
     lo = min(r.qos.tokens_per_s for r in results)
     hi = max(r.qos.tokens_per_s for r in results)
 
     print(f"{cfg.arch_id} @ {args.budget_gb} GB budget "
-          f"(v5e-chip model, batch={args.batch})")
+          f"(v5e-chip model, batch={args.batch}); frontier holds "
+          f"{len(frontier.points)} dominant of "
+          f"{len(frontier.all_points)} enumerated configs")
     print(f"{'E4':>5} {'resident':>8} {'tok/s':>8} {'ppl-proxy':>9}  "
           f"throughput")
-    last_nq = None
     for i, r in enumerate(results):
-        if r.plan.num_q_experts == last_nq:
-            continue    # balanced rounding maps nearby Num_E4 to one plan
-        last_nq = r.plan.num_q_experts
         mark = " *" if i in pareto else "  "
         q = r.qos
         print(f"{r.plan.num_q_experts:5d} "
@@ -50,13 +59,31 @@ def main():
               f"|{bar(q.tokens_per_s, lo, hi)}|{mark}")
     print("* = Pareto-optimal (throughput vs quality)")
 
+    # declarative queries: what a tenant actually asks for (DESIGN.md §9)
+    targets = [
+        QoSTarget(min_tokens_per_s=args.min_tps,
+                  max_quality_loss=(args.max_ppl_x - 1.0
+                                    if args.max_ppl_x else None),
+                  mem_budget_bytes=budget),
+        QoSTarget(min_tokens_per_s=math.inf, mem_budget_bytes=budget),
+        QoSTarget(max_quality_loss=0.0, min_tokens_per_s=1.0,
+                  mem_budget_bytes=budget),
+    ]
+    print("\ndeclarative queries against the frontier:")
+    for t in targets:
+        try:
+            p = frontier.select(t)
+            print(f"  [{t.describe()}] -> {p.summary()}")
+        except InfeasibleTarget as e:
+            print(f"  [{t.describe()}] -> infeasible: {e}")
+
     # reconfiguration cost between adjacent Pareto points (paper §3:
     # partial reconfig instead of full reload)
     pts = [results[i] for i in pareto]
     if len(pts) >= 2:
         a, b = pts[0], pts[-1]
         planner.current = a
-        _, delta = planner.replan(args.budget_gb * 1e9, "quality",
+        _, delta = planner.replan(budget, "quality",
                                   b.plan.num_q_experts)
         print(f"\nreconfig {a.plan.num_q_experts}->{b.plan.num_q_experts} "
               f"4-bit experts: {len(delta['to_quantize'])} quantize, "

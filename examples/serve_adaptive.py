@@ -1,35 +1,42 @@
 """Adaptive continuous-batching serving under a CHANGING memory budget —
-the paper's Fig. 1 scenario end-to-end: a multi-tenant job manager shrinks
-and grows this job's HBM allocation while Poisson-arriving requests stream
-in. Requests join and leave the fixed decode slots at every iteration;
-placement-only replans apply MID-FLIGHT (between decode iterations,
-in-flight requests keep their outputs), bank-split changes drain the
-slots gracefully first.
+the paper's Fig. 1 scenario end-to-end, on the declarative QoS surface
+(DESIGN.md §9): a multi-tenant job manager renegotiates this job's
+QoSTarget (HBM budget + tokens/s floor + quality ceiling) while
+Poisson-arriving requests stream in. Each phase the QoSController
+re-selects a Pareto-frontier point and keeps walking it between decode
+iterations; placement-only moves apply MID-FLIGHT (in-flight requests
+keep their outputs), bank-split moves drain the slots gracefully first.
 
     PYTHONPATH=src python examples/serve_adaptive.py
 """
+import math
 import time
 
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.models.model import build_model
+from repro.serving.api import EngineConfig, QoSTarget, RequestSLO, build_engine
 from repro.serving.driver import drive_poisson
-from repro.serving.engine import AdaptiveServingEngine
+from repro.serving.qos import QoSController
 
-# (time-ordered) budget schedule as fractions of the full bf16 model size,
-# alternating preference — a synthetic multi-tenant trace. Each point is
-# applied while the previous point's tail requests are still decoding.
+# (time-ordered) QoSTarget schedule; budgets as fractions of the full
+# bf16 model size — a synthetic multi-tenant renegotiation trace. Each
+# point is applied while the previous point's tail requests are still
+# decoding.
 TRACE = [
-    (1.20, "throughput", None),   # plenty of memory: all-resident, some bf16
-    (0.50, "throughput", None),   # squeezed: quantize + offload
-    (0.50, "quality", 0),         # same memory, quality-first: 0 quantized
-    (0.80, "quality", 0),         # more memory, SAME bank split: this one
-                                  # is placement-only — applied mid-flight
-                                  # with zero drain, in-flight requests
-                                  # keep decoding
-    (0.35, "throughput", None),   # heavy pressure
-    (1.00, "quality", 16),        # recovered: user allows 16 4-bit experts
+    # plenty of memory, no quality loss tolerated
+    dict(frac=1.20, max_quality_loss=0.0, min_tokens_per_s=math.inf),
+    # squeezed: chase speed, quality unconstrained
+    dict(frac=0.50, min_tokens_per_s=math.inf),
+    # same memory, quality-first: cheapest lossless point
+    dict(frac=0.50, max_quality_loss=0.0, min_tokens_per_s=1.0),
+    # more memory, same quality target — placement-only move, zero drain
+    dict(frac=0.80, max_quality_loss=0.0, min_tokens_per_s=1.0),
+    # heavy pressure
+    dict(frac=0.35, min_tokens_per_s=math.inf),
+    # recovered: modest tokens/s floor, mild quality budget
+    dict(frac=1.00, max_quality_loss=0.02, min_tokens_per_s=5.0),
 ]
 
 REQUESTS_PER_PHASE = 6
@@ -43,37 +50,48 @@ def main():
         num_layers=4, d_model=128, vocab_size=512, vocab_pad_multiple=128)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    engine = AdaptiveServingEngine(cfg, params, max_batch=4, max_len=64)
+    engine = build_engine(cfg, params,
+                          EngineConfig(max_slots=4, max_len=64))
+    controller = QoSController(engine)
     full = engine.planner.size_ne + \
         engine.planner.num_experts_total * engine.planner.size_e16
     rng = np.random.default_rng(0)
 
     print(f"model {cfg.arch_id}: full bf16 size {full/1e6:.1f} MB, "
           f"{engine.planner.num_experts_total} experts, "
-          f"{engine.max_slots} decode slots")
-    for i, (frac, pref, nq) in enumerate(TRACE):
-        budget = full * frac
+          f"{engine.max_slots} decode slots, frontier of "
+          f"{len(engine.frontier.points)} points")
+    for i, ph in enumerate(TRACE):
+        target = QoSTarget(
+            mem_budget_bytes=full * ph["frac"],
+            min_tokens_per_s=ph.get("min_tokens_per_s"),
+            max_quality_loss=ph.get("max_quality_loss"))
         in_flight = engine.scheduler.num_active
         phase_start = time.perf_counter()   # drain completions count here
         reconfig0 = engine.metrics["reconfig_s"]
-        res = engine.configure(budget, pref, nq)   # mid-flight replan
+        point = controller.set_target(target)   # mid-flight renegotiation
         # the engine's own accounting: replan/re-specialization time only
         # (a graceful drain is ordinary decoding, reported separately)
         dt = engine.metrics["reconfig_s"] - reconfig0
         d = engine.metrics.get("last_delta_traffic_gib", 0.0)
-        print(f"\n[t={i}] budget {budget/1e6:7.1f} MB pref={pref:10s} "
-              f"-> {res.summary()}")
+        print(f"\n[t={i}] target[{target.describe()}]"
+              f" -> {point.summary()}")
         print(f"      reconfig {dt*1e3:.0f} ms with {in_flight} request(s)"
               f" in flight (delta traffic {d:.3f} GiB,"
               f" drains so far {engine.metrics['drains']})")
-        # Poisson arrival process for this phase; the LAST phase runs to
-        # empty, earlier phases leave their tail in flight so the next
-        # configure() exercises mid-flight reconfiguration.
+        # Poisson arrival process for this phase, every other request at
+        # elevated priority with a deadline; the QoSController steps
+        # between iterations. The LAST phase runs to empty, earlier
+        # phases leave their tail in flight so the next set_target
+        # exercises mid-flight reconfiguration.
         drive_poisson(engine, rng,
                       n_requests=REQUESTS_PER_PHASE,
                       mean_gap_s=MEAN_GAP_S,
                       prompt_len=lambda r: int(r.integers(6, 16)),
                       max_new_tokens=lambda r: int(r.integers(4, 13)),
+                      slo=lambda r: RequestSLO(priority=int(r.integers(2)),
+                                               deadline_s=20.0),
+                      on_iteration=controller.step,
                       drain=(i == len(TRACE) - 1))
         # latency over requests COMPLETED during this phase only
         lats = [r.latency_s for r in engine.done.values()
@@ -81,17 +99,21 @@ def main():
         lat = {q: float(np.percentile(lats, q)) if lats else 0.0
                for q in (50, 95)}
         print(f"      {len(engine.done)} done total | {engine.summary()}")
+        print(f"      {controller.summary()}")
         print(f"      phase latency p50 {lat[50]*1e3:.0f} ms "
               f"p95 {lat[95]*1e3:.0f} ms | "
               f"expert fetches {engine.metrics['expert_fetches']}"
               f"/{engine.metrics['expert_accesses']} accesses")
 
+    met = [r.deadline_met for r in engine.done.values()
+           if r.deadline_met is not None]
     m = engine.metrics
     print(f"\ntotals: {m['tokens_generated']} tokens over "
           f"{m['iterations']} iterations, "
           f"{m['reconfigs']} reconfigs ({m['reconfig_s']:.2f}s, "
           f"{m['drains']} drains), decode {m['decode_s']:.2f}s, "
-          f"transfer {m['transfer_s']:.3f}s (est {m['transfer_s_est']:.3f}s)")
+          f"transfer {m['transfer_s']:.3f}s (est {m['transfer_s_est']:.3f}s); "
+          f"deadlines met {sum(met)}/{len(met)}")
 
 
 if __name__ == "__main__":

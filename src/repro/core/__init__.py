@@ -5,6 +5,7 @@ Layers:
   precision_plan — per-expert {bits, placement} table (balanced-random)
   planner        — eq.(1) partitioner, budget->plan, incremental reconfig
   cost_model     — analytic tokens/s + quality proxy (Fig. 3 model)
+  pareto         — declarative QoS targets over the config-space frontier
   expert_cache   — LRU device cache + swap space (+ speculative prefetch)
   mixed_moe      — dual-bank (int4|bf16) MoE layer, EP/TP dispatch
 """
@@ -18,5 +19,8 @@ from repro.core.precision_plan import (  # noqa: F401
 from repro.core.planner import AdaptivePlanner, PlanResult, num_e16_eq1  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     HardwareModel, QoSEstimate, estimate_qos, pareto_frontier,
+)
+from repro.core.pareto import (  # noqa: F401
+    FrontierPoint, InfeasibleTarget, ParetoFrontier, QoSTarget,
 )
 from repro.core.expert_cache import ExpertCache, PrefetchingExpertCache  # noqa: F401

@@ -1,0 +1,259 @@
+"""Pareto frontier over the MoP configuration space (DESIGN.md §9).
+
+The paper's planner exposes the *mechanism* — (Num_E4, residency) knobs —
+but a serving deployment declares *targets*: "at least X tokens/s, at most
+Y% perplexity loss, inside Z bytes of HBM". This module is the bridge:
+
+* :class:`ParetoFrontier` enumerates the full (num_q_experts × residency
+  split) configuration space through the analytic cost model ONCE per
+  (model, hardware, batch) — the enumeration is what the paper calls the
+  fine-grained configuration space of Figs. 2+3 — and keeps the dominant
+  set in the three QoS axes (tokens/s ↑, quality_proxy ↓, device bytes ↓).
+* :class:`QoSTarget` is the declarative constraint a caller states instead
+  of knob values; :meth:`ParetoFrontier.select` resolves it to one
+  :class:`FrontierPoint` with deterministic tie-breaking: among points
+  meeting the target, prefer quality, then the lowest device footprint.
+* the runtime :class:`~repro.serving.qos.QoSController` walks *adjacent*
+  frontier points when the measured QoS drifts outside the target band.
+
+Every ``FrontierPoint`` carries the concrete ``PrecisionPlan`` so applying
+a point is exactly the planner's ``plan(device_bytes, "quality", nq)``
+result — the frontier and the imperative path can never disagree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core import cost_model
+from repro.core.cost_model import HardwareModel, QoSEstimate
+from repro.core.precision_plan import PrecisionPlan, balanced_random_plan
+
+__all__ = [
+    "QoSTarget", "FrontierPoint", "ParetoFrontier", "InfeasibleTarget",
+]
+
+
+class InfeasibleTarget(ValueError):
+    """No enumerated configuration satisfies the target's hard constraints."""
+
+
+def _fmt_bytes(n: float) -> str:
+    return (f"{n / 2**30:.2f}GiB" if n >= 2**30
+            else f"{n / 2**20:.2f}MiB")
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSTarget:
+    """Declarative service-level objective for one serving deployment.
+
+    All fields are optional; unset means unconstrained. ``min_tokens_per_s``
+    is a *soft* objective (the controller chases it; ``select`` falls back
+    to the fastest feasible point when nothing meets it — best effort),
+    while ``mem_budget_bytes`` and ``max_quality_loss`` are *hard*
+    constraints (a point violating them is never selected).
+
+    ``min_tokens_per_s=math.inf`` is the idiom for "as fast as possible
+    under the constraints" (the old ``preference="throughput"``).
+    """
+    min_tokens_per_s: Optional[float] = None
+    # max tolerated perplexity increase vs all-16-bit, fractional:
+    # 0.05 == "at most +5% perplexity" (quality_proxy <= 1.05).
+    max_quality_loss: Optional[float] = None
+    mem_budget_bytes: Optional[float] = None
+    # p95 per-request latency ceiling; no analytic predictor exists for it,
+    # so only the runtime QoSController acts on this field.
+    max_p95_latency_s: Optional[float] = None
+
+    def describe(self) -> str:
+        parts = []
+        if self.min_tokens_per_s is not None:
+            parts.append("tok/s>=inf" if math.isinf(self.min_tokens_per_s)
+                         else f"tok/s>={self.min_tokens_per_s:g}")
+        if self.max_quality_loss is not None:
+            parts.append(f"ppl<=x{1.0 + self.max_quality_loss:.3f}")
+        if self.mem_budget_bytes is not None:
+            parts.append(f"mem<={_fmt_bytes(self.mem_budget_bytes)}")
+        if self.max_p95_latency_s is not None:
+            parts.append(f"p95<={self.max_p95_latency_s * 1e3:.0f}ms")
+        return " ".join(parts) or "unconstrained"
+
+
+# eq=False: the embedded PrecisionPlan holds ndarrays, so generated
+# dataclass equality would be ambiguous — identity semantics are correct
+# here (frontier points are interned singletons of their frontier).
+@dataclasses.dataclass(frozen=True, eq=False)
+class FrontierPoint:
+    """One dominant configuration: the knob values, the concrete plan they
+    expand to, and the cost model's QoS estimate for it."""
+    num_q_experts: int        # global Num_E4 (multiple of num_layers)
+    resident_experts: int     # global on-device expert count
+    plan: PrecisionPlan
+    qos: QoSEstimate
+
+    def meets(self, target: QoSTarget) -> bool:
+        """Hard constraints AND the throughput objective (analytically)."""
+        return (self.feasible_under(target)
+                and (target.min_tokens_per_s is None
+                     or self.qos.tokens_per_s >= target.min_tokens_per_s))
+
+    def feasible_under(self, target: QoSTarget) -> bool:
+        """Hard constraints only (budget + quality ceiling)."""
+        if target.mem_budget_bytes is not None \
+                and self.qos.device_bytes > target.mem_budget_bytes:
+            return False
+        if target.max_quality_loss is not None \
+                and self.qos.quality_proxy > 1.0 + target.max_quality_loss \
+                + 1e-12:
+            return False
+        return True
+
+    def summary(self) -> str:
+        q = self.qos
+        return (f"E4={self.num_q_experts} res={self.resident_experts} "
+                f"dev={_fmt_bytes(q.device_bytes)} "
+                f"tok/s={q.tokens_per_s:.2f} ppl=x{q.quality_proxy:.3f}")
+
+
+def _dominates(a: FrontierPoint, b: FrontierPoint) -> bool:
+    """a dominates b in (tokens/s ↑, quality ↓, device bytes ↓)."""
+    ge = (a.qos.tokens_per_s >= b.qos.tokens_per_s
+          and a.qos.quality_proxy <= b.qos.quality_proxy
+          and a.qos.device_bytes <= b.qos.device_bytes)
+    gt = (a.qos.tokens_per_s > b.qos.tokens_per_s
+          or a.qos.quality_proxy < b.qos.quality_proxy
+          or a.qos.device_bytes < b.qos.device_bytes)
+    return ge and gt
+
+
+class ParetoFrontier:
+    """The dominant set of the (Num_E4 × residency) configuration space.
+
+    Built once per (model config, hardware model, batch size, seed) — i.e.
+    once per hardware/budget regime change, NOT per request. Budgets are
+    query-time filters (``QoSTarget.mem_budget_bytes``) so one frontier
+    serves every tenant budget.
+
+    ``residency_step`` controls enumeration granularity for the residency
+    axis; the default (``num_layers``) matches the balanced per-layer
+    placement the dual-bank MoE needs and keeps the space at
+    ``(E+1)²`` points for an L×E expert grid.
+    """
+
+    def __init__(self, cfg: ModelConfig,
+                 hw: HardwareModel = HardwareModel(), *,
+                 batch_size: int = 1, seed: int = 0,
+                 residency_step: Optional[int] = None):
+        if cfg.moe is None:
+            raise ValueError(f"{cfg.arch_id}: the MoP frontier needs routed "
+                             "experts (DESIGN.md §5)")
+        self.cfg = cfg
+        self.hw = hw
+        self.batch_size = batch_size
+        self.seed = seed
+        layers = cfg.num_layers
+        total = layers * cfg.moe.num_experts
+        step = residency_step or layers
+        nq_levels = range(0, total + 1, layers)
+        res_levels = sorted({*range(0, total, step), total})
+        pts: List[FrontierPoint] = []
+        for nq in nq_levels:
+            for r in res_levels:
+                plan = balanced_random_plan(
+                    layers, cfg.moe.num_experts, nq,
+                    bits=cfg.mop.bits, group_size=cfg.mop.group_size,
+                    seed=seed, resident_experts=r)
+                qos = cost_model.estimate_qos(cfg, plan, hw, batch_size)
+                pts.append(FrontierPoint(num_q_experts=nq,
+                                         resident_experts=r,
+                                         plan=plan, qos=qos))
+        #: the full enumeration (kept for sweeps/plots); dominated points
+        #: included.
+        self.all_points: List[FrontierPoint] = pts
+        #: the dominant set, ascending in predicted tokens/s — "adjacent"
+        #: for the QoSController means neighbouring indices in this list.
+        self.points: List[FrontierPoint] = sorted(
+            self._prune(pts),
+            key=lambda p: (p.qos.tokens_per_s, p.qos.quality_proxy,
+                           p.qos.device_bytes, p.num_q_experts,
+                           p.resident_experts))
+
+    @staticmethod
+    def _prune(pts: Sequence[FrontierPoint]) -> List[FrontierPoint]:
+        out: List[FrontierPoint] = []
+        for p in pts:
+            if any(_dominates(q, p) for q in pts):
+                continue
+            # drop exact QoS duplicates (balanced rounding maps nearby
+            # knob values to one plan) deterministically: keep the first
+            # in (nq, resident) order.
+            key = (p.qos.tokens_per_s, p.qos.quality_proxy,
+                   p.qos.device_bytes)
+            if any((q.qos.tokens_per_s, q.qos.quality_proxy,
+                    q.qos.device_bytes) == key for q in out):
+                continue
+            out.append(p)
+        return out
+
+    # -- queries -----------------------------------------------------------
+    def feasible(self, target: QoSTarget) -> List[FrontierPoint]:
+        """Frontier points satisfying the target's hard constraints,
+        ascending in predicted tokens/s."""
+        return [p for p in self.points if p.feasible_under(target)]
+
+    def select(self, target: QoSTarget) -> FrontierPoint:
+        """Resolve a declarative target to one frontier point.
+
+        Among feasible points meeting ``min_tokens_per_s``: prefer quality
+        (lowest quality_proxy), then the lowest device footprint — the
+        deterministic tie-break of DESIGN.md §9. When no feasible point
+        meets the throughput objective, fall back to the fastest feasible
+        point (best effort — the controller keeps chasing from there).
+        Raises :class:`InfeasibleTarget` when the hard constraints admit
+        no point at all (e.g. budget below the non-expert floor).
+        """
+        cand = self.feasible(target)
+        if not cand:
+            floor = min(p.qos.device_bytes for p in self.points)
+            raise InfeasibleTarget(
+                f"no MoP configuration satisfies [{target.describe()}]: "
+                f"smallest feasible footprint is {_fmt_bytes(floor)}")
+        meeting = [p for p in cand
+                   if target.min_tokens_per_s is None
+                   or p.qos.tokens_per_s >= target.min_tokens_per_s]
+        if meeting:
+            return min(meeting, key=lambda p: (
+                p.qos.quality_proxy, p.qos.device_bytes,
+                -p.qos.tokens_per_s, p.num_q_experts, p.resident_experts))
+        return min(cand, key=lambda p: (
+            -p.qos.tokens_per_s, p.qos.quality_proxy, p.qos.device_bytes,
+            p.num_q_experts, p.resident_experts))
+
+    def neighbors(self, point: FrontierPoint, target: QoSTarget
+                  ) -> tuple:
+        """(slower, faster) adjacent feasible points (None at the ends) —
+        the QoSController's walk steps."""
+        feas = self.feasible(target)
+        try:
+            i = feas.index(point)
+        except ValueError:
+            return None, None
+        slower = feas[i - 1] if i > 0 else None
+        faster = feas[i + 1] if i + 1 < len(feas) else None
+        return slower, faster
+
+    def best_per_quality_level(self, mem_budget_bytes: float
+                               ) -> List[FrontierPoint]:
+        """For each Num_E4 level, the max-residency point fitting the
+        budget — the paper's Fig. 2/3 sweep axis (used by
+        ``AdaptivePlanner.sweep`` and ``examples/pareto_explorer.py``)."""
+        best = {}
+        for p in self.all_points:
+            if p.qos.device_bytes > mem_budget_bytes:
+                continue
+            cur = best.get(p.num_q_experts)
+            if cur is None or p.resident_experts > cur.resident_experts:
+                best[p.num_q_experts] = p
+        return [best[k] for k in sorted(best)]

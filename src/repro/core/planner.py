@@ -28,6 +28,9 @@ from repro.core.precision_plan import PrecisionPlan, balanced_random_plan
 
 Preference = Literal["throughput", "quality"]
 
+if False:  # typing-only, avoids a runtime cycle (pareto imports planner)
+    from repro.core.pareto import ParetoFrontier  # noqa: F401
+
 
 def num_e16_eq1(mem_bytes: float, size_ne: int, num_e: int,
                 size_e4: int, size_e16: Optional[int] = None) -> int:
@@ -71,6 +74,7 @@ class AdaptivePlanner:
         self.hw = hw
         self.seed = seed
         self.current: Optional[PlanResult] = None
+        self._frontiers: dict = {}   # batch_size -> ParetoFrontier
 
     # -- sizes ------------------------------------------------------------
     @property
@@ -156,15 +160,31 @@ class AdaptivePlanner:
         self.current = new
         return new, delta
 
+    def frontier(self, batch_size: int = 1) -> "ParetoFrontier":
+        """The ParetoFrontier for this planner's (cfg, hw, seed) — built
+        once per batch size and cached (DESIGN.md §9). Frontier plans are
+        bit-identical to ``plan()`` output for the same knob values."""
+        if batch_size not in self._frontiers:
+            from repro.core.pareto import ParetoFrontier
+            self._frontiers[batch_size] = ParetoFrontier(
+                self.cfg, self.hw, batch_size=batch_size, seed=self.seed)
+        return self._frontiers[batch_size]
+
     def sweep(self, mem_budget_bytes: float, batch_size: int = 1,
-              points: int = 17):
+              points: Optional[int] = None):
         """Quality-mode sweep over Num_E4 — the paper's config space
-        (Fig. 2/3 x-axes); returns list of PlanResult + Pareto indices."""
-        total = self.num_experts_total
-        results = []
-        for nq in sorted({int(round(total * i / (points - 1)))
-                          for i in range(points)}):
-            results.append(self.plan(mem_budget_bytes, "quality", nq,
-                                     batch_size))
+        (Fig. 2/3 x-axes); returns list of PlanResult + Pareto indices.
+
+        Rebased on :meth:`frontier`: one point per balanced Num_E4 level,
+        each at the max residency fitting the budget. ``points`` is kept
+        for backward compatibility and ignored (the balanced levels ARE
+        the distinct plans the old dense sampling collapsed to)."""
+        del points
+        results = [
+            PlanResult(plan=p.plan, qos=p.qos, preference="quality",
+                       mem_budget_bytes=mem_budget_bytes)
+            for p in self.frontier(batch_size)
+            .best_per_quality_level(mem_budget_bytes)
+        ]
         pts = [(r.qos.tokens_per_s, r.qos.quality_proxy) for r in results]
         return results, cost_model.pareto_frontier(pts)

@@ -1,13 +1,31 @@
-"""Serving launcher — the paper's adaptive MoE deployment as a CLI.
+"""Serving launcher — the paper's adaptive MoE deployment as a CLI, on
+the declarative QoS surface (DESIGN.md §9).
+
+Declare TARGETS, not knobs: the engine resolves them on its Pareto
+frontier and the QoSController keeps the deployment on target while
+requests stream:
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-        [--budget-gb 40] [--preference throughput|quality] [--num-q 128] \
-        [--requests 8] [--ckpt-dir DIR] [--trace budgets.csv]
+        --min-tps 8 --max-ppl-x 1.05 --budget-gb 40 --requests 8
+
+    # quality-capped only: cheapest config within +2% perplexity
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --max-ppl-x 1.02 --budget-gb 30
+
+The imperative spelling (``--preference throughput|quality --num-q N``)
+is kept as a deprecated compatibility path over ``engine.configure``.
+
+``--trace`` replays a CSV of budget points — the multi-tenant scenario of
+the paper's Fig. 1. Rows are ``budget_gb,preference[,num_q[,min_tps]]``;
+the optional 4th SLO column switches that phase onto the declarative
+path with ``QoSTarget(mem_budget_bytes, min_tokens_per_s)``:
+
+    # budget_gb, preference, num_q, min_tps (SLO)
+    1.2, throughput
+    0.8, quality, 0, 5.0
 
 Smoke-reduced on CPU (same-family config); the planner/engine logic and
-the plan signatures are identical at full scale. ``--trace`` replays a
-CSV of ``budget_gb,preference[,num_q]`` lines — the multi-tenant scenario
-of the paper's Fig. 1.
+the plan signatures are identical at full scale.
 """
 from __future__ import annotations
 
@@ -21,27 +39,59 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
 from repro.ft.checkpoint import CheckpointManager
 from repro.models.model import build_model
-from repro.serving.engine import AdaptiveServingEngine
+from repro.serving.api import (EngineConfig, QoSTarget, RequestSLO,
+                               ServeRequest, build_engine)
+from repro.serving.qos import QoSController
+
+
+def _parse_trace(path: str):
+    """budget_gb,preference[,num_q[,min_tps]] rows; '#' comments; empty
+    cells allowed (e.g. ``0.8,quality,,5.0``)."""
+    points = []
+    for ln in Path(path).read_text().splitlines():
+        parts = [p.strip() for p in ln.split(",")]
+        if not parts or not parts[0] or parts[0].startswith("#"):
+            continue
+        points.append((
+            float(parts[0]) * 1e9,
+            parts[1] if len(parts) > 1 and parts[1] else "throughput",
+            int(parts[2]) if len(parts) > 2 and parts[2] else None,
+            float(parts[3]) if len(parts) > 3 and parts[3] else None,
+        ))
+    return points
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b", choices=list(ARCH_IDS))
+    # -- declarative QoS targets (DESIGN.md §9) -------------------------
+    ap.add_argument("--min-tps", type=float, default=None,
+                    help="SLO: minimum tokens/s; the QoSController walks "
+                         "the Pareto frontier to hold it")
+    ap.add_argument("--max-ppl-x", type=float, default=None,
+                    help="SLO: quality ceiling as a perplexity multiplier "
+                         "vs all-16-bit, e.g. 1.05 = at most +5%%")
     ap.add_argument("--budget-gb", type=float, default=None,
                     help="HBM budget; default = full bf16 size * 0.6")
-    ap.add_argument("--preference", default="throughput",
-                    choices=("throughput", "quality"))
+    # -- deprecated imperative knobs ------------------------------------
+    ap.add_argument("--preference", default=None,
+                    choices=("throughput", "quality"),
+                    help="DEPRECATED: use --min-tps/--max-ppl-x")
     ap.add_argument("--num-q", type=int, default=None,
-                    help="Num_E4 for quality preference")
+                    help="DEPRECATED: Num_E4 for quality preference")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--priority-split", action="store_true",
+                    help="submit every other request at priority 1 with a "
+                         "deadline, exercising SLO-aware admission")
     ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
                     default=True)
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params instead of random init")
     ap.add_argument("--trace", default=None,
-                    help="CSV of budget_gb,preference[,num_q] to replay")
+                    help="CSV of budget_gb,preference[,num_q[,min_tps]] "
+                         "to replay (4th column = SLO)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -61,36 +111,61 @@ def main():
     else:
         params = model.init(jax.random.key(0))
 
-    engine = AdaptiveServingEngine(cfg, params, max_batch=4,
-                                   max_len=32 + args.max_new_tokens)
+    engine = build_engine(cfg, params, EngineConfig(
+        max_slots=4, max_len=32 + args.max_new_tokens))
+    controller = QoSController(engine)
     full = engine.planner.size_ne + \
         engine.planner.num_experts_total * engine.planner.size_e16
+    budget = args.budget_gb * 1e9 if args.budget_gb else full * 0.6
 
     if args.trace:
-        points = []
-        for ln in Path(args.trace).read_text().splitlines():
-            parts = [p.strip() for p in ln.split(",")]
-            if not parts or parts[0].startswith("#"):
-                continue
-            points.append((float(parts[0]) * 1e9, parts[1],
-                           int(parts[2]) if len(parts) > 2 else None))
+        points = _parse_trace(args.trace)
+    elif args.preference is not None:
+        points = [(budget, args.preference, args.num_q, args.min_tps)]
     else:
-        budget = args.budget_gb * 1e9 if args.budget_gb else full * 0.6
-        points = [(budget, args.preference, args.num_q)]
+        # declarative default path: one QoSTarget phase. With no explicit
+        # tokens/s floor the server still wants speed: inf = "as fast as
+        # possible inside the budget/quality constraints" (best effort).
+        points = [(budget, None, None,
+                   args.min_tps if args.min_tps is not None
+                   else float("inf"))]
 
+    max_loss = args.max_ppl_x - 1.0 if args.max_ppl_x else None
     rng = np.random.default_rng(0)
-    for budget, pref, nq in points:
-        res = engine.configure(budget, pref, nq)
-        print(f"[serve] {res.summary()}")
-        for _ in range(args.requests):
-            engine.submit(rng.integers(1, cfg.vocab_size, 16),
-                          max_new_tokens=args.max_new_tokens)
-        while engine.step(temperature=args.temperature):
-            pass
+    for budget, pref, nq, min_tps in points:
+        if pref is None or min_tps is not None:
+            target = QoSTarget(min_tokens_per_s=min_tps,
+                               max_quality_loss=max_loss,
+                               mem_budget_bytes=budget)
+            point = controller.set_target(target)
+            print(f"[serve] target[{target.describe()}] -> {point.summary()}")
+        else:
+            res = engine.configure(budget, pref, nq)
+            # imperative phase: the controller must not keep walking the
+            # previous phase's target over this plan
+            controller.target = None
+            controller.point = None
+            print(f"[serve] {res.summary()}")
+        for k in range(args.requests):
+            slo = RequestSLO()
+            if args.priority_split and k % 2:
+                slo = RequestSLO(priority=1, deadline_s=30.0)
+            engine.submit_request(ServeRequest(
+                prompt=rng.integers(1, cfg.vocab_size, 16),
+                max_new_tokens=args.max_new_tokens,
+                slo=slo))
+        while engine.has_work():
+            # one shared temperature -> engine-level default keeps the
+            # batched sampling path (per-request SamplingParams would
+            # force the row-wise loop)
+            engine.run_iteration(temperature=args.temperature)
+            controller.step()          # QoS loop between iterations
         print(f"[serve] {engine.summary()}")
-    done = list(engine.done.values())[:2]
-    for r in done:
-        print(f"  req {r.rid}: {r.out_tokens[:12]}...")
+        if controller.target is not None:
+            print(f"[serve] {controller.summary()}")
+    for rid in list(engine.done)[:2]:
+        r = engine.result(rid)
+        print(f"  {r.summary()} tokens={r.tokens[:12]}...")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,126 @@
+"""Public serving surface — declarative QoS API (DESIGN.md §9).
+
+Callers declare *targets*, not knob values: a deployment states a
+:class:`~repro.core.pareto.QoSTarget` (min tokens/s, max quality loss,
+memory budget), each request states a :class:`RequestSLO` (priority,
+optional deadline) and :class:`SamplingParams`; the engine picks the MoP
+configuration off its :class:`~repro.core.pareto.ParetoFrontier` and the
+:class:`~repro.serving.qos.QoSController` keeps it on target at runtime.
+
+    from repro.serving.api import (EngineConfig, QoSTarget, ServeRequest,
+                                   RequestSLO, build_engine)
+    engine = build_engine(cfg, params, EngineConfig(max_slots=8))
+    engine.apply_target(QoSTarget(min_tokens_per_s=8.0,
+                                  mem_budget_bytes=40 * 2**30))
+    rid = engine.submit_request(ServeRequest(prompt,
+                                             slo=RequestSLO(priority=1)))
+    engine.step()
+    print(engine.result(rid))
+
+The imperative ``engine.configure(mem_budget_bytes, preference, num_q)``
+survives as a deprecated shim that builds a ``QoSTarget`` internally.
+
+Importing this module does not build any jax computation (the model
+stack loads only when ``build_engine`` constructs an engine), though jax
+itself is transitively imported via the cost model's config types.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import HardwareModel
+from repro.core.pareto import (  # noqa: F401  (public re-exports)
+    FrontierPoint, InfeasibleTarget, ParetoFrontier, QoSTarget,
+)
+from repro.serving.scheduler import (  # noqa: F401  (public re-exports)
+    Request, RequestSLO, SamplingParams,
+)
+
+__all__ = [
+    "EngineConfig", "SamplingParams", "RequestSLO", "ServeRequest",
+    "ServeResult", "QoSTarget", "FrontierPoint", "ParetoFrontier",
+    "InfeasibleTarget", "build_engine",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Typed construction parameters for the serving engine — replaces the
+    kwarg soup of ``AdaptiveServingEngine.__init__`` (DESIGN.md §9).
+
+    Capacity:
+      * ``max_slots`` — decode batch width (rows of the slot KV cache);
+      * ``max_len``   — per-slot KV window (prompt + max_new_tokens cap);
+      * ``max_active_tokens`` / ``max_queue`` — admission-control knobs
+        (see ``serving/scheduler.py``).
+    Expert streaming:
+      * ``swap_bytes`` — device LRU swap capacity for non-resident
+        experts; ``prefetch`` enables the speculative prefetch cache.
+    Hardware:
+      * ``hw`` — analytic hardware model; None measures the host link
+        bandwidth once per process and uses defaults otherwise.
+    """
+    max_slots: int = 8
+    max_len: int = 256
+    use_kernel: bool = False
+    max_active_tokens: Optional[int] = None
+    max_queue: Optional[int] = None
+    swap_bytes: Optional[int] = None
+    prefetch: bool = False
+    hw: Optional[HardwareModel] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One generation request on the declarative surface."""
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    sampling: Optional[SamplingParams] = None
+    slo: RequestSLO = dataclasses.field(default_factory=RequestSLO)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """Completed request: tokens + the QoS the request actually got."""
+    rid: int
+    tokens: List[int]
+    latency_s: float
+    ttft_s: Optional[float]
+    priority: int
+    deadline_s: Optional[float]
+    deadline_met: Optional[bool]   # None when no deadline was declared
+
+    @classmethod
+    def from_request(cls, req: Request) -> "ServeResult":
+        if req.t_done is None:
+            raise ValueError(f"request {req.rid} is still in flight")
+        return cls(rid=req.rid, tokens=list(req.out_tokens),
+                   latency_s=req.latency_s, ttft_s=req.ttft_s,
+                   priority=req.slo.priority,
+                   deadline_s=req.slo.deadline_s,
+                   deadline_met=req.deadline_met)
+
+    def summary(self) -> str:
+        dl = ("" if self.deadline_met is None else
+              f" deadline={'MET' if self.deadline_met else 'MISSED'}")
+        return (f"req {self.rid} prio={self.priority}: "
+                f"{len(self.tokens)} tok in {self.latency_s * 1e3:.0f} ms"
+                + dl)
+
+
+def results_of(requests: Sequence[Request]) -> List[ServeResult]:
+    """Batch conversion helper for completed scheduler requests."""
+    return [ServeResult.from_request(r) for r in requests]
+
+
+def build_engine(cfg, params, config: Optional[EngineConfig] = None, *,
+                 mesh=None):
+    """Construct an :class:`~repro.serving.engine.AdaptiveServingEngine`
+    from an :class:`EngineConfig` (lazy import keeps this module jax-free
+    until an engine is actually built)."""
+    from repro.serving.engine import AdaptiveServingEngine
+    return AdaptiveServingEngine(cfg, params, mesh=mesh,
+                                 config=config or EngineConfig())

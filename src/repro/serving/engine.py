@@ -27,16 +27,24 @@ staging — on this single-memory container the jitted banks stay resident,
 so the transfers are measured but not consumed by the matmuls; on a TPU
 deployment the fetched buffers are donated into the step.
 
-Reconfiguration (``configure``) is safe mid-flight: placement-only
-replans apply between decode iterations without touching in-flight
-requests (placement never changes outputs — tested); a bank-split change
-first DRAINS the active slots (finishing their requests, admitting no new
-ones), then re-specializes the step functions — the paper's "minimal
-downtime" path, measured in ``metrics["reconfig_s"]``.
+Reconfiguration is safe mid-flight: placement-only replans apply between
+decode iterations without touching in-flight requests (placement never
+changes outputs — tested); a bank-split change first DRAINS the active
+slots (finishing their requests, admitting no new ones), then
+re-specializes the step functions — the paper's "minimal downtime" path,
+measured in ``metrics["reconfig_s"]``.
+
+The DECLARATIVE entry points (DESIGN.md §9) are ``apply_target`` (resolve
+a ``QoSTarget`` on the engine's ``ParetoFrontier`` and apply the selected
+point) and ``apply_frontier_point`` (the ``QoSController``'s walk step);
+the imperative ``configure(mem_budget_bytes, preference, num_q)`` is a
+deprecated shim that builds a ``QoSTarget`` internally.
 """
 from __future__ import annotations
 
+import math
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -46,39 +54,64 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import HardwareModel, expert_access_stats
 from repro.core.expert_cache import ExpertCache, PrefetchingExpertCache
+from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
 from repro.core.planner import AdaptivePlanner, PlanResult
 from repro.core.precision_plan import DEVICE
 from repro.models.model import Model, apply_precision_plan, build_model
+from repro.serving.api import EngineConfig, ServeRequest, ServeResult
 from repro.serving.sampler import sample
 from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     RequestSLO, SamplingParams,
                                      SchedulerConfig)
 
 __all__ = ["AdaptiveServingEngine", "Request", "measure_host_link_bw"]
 
+# per-process cache: the engine is constructed once per test/benchmark
+# point, and a 16 MiB device_put probe per construction both slows the
+# suite and skews short benchmarks. Keyed by probe size.
+_HOST_LINK_BW_CACHE: Dict[int, float] = {}
 
-def measure_host_link_bw(nbytes: int = 1 << 24) -> float:
-    """Measured device_put bandwidth (host->device), B/s."""
+
+def measure_host_link_bw(nbytes: int = 1 << 24, *,
+                         refresh: bool = False) -> float:
+    """Measured device_put bandwidth (host->device), B/s. Cached per
+    process (the link does not change under our feet); ``refresh=True``
+    forces a re-probe."""
+    if not refresh and nbytes in _HOST_LINK_BW_CACHE:
+        return _HOST_LINK_BW_CACHE[nbytes]
     buf = np.ones(nbytes, np.uint8)
     dev = jax.devices()[0]
     jax.block_until_ready(jax.device_put(buf[:1024], dev))  # warm
     t0 = time.perf_counter()
     jax.block_until_ready(jax.device_put(buf, dev))
-    return nbytes / max(time.perf_counter() - t0, 1e-9)
+    bw = nbytes / max(time.perf_counter() - t0, 1e-9)
+    _HOST_LINK_BW_CACHE[nbytes] = bw
+    return bw
 
 
-def _bucket(n: int, lo: int = 8) -> int:
-    """Next power-of-two >= n: bounds prefill recompiles to log(max_len)."""
+def _bucket(n: int, lo: int = 8, hi: Optional[int] = None) -> int:
+    """Next power-of-two >= n: bounds prefill recompiles to log(max_len).
+    ``hi`` clamps to the KV-cache window so a prompt near ``max_len``
+    can't request a bucket wider than the cache (the prompt itself was
+    already validated to fit by the scheduler)."""
     b = lo
     while b < n:
         b *= 2
-    return b
+    return b if hi is None else min(b, hi)
 
 
 class AdaptiveServingEngine:
-    """Continuous-batching adaptive engine. ``max_batch`` (kept for
-    backward compat) is the number of decode slots."""
+    """Continuous-batching adaptive engine.
+
+    Preferred construction is the typed surface (DESIGN.md §9):
+    ``AdaptiveServingEngine(cfg, params, config=EngineConfig(...))`` or
+    ``repro.serving.api.build_engine``. The flat keyword arguments
+    (``max_batch`` — the number of decode slots —, ``max_len``, ...) are
+    the backward-compatible spelling and populate an ``EngineConfig``
+    internally."""
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
+                 config: Optional[EngineConfig] = None,
                  hw: Optional[HardwareModel] = None,
                  max_batch: int = 8, max_len: int = 256,
                  use_kernel: bool = False,
@@ -88,32 +121,43 @@ class AdaptiveServingEngine:
                  prefetch: bool = False):
         if cfg.moe is None:
             raise ValueError("the adaptive engine serves MoE models")
+        if config is None:
+            config = EngineConfig(
+                max_slots=max_batch, max_len=max_len,
+                use_kernel=use_kernel,
+                max_active_tokens=max_active_tokens, max_queue=max_queue,
+                swap_bytes=swap_bytes, prefetch=prefetch, hw=hw)
+        self.config = config
         self.cfg = cfg
         self.params_train = params        # train-layout master copy
         self.mesh = mesh
-        self.max_slots = max_batch
-        self.max_len = max_len
-        self.use_kernel = use_kernel
-        self.hw = hw or HardwareModel(host_link_bw=measure_host_link_bw())
+        self.max_slots = config.max_slots
+        self.max_len = config.max_len
+        self.use_kernel = config.use_kernel
+        self.hw = config.hw \
+            or HardwareModel(host_link_bw=measure_host_link_bw())
         self.planner = AdaptivePlanner(cfg, hw=self.hw)
-        self.model: Model = build_model(cfg, mesh, use_kernel=use_kernel)
+        self.model: Model = build_model(cfg, mesh,
+                                        use_kernel=self.use_kernel)
         if self.model.prefill_into_slot is None:
             raise ValueError(f"{cfg.arch_id}: family {cfg.family} has no "
                              "slot-cache decode path")
-        self.cache = self.model.init_cache(self.max_slots, max_len)
+        self.cache = self.model.init_cache(self.max_slots, self.max_len)
         self.window = int(self.cache["k"].shape[2])
         self.scheduler = ContinuousScheduler(SchedulerConfig(
-            max_slots=self.max_slots, max_len=max_len,
+            max_slots=self.max_slots, max_len=self.max_len,
             max_prompt_len=self.window,
-            max_active_tokens=max_active_tokens, max_queue=max_queue))
+            max_active_tokens=config.max_active_tokens,
+            max_queue=config.max_queue))
         # runtime expert streaming: host master store + device LRU swap
-        self._swap_bytes = swap_bytes
-        cache_cls = PrefetchingExpertCache if prefetch else ExpertCache
+        self._swap_bytes = config.swap_bytes
+        cache_cls = PrefetchingExpertCache if config.prefetch \
+            else ExpertCache
         self.expert_cache = cache_cls(
             self._fetch_expert,
-            capacity_bytes=swap_bytes
+            capacity_bytes=config.swap_bytes
             or 4 * max(cfg.expert_param_bytes(16), 1))
-        self._prefetch = prefetch
+        self._prefetch = config.prefetch
         self._prev_demanded: List[Tuple[int, int]] = []
         self._host_store: Dict[Tuple[int, int], Any] = {}
         self._resident: set = set()
@@ -121,6 +165,9 @@ class AdaptiveServingEngine:
         self._order: Optional[np.ndarray] = None   # bank slot -> expert id
         self._serve_params = None
         self._plan_result: Optional[PlanResult] = None
+        self._frontier: Optional[ParetoFrontier] = None
+        self._target: Optional[QoSTarget] = None
+        self._active_point: Optional[FrontierPoint] = None
         self._compiled: Dict[Any, Any] = {}
         self._key = jax.random.key(0)
         self.metrics: Dict[str, Any] = {
@@ -154,8 +201,81 @@ class AdaptiveServingEngine:
     # ------------------------------------------------------------------
     # Planner integration / mid-flight reconfiguration
     # ------------------------------------------------------------------
+    @property
+    def frontier(self) -> ParetoFrontier:
+        """The engine's Pareto frontier over the MoP config space
+        (DESIGN.md §9), built lazily once per (hardware model, slot
+        count) and shared with the QoSController."""
+        if self._frontier is None:
+            self._frontier = self.planner.frontier(
+                batch_size=self.max_slots)
+        return self._frontier
+
+    @property
+    def target(self) -> Optional[QoSTarget]:
+        """The active declarative target (set by ``apply_target`` or the
+        ``configure`` shim)."""
+        return self._target
+
+    @property
+    def active_point(self) -> Optional[FrontierPoint]:
+        """The frontier point currently applied; None when the active
+        plan came through the imperative shim (possibly off-frontier)."""
+        return self._active_point
+
+    def apply_target(self, target: QoSTarget) -> FrontierPoint:
+        """Declarative reconfiguration (DESIGN.md §9): resolve ``target``
+        on the frontier and apply the selected point via the mid-flight
+        replan path. Raises
+        :class:`~repro.core.pareto.InfeasibleTarget` when the hard
+        constraints admit no configuration."""
+        point = self.frontier.select(target)
+        self._target = target
+        self.apply_frontier_point(point)
+        return point
+
+    def apply_frontier_point(self, point: FrontierPoint) -> PlanResult:
+        """Apply one frontier point (the QoSController's walk step).
+        Frontier plans are bit-identical to planner plans for the same
+        knobs, so this routes through the ordinary replan path: the
+        point's exact device footprint is the budget and surplus HBM is
+        returned to the pool."""
+        result = self._reconfigure(float(point.qos.device_bytes),
+                                   "quality", point.num_q_experts)
+        self._active_point = point
+        return result
+
     def configure(self, mem_budget_bytes: float, preference: str,
                   num_q_experts: Optional[int] = None) -> PlanResult:
+        """DEPRECATED imperative shim (use ``apply_target``): builds the
+        equivalent ``QoSTarget`` — "as fast as possible inside the
+        budget" for the throughput preference, "this quality level inside
+        the budget" for the quality preference — records it as the active
+        target, and replans through the legacy eq.(1) path so existing
+        callers see bit-identical plans."""
+        warnings.warn(
+            "AdaptiveServingEngine.configure() is deprecated; declare a "
+            "QoSTarget and use apply_target() (DESIGN.md §9)",
+            DeprecationWarning, stacklevel=2)
+        if preference == "throughput":
+            self._target = QoSTarget(mem_budget_bytes=mem_budget_bytes,
+                                     min_tokens_per_s=math.inf)
+        else:
+            loss = None
+            if num_q_experts is not None:
+                frac = num_q_experts / max(self.planner.num_experts_total,
+                                           1)
+                per_bit = {4: 0.07, 8: 0.02}.get(self.cfg.mop.bits, 0.07)
+                loss = per_bit * min(max(frac, 0.0), 1.0)
+            self._target = QoSTarget(mem_budget_bytes=mem_budget_bytes,
+                                     max_quality_loss=loss)
+        result = self._reconfigure(mem_budget_bytes, preference,
+                                   num_q_experts)
+        self._active_point = None    # imperative plans may be off-frontier
+        return result
+
+    def _reconfigure(self, mem_budget_bytes: float, preference: str,
+                     num_q_experts: Optional[int] = None) -> PlanResult:
         """Replan under new constraints; safe to call with requests in
         flight. Placement-only changes apply immediately (between decode
         iterations); a bank-split change drains the active slots first."""
@@ -211,8 +331,25 @@ class AdaptiveServingEngine:
     # ------------------------------------------------------------------
     # Request lifecycle
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
-        return self.scheduler.submit(prompt, max_new_tokens)
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16, *,
+               sampling: Optional[SamplingParams] = None,
+               slo: Optional[RequestSLO] = None,
+               now: Optional[float] = None) -> int:
+        """Submit a request; forwards sampling/SLO/arrival-time to the
+        scheduler's richer ``submit`` (admission is by priority with
+        deadline-aware ordering — DESIGN.md §9)."""
+        return self.scheduler.submit(prompt, max_new_tokens, now,
+                                     sampling=sampling, slo=slo)
+
+    def submit_request(self, request: ServeRequest) -> int:
+        """Typed-surface spelling of ``submit`` (serving/api.py)."""
+        return self.submit(request.prompt, request.max_new_tokens,
+                           sampling=request.sampling, slo=request.slo)
+
+    def result(self, rid: int) -> ServeResult:
+        """The ServeResult of a completed request (KeyError while the
+        request is queued or in flight)."""
+        return ServeResult.from_request(self.scheduler.done[rid])
 
     def _jit(self, name, fn):
         if name not in self._compiled:
@@ -292,13 +429,22 @@ class AdaptiveServingEngine:
                 / self.metrics["expert_accesses"]
 
     # -- iteration-level serving ----------------------------------------
+    @staticmethod
+    def _sampling_of(req: Request, default_temperature: float
+                     ) -> Tuple[float, int]:
+        """(temperature, top_k) for a request: its own SamplingParams win
+        over the engine-level default."""
+        if req.sampling is not None:
+            return req.sampling.temperature, req.sampling.top_k
+        return default_temperature, 0
+
     def _prefill_slot(self, slot: int, req: Request,
                       temperature: float) -> Optional[int]:
         """Join ``req`` into ``slot``; returns its rid if it already
         retired (max_new_tokens == 1 — the prefill logit is the whole
         generation), else None."""
         s = len(req.prompt)
-        sb = min(_bucket(s), self.window)
+        sb = _bucket(s, hi=self.window)
         toks = np.zeros((1, sb), np.int32)
         pos = np.full((1, sb), -1, np.int32)
         toks[0, :s] = req.prompt
@@ -311,7 +457,8 @@ class AdaptiveServingEngine:
         jax.block_until_ready(logits)
         self.metrics["prefill_s"] += time.perf_counter() - t0
         self._key, sub = jax.random.split(self._key)
-        tok = int(sample(logits, key=sub, temperature=temperature,
+        temp, top_k = self._sampling_of(req, temperature)
+        tok = int(sample(logits, key=sub, temperature=temp, top_k=top_k,
                          vocab_size=self.cfg.vocab_size)[0])
         now = time.perf_counter()
         req.out_tokens.append(tok)
@@ -332,7 +479,8 @@ class AdaptiveServingEngine:
         decode ONE token for every active slot, retire finished requests.
         Returns the rids retired this iteration."""
         if self._plan_result is None:
-            raise RuntimeError("configure() the engine first")
+            raise RuntimeError(
+                "no active plan: apply_target() or configure() first")
         retired: List[int] = []
         if admit:
             for slot, req in self.scheduler.admit():
@@ -356,9 +504,21 @@ class AdaptiveServingEngine:
         self.metrics["decode_s"] += time.perf_counter() - t0
         self.metrics["iterations"] += 1
         self._key, sub = jax.random.split(self._key)
-        new_toks = np.asarray(sample(logits, key=sub,
-                                     temperature=temperature,
-                                     vocab_size=self.cfg.vocab_size))
+        if any(st.req.sampling is not None for _, st in active):
+            # heterogeneous per-request SamplingParams: sample row-wise
+            # (the batched path below stays bit-identical when no request
+            # carries its own parameters)
+            new_toks = np.zeros((self.max_slots,), np.int32)
+            keys = jax.random.split(sub, self.max_slots)
+            for i, st in active:
+                temp, top_k = self._sampling_of(st.req, temperature)
+                new_toks[i] = int(sample(
+                    logits[i:i + 1], key=keys[i], temperature=temp,
+                    top_k=top_k, vocab_size=self.cfg.vocab_size)[0])
+        else:
+            new_toks = np.asarray(sample(logits, key=sub,
+                                         temperature=temperature,
+                                         vocab_size=self.cfg.vocab_size))
         self._stream_experts(np.asarray(route_ids), [i for i, _ in active])
         # analytical cross-check: expected UNIQUE streamed bytes of this
         # iteration under uniform routing. n_active rows draw
@@ -393,7 +553,8 @@ class AdaptiveServingEngine:
         number of requests finished by this call. (Compatibility wrapper —
         iteration-level control lives in ``run_iteration``.)"""
         if self._plan_result is None:
-            raise RuntimeError("configure() the engine first")
+            raise RuntimeError(
+                "no active plan: apply_target() or configure() first")
         if seed is not None:
             self._key = jax.random.key(seed)
         finished = 0
@@ -411,8 +572,10 @@ class AdaptiveServingEngine:
             t += self.metrics["transfer_s"]
         return self.metrics["tokens_generated"] / max(t, 1e-9)
 
-    def latency_percentiles(self, qs=(50, 95)) -> Dict[str, float]:
-        return self.scheduler.latency_percentiles(qs)
+    def latency_percentiles(self, qs=(50, 95),
+                            last_n: Optional[int] = None
+                            ) -> Dict[str, float]:
+        return self.scheduler.latency_percentiles(qs, last_n=last_n)
 
     def reset_counters(self):
         """Zero the throughput counters (between benchmark operating

@@ -1,0 +1,189 @@
+"""QoS feedback controller — keeps a serving engine on its declarative
+target at runtime (DESIGN.md §9).
+
+The cost model picks the *initial* frontier point for a
+:class:`~repro.core.pareto.QoSTarget`, but analytic tokens/s and the
+wall-clock tokens/s of a live deployment drift apart (interference from
+co-tenants, cache temperature, real link bandwidth, batch occupancy). The
+controller closes the loop: ``step()`` runs BETWEEN decode iterations,
+compares the measured throughput (and, when targeted, p95 latency)
+against the active target, and when the measurement leaves the tolerance
+band walks the :class:`~repro.core.pareto.ParetoFrontier` to the
+*adjacent* point — one step at a time, through the engine's ordinary
+mid-flight replan path, so a placement-only move applies with zero drain
+and a bank-split move drains gracefully.
+
+Stability comes from two guards:
+
+* **hysteresis** — after any replan the controller dwells for
+  ``min_dwell_iterations`` before moving again, so a bank-split drain
+  can't be immediately followed by the opposite move (no thrash);
+* **windowed measurement** — decisions use the throughput of the last
+  measurement window only (not lifetime averages), and the window resets
+  on every replan so stale pre-replan samples never vote.
+
+A *budget drop* (new target with a smaller ``mem_budget_bytes``) is a
+feasibility violation, not a drift: it bypasses hysteresis and jumps
+straight to ``frontier.select(target)`` — exactly one replan, after which
+ordinary banded control resumes.
+
+The controller only needs an engine-shaped object (``metrics`` dict,
+``apply_frontier_point``, optionally ``latency_percentiles``); the sim
+test drives it with a fake engine whose "measured" throughput is the
+analytic estimate times a model-error factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
+
+__all__ = ["QoSController", "QoSControllerConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSControllerConfig:
+    #: relative band around min_tokens_per_s inside which no action is
+    #: taken: measured in [target*(1-tol), target*(1+tol)] is "on target".
+    tolerance: float = 0.10
+    #: hysteresis: iterations to dwell after a replan before moving again
+    #: (a bank-split drain must not be followed by the opposite move).
+    min_dwell_iterations: int = 16
+    #: decisions are taken at most once per this many iterations, on the
+    #: throughput measured within the window.
+    window_iterations: int = 4
+    #: the p95-latency check looks at the most recent completions only
+    #: (lifetime percentiles would let cold-start samples vote forever).
+    p95_window_requests: int = 16
+
+
+class QoSController:
+    """Feedback loop from measured QoS to frontier walks (DESIGN.md §9)."""
+
+    def __init__(self, engine, frontier: Optional[ParetoFrontier] = None,
+                 config: QoSControllerConfig = QoSControllerConfig()):
+        self.engine = engine
+        self.frontier = frontier if frontier is not None \
+            else engine.frontier
+        self.config = config
+        self.target: Optional[QoSTarget] = None
+        self.point: Optional[FrontierPoint] = None
+        self._win_iter = 0
+        self._win_tokens = 0
+        self._win_time = 0.0
+        self._applied_iter = 0
+        self.metrics: Dict[str, float] = {
+            "replans": 0, "decisions": 0, "violations": 0,
+            "last_measured_tps": 0.0,
+        }
+
+    # -- target management -------------------------------------------------
+    def set_target(self, target: QoSTarget) -> FrontierPoint:
+        """Activate a target: select + apply its frontier point (one
+        replan). Called on tenant (re)negotiation or a budget change
+        from the job manager."""
+        point = self.frontier.select(target)
+        self.target = target
+        self._apply(point)
+        return point
+
+    # -- the loop ----------------------------------------------------------
+    def step(self) -> bool:
+        """Run one control decision between decode iterations; returns
+        True iff a replan was applied."""
+        if self.target is None or self.point is None:
+            return False
+        # feasibility violation (e.g. the active point predates a budget
+        # drop): fix immediately, bypassing hysteresis — but only once,
+        # select() lands on a feasible point.
+        if not self.point.feasible_under(self.target):
+            self._apply(self.frontier.select(self.target))
+            return True
+        m = self.engine.metrics
+        it = int(m["iterations"])
+        if it - self._win_iter < self.config.window_iterations:
+            return False
+        dt = (m["decode_s"] + m["transfer_s"]) - self._win_time
+        dtok = m["tokens_generated"] - self._win_tokens
+        self._snapshot(it)
+        if dtok <= 0 or dt <= 0:
+            return False
+        measured = dtok / dt
+        self.metrics["decisions"] += 1
+        self.metrics["last_measured_tps"] = measured
+        if it - self._applied_iter < self.config.min_dwell_iterations:
+            return False                    # hysteresis: dwell
+        return self._decide(measured)
+
+    def _decide(self, measured: float) -> bool:
+        tgt = self.target.min_tokens_per_s
+        tol = self.config.tolerance
+        slower, faster = self.frontier.neighbors(self.point, self.target)
+        # p95 latency ceiling: only the runtime can see it; treat a
+        # violation like a throughput shortfall (walk faster).
+        if self.target.max_p95_latency_s is not None and faster is not None:
+            p95 = self._measured_p95()
+            if p95 is not None and p95 > self.target.max_p95_latency_s:
+                self.metrics["violations"] += 1
+                self._apply(faster)
+                return True
+        if tgt is None:
+            return False
+        if measured < tgt * (1 - tol):
+            # an infinite target is "as fast as possible" (best effort),
+            # not an SLO that can be violated
+            if math.isfinite(tgt):
+                self.metrics["violations"] += 1
+            if faster is None:
+                return False               # already at the fast end: best
+                                           # effort, keep serving
+            self._apply(faster)
+            return True
+        if measured > tgt * (1 + tol) and slower is not None:
+            # headroom: walk back toward quality, but only when (a) the
+            # slower point does not DEGRADE quality (adjacent-in-tps
+            # points are not always adjacent-in-quality) and (b) it is
+            # PREDICTED to still meet the target after derating the
+            # analytic estimate by the observed model error.
+            derate = measured / max(self.point.qos.tokens_per_s, 1e-12)
+            if slower.qos.quality_proxy <= self.point.qos.quality_proxy \
+                    and slower.qos.tokens_per_s * derate >= tgt:
+                self._apply(slower)
+                return True
+        return False
+
+    # -- internals ---------------------------------------------------------
+    def _measured_p95(self) -> Optional[float]:
+        fn = getattr(self.engine, "latency_percentiles", None)
+        if fn is None:
+            return None
+        try:
+            pct = fn((95,), last_n=self.config.p95_window_requests)
+        except TypeError:       # engine-shaped stub without the kwarg
+            pct = fn((95,))
+        p95 = pct.get("p95", 0.0)
+        return p95 if p95 > 0 else None
+
+    def _apply(self, point: FrontierPoint):
+        self.engine.apply_frontier_point(point)
+        self.point = point
+        self.metrics["replans"] += 1
+        it = int(self.engine.metrics["iterations"])
+        self._applied_iter = it
+        self._snapshot(it)
+
+    def _snapshot(self, it: int):
+        m = self.engine.metrics
+        self._win_iter = it
+        self._win_tokens = m["tokens_generated"]
+        self._win_time = m["decode_s"] + m["transfer_s"]
+
+    def summary(self) -> str:
+        t = self.target.describe() if self.target else "no target"
+        p = self.point.summary() if self.point else "no point"
+        return (f"QoS[{t}] @ [{p}] measured="
+                f"{self.metrics['last_measured_tps']:.2f} tok/s "
+                f"replans={self.metrics['replans']:.0f} "
+                f"violations={self.metrics['violations']:.0f}")

@@ -16,7 +16,14 @@ Admission policy (``SchedulerConfig``):
     (prompt + max_new) of all in-flight requests, the knob that trades
     batch occupancy against KV memory under a tight budget.
 
+Admission order (DESIGN.md §9): highest :class:`RequestSLO` priority
+first; within a priority class, earliest effective deadline first; then
+FIFO. Requests without an SLO keep exact FIFO behaviour.
+
 The scheduler is pure bookkeeping (no jax) and unit-testable on its own.
+:class:`SamplingParams` and :class:`RequestSLO` are defined here (the
+leaf of the serving import graph) and re-exported by the public surface
+``repro.serving.api``.
 """
 from __future__ import annotations
 
@@ -28,11 +35,37 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding parameters (DESIGN.md §9).
+
+    ``temperature <= 0`` is greedy; ``top_k == 0`` disables the top-k
+    filter. A request without SamplingParams inherits the engine-level
+    defaults passed to ``run_iteration``/``step``."""
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSLO:
+    """Per-request service-level objective (DESIGN.md §9).
+
+    ``priority``: larger is more urgent (admitted first). ``deadline_s``
+    is RELATIVE to submission; the scheduler admits earliest-deadline
+    first within a priority class and ``ServeResult.deadline_met``
+    reports the outcome — the scheduler never drops an expired request
+    (the paper's QoS is throughput/quality, not load shedding)."""
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
+    sampling: Optional[SamplingParams] = None
+    slo: RequestSLO = dataclasses.field(default_factory=RequestSLO)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_admit: Optional[float] = None    # joined a slot (prefill ran)
@@ -56,6 +89,20 @@ class Request:
         if self.t_first is None:
             return None
         return self.t_first - self.t_submit
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """Absolute deadline on the t_submit clock; None = best effort."""
+        if self.slo.deadline_s is None:
+            return None
+        return self.t_submit + self.slo.deadline_s
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """None while in flight or when no deadline was declared."""
+        if self.slo.deadline_s is None or self.t_done is None:
+            return None
+        return self.latency_s <= self.slo.deadline_s
 
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
@@ -99,7 +146,9 @@ class ContinuousScheduler:
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               now: Optional[float] = None) -> int:
+               now: Optional[float] = None, *,
+               sampling: Optional[SamplingParams] = None,
+               slo: Optional[RequestSLO] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) < 1:
             raise ValueError("prompt must hold at least one token")
@@ -121,6 +170,7 @@ class ContinuousScheduler:
         self._rid += 1
         self.queue.append(Request(
             rid=self._rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            sampling=sampling, slo=slo or RequestSLO(),
             t_submit=time.perf_counter() if now is None else now))
         return self._rid
 
@@ -143,21 +193,35 @@ class ContinuousScheduler:
         return bool(self.queue) or self.num_active > 0
 
     # -- join / retire -----------------------------------------------------
+    @staticmethod
+    def _admission_key(req: Request):
+        """Priority classes first, then earliest deadline, then FIFO.
+        Deadline-less requests sort after any deadline in their class."""
+        dl = req.deadline
+        return (-req.slo.priority,
+                dl if dl is not None else float("inf"),
+                req.t_submit, req.rid)
+
     def admit(self, now: Optional[float] = None
               ) -> List[Tuple[int, Request]]:
-        """Pop queued requests into free slots (FIFO) subject to the token
-        budget; returns [(slot, request)] for the engine to prefill."""
+        """Pop queued requests into free slots subject to the token budget,
+        in admission order (priority desc, deadline asc, FIFO); returns
+        [(slot, request)] for the engine to prefill. When the next request
+        in admission order does not fit the token budget, admission stops —
+        no skip-ahead, so a large high-priority request is never starved
+        by smaller low-priority ones."""
         joined: List[Tuple[int, Request]] = []
         claim = self.active_token_claim
         for slot in self.free_slots():
             if not self.queue:
                 break
-            nxt = self.queue[0]
+            nxt = min(self.queue, key=self._admission_key)
             if self.cfg.max_active_tokens is not None and \
                     claim + nxt.token_claim > self.cfg.max_active_tokens \
                     and self.num_active > 0:
                 break                      # wait for retirements
-            req = self.queue.popleft()
+            self.queue.remove(nxt)
+            req = nxt
             req.t_admit = time.perf_counter() if now is None else now
             # position of the first decode step = prompt length; the first
             # output token comes from the prefill logits (engine fills it)
@@ -183,9 +247,17 @@ class ContinuousScheduler:
         return out
 
     # -- metrics -----------------------------------------------------------
-    def latency_percentiles(self, qs=(50, 95)) -> Dict[str, float]:
-        lats = [r.latency_s for r in self.done.values()
-                if r.latency_s is not None]
+    def latency_percentiles(self, qs=(50, 95),
+                            last_n: Optional[int] = None
+                            ) -> Dict[str, float]:
+        """Latency percentiles over completed requests; ``last_n``
+        restricts to the most recent completions (the QoSController's
+        windowed p95 — lifetime tails would let cold-start samples vote
+        forever)."""
+        done = [r for r in self.done.values() if r.latency_s is not None]
+        if last_n is not None:
+            done = sorted(done, key=lambda r: r.t_done)[-last_n:]
+        lats = [r.latency_s for r in done]
         if not lats:
             return {f"p{q}": 0.0 for q in qs}
         return {f"p{q}": float(np.percentile(lats, q)) for q in qs}

@@ -1,0 +1,156 @@
+"""ParetoFrontier subsystem (core/pareto.py, DESIGN.md §9): dominance
+invariants, declarative select() semantics, frontier/planner plan
+identity, and monotonicity in the memory budget."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pareto import (FrontierPoint, InfeasibleTarget,
+                               ParetoFrontier, QoSTarget)
+from repro.core.planner import AdaptivePlanner
+
+GIB = 2**30
+MIXTRAL = get_config("mixtral-8x7b")
+
+
+@pytest.fixture(scope="module")
+def frontier():
+    return ParetoFrontier(MIXTRAL)
+
+
+def _dominates(a: FrontierPoint, b: FrontierPoint) -> bool:
+    ge = (a.qos.tokens_per_s >= b.qos.tokens_per_s
+          and a.qos.quality_proxy <= b.qos.quality_proxy
+          and a.qos.device_bytes <= b.qos.device_bytes)
+    gt = (a.qos.tokens_per_s > b.qos.tokens_per_s
+          or a.qos.quality_proxy < b.qos.quality_proxy
+          or a.qos.device_bytes < b.qos.device_bytes)
+    return ge and gt
+
+
+class TestDominance:
+    def test_enumerates_full_config_space(self, frontier):
+        e = MIXTRAL.moe.num_experts
+        assert len(frontier.all_points) == (e + 1) ** 2
+        nqs = {p.num_q_experts for p in frontier.all_points}
+        assert len(nqs) == e + 1
+        # balanced levels: every Num_E4 is a multiple of num_layers
+        assert all(nq % MIXTRAL.num_layers == 0 for nq in nqs)
+
+    def test_frontier_points_mutually_nondominated(self, frontier):
+        pts = frontier.points
+        for i, a in enumerate(pts):
+            for b in pts[i + 1:]:
+                assert not _dominates(a, b)
+                assert not _dominates(b, a)
+
+    def test_every_config_covered_by_frontier(self, frontier):
+        """Each enumerated point is on the frontier or dominated/matched
+        by a frontier point."""
+        for p in frontier.all_points:
+            assert any(
+                q is p or _dominates(q, p)
+                or (q.qos.tokens_per_s == p.qos.tokens_per_s
+                    and q.qos.quality_proxy == p.qos.quality_proxy
+                    and q.qos.device_bytes == p.qos.device_bytes)
+                for q in frontier.points)
+
+    def test_sorted_ascending_throughput(self, frontier):
+        tps = [p.qos.tokens_per_s for p in frontier.points]
+        assert tps == sorted(tps)
+
+
+class TestSelect:
+    def test_meets_soft_and_hard_constraints(self, frontier):
+        t = QoSTarget(min_tokens_per_s=5.0, max_quality_loss=0.06,
+                      mem_budget_bytes=40 * GIB)
+        p = frontier.select(t)
+        assert p.qos.tokens_per_s >= 5.0
+        assert p.qos.quality_proxy <= 1.06 + 1e-12
+        assert p.qos.device_bytes <= 40 * GIB
+
+    def test_prefers_quality_then_lowest_bytes(self, frontier):
+        t = QoSTarget(min_tokens_per_s=5.0, mem_budget_bytes=40 * GIB)
+        p = frontier.select(t)
+        meeting = [q for q in frontier.feasible(t)
+                   if q.qos.tokens_per_s >= 5.0]
+        best_quality = min(q.qos.quality_proxy for q in meeting)
+        assert p.qos.quality_proxy == best_quality
+        same_quality = [q for q in meeting
+                        if q.qos.quality_proxy == best_quality]
+        assert p.qos.device_bytes == min(q.qos.device_bytes
+                                         for q in same_quality)
+
+    def test_inf_tps_is_best_effort_fastest(self, frontier):
+        t = QoSTarget(min_tokens_per_s=math.inf,
+                      mem_budget_bytes=40 * GIB)
+        p = frontier.select(t)
+        assert p.qos.tokens_per_s == max(
+            q.qos.tokens_per_s for q in frontier.feasible(t))
+
+    def test_deterministic(self, frontier):
+        t = QoSTarget(min_tokens_per_s=3.0, mem_budget_bytes=35 * GIB)
+        assert frontier.select(t) is frontier.select(t)
+
+    def test_infeasible_budget_raises(self, frontier):
+        with pytest.raises(InfeasibleTarget):
+            frontier.select(QoSTarget(mem_budget_bytes=1 * GIB))
+
+    def test_quality_cap_filters(self, frontier):
+        t = QoSTarget(max_quality_loss=0.0, mem_budget_bytes=60 * GIB,
+                      min_tokens_per_s=1.0)
+        p = frontier.select(t)
+        assert p.num_q_experts == 0
+        assert p.qos.quality_proxy == 1.0
+
+    def test_monotone_best_throughput_in_budget(self, frontier):
+        """More memory can never make the fastest feasible point slower —
+        frontier monotonicity in the budget."""
+        best = [frontier.select(
+            QoSTarget(min_tokens_per_s=math.inf,
+                      mem_budget_bytes=g * GIB)).qos.tokens_per_s
+                for g in (8, 12, 16, 20, 26, 32, 40, 54, 70, 95)]
+        assert best == sorted(best)
+
+    def test_neighbors_walk(self, frontier):
+        t = QoSTarget(mem_budget_bytes=40 * GIB)
+        feas = frontier.feasible(t)
+        mid = feas[len(feas) // 2]
+        slower, faster = frontier.neighbors(mid, t)
+        assert slower.qos.tokens_per_s <= mid.qos.tokens_per_s
+        assert faster.qos.tokens_per_s >= mid.qos.tokens_per_s
+        assert frontier.neighbors(feas[0], t)[0] is None
+        assert frontier.neighbors(feas[-1], t)[1] is None
+
+
+class TestPlannerIntegration:
+    def test_frontier_plan_identical_to_planner_plan(self, frontier):
+        """Applying a frontier point through the planner (budget = the
+        point's device bytes, quality preference, its Num_E4) must
+        reproduce the point's plan bit-for-bit — the property the
+        engine's apply_frontier_point relies on."""
+        pl = AdaptivePlanner(MIXTRAL)
+        for p in frontier.points[:: max(1, len(frontier.points) // 6)]:
+            r = pl.plan(float(p.qos.device_bytes), "quality",
+                        p.num_q_experts)
+            assert (r.plan.quant == p.plan.quant).all()
+            assert (r.plan.location == p.plan.location).all()
+            assert r.qos.device_bytes == p.qos.device_bytes
+
+    def test_planner_frontier_cached(self):
+        pl = AdaptivePlanner(MIXTRAL)
+        assert pl.frontier() is pl.frontier()
+        assert pl.frontier(batch_size=4) is not pl.frontier()
+
+    def test_sweep_rebased_on_frontier(self):
+        pl = AdaptivePlanner(MIXTRAL)
+        res, pareto = pl.sweep(40 * GIB)
+        assert len(res) == MIXTRAL.moe.num_experts + 1
+        assert all(r.qos.device_bytes <= 40 * GIB for r in res)
+        assert pareto  # nonempty frontier
+
+    def test_dense_arch_rejected(self):
+        with pytest.raises(ValueError):
+            ParetoFrontier(get_config("qwen3-8b"))
