@@ -6,6 +6,16 @@ weight is staged through a reusable swap buffer (``jax.device_put``) — the
 TPU analogue of the paper's pinned CPU<->GPU swap space. Hits/misses and
 transferred bytes feed the serving metrics and validate the cost model.
 
+Multi-tenant serving (DESIGN.md §10) shares ONE swap space between N
+engines. Raw ``(layer, expert)`` keys would collide across tenants (tenant
+A's ``(0, 3)`` is a different weight blob than tenant B's), so the shared
+cache is accessed through :meth:`ExpertCache.scoped` views: a
+:class:`ScopedExpertCache` namespaces every key with an explicit owner
+field, keeps per-owner hit/miss/eviction accounting (the parent's LRU and
+byte budget stay GLOBAL — one tenant's misses may evict another tenant's
+swap entries, and the eviction is credited to the owner who lost the
+entry), and routes misses to the owner's own host loader.
+
 This is the *runtime* placement path; the in-graph dual-bank path
 (``mixed_moe``) covers the resident portion.
 """
@@ -14,7 +24,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Callable, Dict, Hashable, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -42,11 +52,18 @@ def _nbytes(tree) -> int:
 
 
 class ExpertCache:
-    """LRU cache of expert weight pytrees under a byte budget."""
+    """LRU cache of expert weight pytrees under a byte budget.
 
-    def __init__(self, fetch: Callable[[Hashable], object],
-                 capacity_bytes: int,
+    Used directly (one owner, ``fetch`` bound at construction) or as the
+    shared store behind :meth:`scoped` views (``fetch`` may then be None —
+    each view brings its own loader)."""
+
+    def __init__(self, fetch: Optional[Callable[[Hashable], object]] = None,
+                 capacity_bytes: int = 0,
                  device: Optional[jax.Device] = None):
+        if int(capacity_bytes) <= 0:
+            raise ValueError("ExpertCache needs a positive capacity_bytes "
+                             "(a 0-byte cache would thrash every access)")
         self._fetch = fetch                     # host loader: key -> pytree
         self.capacity = int(capacity_bytes)
         self.device = device or jax.devices()[0]
@@ -54,6 +71,9 @@ class ExpertCache:
             = collections.OrderedDict()
         self._used = 0
         self.stats = CacheStats()
+        #: owner -> view registry, so evictions of namespaced entries are
+        #: credited to the view that loses them (cross-tenant accounting).
+        self._views: Dict[str, "ScopedExpertCache"] = {}
 
     # -- core -------------------------------------------------------------
     def get(self, key: Hashable):
@@ -61,25 +81,65 @@ class ExpertCache:
             self._cache.move_to_end(key)
             self.stats.hits += 1
             return self._cache[key][0]
+        if self._fetch is None:
+            raise RuntimeError(
+                "shared ExpertCache has no fetch of its own — access it "
+                "through a scoped() view (DESIGN.md §10)")
         self.stats.misses += 1
         host = self._fetch(key)
+        self._admit(key, host)
+        return self._cache[key][0]
+
+    def _peek(self, key: Hashable):
+        """Hit path without stats (views keep their own counters);
+        returns the device pytree or None."""
+        if key not in self._cache:
+            return None
+        self._cache.move_to_end(key)
+        return self._cache[key][0]
+
+    def _admit(self, key: Hashable, host) -> Tuple[int, float]:
+        """Stage a host pytree into the cache; returns (bytes, seconds)
+        of the device transfer. Updates the parent's aggregate stats
+        (bytes_in/transfer_s only — hit/miss bookkeeping is the caller's)."""
         nb = _nbytes(host)
         self._evict_until(nb)
         t0 = time.perf_counter()
         dev = jax.device_put(host, self.device)
         jax.block_until_ready(dev)
-        self.stats.transfer_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.transfer_s += dt
         self.stats.bytes_in += nb
         self._cache[key] = (dev, nb)
         self._used += nb
-        return dev
+        return nb, dt
+
+    def _credit_eviction(self, key: Hashable):
+        """Per-owner eviction accounting for namespaced entries."""
+        self.stats.evictions += 1
+        if isinstance(key, tuple) and len(key) == 2 \
+                and isinstance(key[0], str) and key[0] in self._views:
+            self._views[key[0]].stats.evictions += 1
 
     def _evict_until(self, need: int):
         while self._cache and self._used + need > self.capacity:
-            _, (old, nb) = self._cache.popitem(last=False)
+            key, (old, nb) = self._cache.popitem(last=False)
             del old
             self._used -= nb
-            self.stats.evictions += 1
+            self._credit_eviction(key)
+
+    # -- namespacing (multi-tenant shared swap, DESIGN.md §10) --------------
+    def scoped(self, owner: str,
+               fetch: Optional[Callable[[Hashable], object]] = None
+               ) -> "ScopedExpertCache":
+        """A namespaced view for ``owner``: same LRU, same byte budget,
+        keys prefixed with the owner so identical (layer, expert) ids of
+        different tenants never collide. One view per owner."""
+        if owner in self._views:
+            raise ValueError(f"owner {owner!r} already has a scoped view")
+        view = ScopedExpertCache(self, owner, fetch)
+        self._views[owner] = view
+        return view
 
     # -- management (planner reconfig hooks) -------------------------------
     def pin(self, keys):
@@ -89,14 +149,15 @@ class ExpertCache:
 
     def invalidate(self, keys=None):
         if keys is None:
-            self.stats.evictions += len(self._cache)
+            for k in list(self._cache):
+                self._credit_eviction(k)
             self._cache.clear()
             self._used = 0
             return
         for k in list(keys):
             if k in self._cache:
                 self._used -= self._cache.pop(k)[1]
-                self.stats.evictions += 1
+                self._credit_eviction(k)
 
     def resize(self, capacity_bytes: int):
         self.capacity = int(capacity_bytes)
@@ -108,6 +169,82 @@ class ExpertCache:
 
     def resident_keys(self):
         return list(self._cache.keys())
+
+    def owner_used_bytes(self, owner: str) -> int:
+        return sum(nb for k, (_, nb) in self._cache.items()
+                   if isinstance(k, tuple) and len(k) == 2 and k[0] == owner)
+
+
+class ScopedExpertCache:
+    """One owner's view of a shared :class:`ExpertCache` (DESIGN.md §10).
+
+    Presents the single-owner cache interface (``get``/``invalidate``/
+    ``resident_keys``/``stats``) over namespaced keys ``(owner, key)``.
+    Capacity and LRU order are the PARENT's — the byte budget is jointly
+    shared, so this view's misses may evict another owner's entries (and
+    vice versa; each eviction is credited to the owner losing the entry)."""
+
+    def __init__(self, parent: ExpertCache, owner: str,
+                 fetch: Optional[Callable[[Hashable], object]] = None):
+        self.parent = parent
+        self.owner = owner
+        self._fetch = fetch
+        self.stats = CacheStats()
+
+    def bind_fetch(self, fetch: Callable[[Hashable], object]):
+        """Late-bind the host loader (the serving engine constructs its
+        loader after the view exists)."""
+        self._fetch = fetch
+
+    def _full(self, key: Hashable) -> Tuple[str, Hashable]:
+        return (self.owner, key)
+
+    # -- single-owner cache interface ---------------------------------------
+    def get(self, key: Hashable):
+        full = self._full(key)
+        hit = self.parent._peek(full)
+        if hit is not None:
+            self.stats.hits += 1
+            self.parent.stats.hits += 1
+            return hit
+        if self._fetch is None:
+            raise RuntimeError(f"scoped cache {self.owner!r}: no fetch "
+                               "bound (bind_fetch first)")
+        self.stats.misses += 1
+        self.parent.stats.misses += 1
+        host = self._fetch(key)
+        nb, dt = self.parent._admit(full, host)
+        self.stats.bytes_in += nb
+        self.stats.transfer_s += dt
+        return self.parent._cache[full][0]
+
+    def pin(self, keys):
+        for k in keys:
+            self.get(k)
+
+    def invalidate(self, keys=None):
+        """Drop this owner's entries only — other namespaces are
+        untouched (tested)."""
+        if keys is None:
+            full = [k for k in self.parent.resident_keys()
+                    if isinstance(k, tuple) and len(k) == 2
+                    and k[0] == self.owner]
+        else:
+            full = [self._full(k) for k in keys]
+        self.parent.invalidate(full)
+
+    def resident_keys(self) -> List[Hashable]:
+        return [k[1] for k in self.parent.resident_keys()
+                if isinstance(k, tuple) and len(k) == 2
+                and k[0] == self.owner]
+
+    @property
+    def used_bytes(self) -> int:
+        return self.parent.owner_used_bytes(self.owner)
+
+    @property
+    def capacity(self) -> int:
+        return self.parent.capacity
 
 
 class PrefetchingExpertCache(ExpertCache):

@@ -23,8 +23,9 @@ result — the frontier and the imperative path can never disagree.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.core import cost_model
@@ -243,6 +244,32 @@ class ParetoFrontier:
         slower = feas[i - 1] if i > 0 else None
         faster = feas[i + 1] if i + 1 < len(feas) else None
         return slower, faster
+
+    def records(self) -> List[Dict]:
+        """Bit-exact serialization of the dominant set, in frontier
+        order — the golden-regression fixture format
+        (tests/fixtures/, DESIGN.md §10.4). Floats are serialized as
+        ``float.hex()`` so equality is BITWISE (a silent cost-model
+        drift of one ulp fails the fixture), and each point carries a
+        digest of its concrete plan arrays (quant + location + format),
+        so precision/placement changes are caught even when the QoS
+        estimate happens to coincide."""
+        out = []
+        for p in self.points:
+            h = hashlib.sha256()
+            h.update(p.plan.quant.tobytes())
+            h.update(p.plan.location.tobytes())
+            h.update(f"{p.plan.bits}:{p.plan.group_size}:{p.plan.seed}"
+                     .encode())
+            out.append({
+                "num_q_experts": int(p.num_q_experts),
+                "resident_experts": int(p.resident_experts),
+                "tokens_per_s": float(p.qos.tokens_per_s).hex(),
+                "quality_proxy": float(p.qos.quality_proxy).hex(),
+                "device_bytes": int(p.qos.device_bytes),
+                "plan_sha256": h.hexdigest(),
+            })
+        return out
 
     def best_per_quality_level(self, mem_budget_bytes: float
                                ) -> List[FrontierPoint]:

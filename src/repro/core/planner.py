@@ -149,12 +149,17 @@ class AdaptivePlanner:
     def replan(self, mem_budget_bytes: float, preference: Preference,
                num_q_experts: Optional[int] = None, batch_size: int = 1):
         """Returns (PlanResult, delta|None). Keeps planner state."""
-        from repro.core.precision_plan import delta_cost_bytes, reconfig_delta
+        from repro.core.precision_plan import (delta_cost_bytes,
+                                               migrated_expert_keys,
+                                               reconfig_delta)
         new = self.plan(mem_budget_bytes, preference, num_q_experts,
                         batch_size)
         delta = None
         if self.current is not None:
             delta = reconfig_delta(self.current.plan, new.plan)
+            # the partial-reconfiguration working set: experts that
+            # actually stream (each once), and the traffic they cost
+            delta["migrated"] = migrated_expert_keys(delta, new.plan)
             delta["traffic_bytes"] = delta_cost_bytes(
                 delta, self.size_e4, self.size_e16, new.plan)
         self.current = new

@@ -133,14 +133,25 @@ def reconfig_delta(old: PrecisionPlan, new: PrecisionPlan):
     }
 
 
-def delta_cost_bytes(delta, size_e4: int, size_e16: int, new: PrecisionPlan):
-    """Host<->device traffic a reconfig needs (downtime estimator)."""
-    up = 0
-    for (l, e) in delta["to_upload"]:
-        up += size_e4 if new.quant[l, e] else size_e16
-    # format flips of device-resident experts re-upload the new format
-    for key in ("to_quantize", "to_dequantize"):
-        for (l, e) in delta[key]:
+def migrated_expert_keys(delta, new: PrecisionPlan) -> List[Tuple[int, int]]:
+    """The (layer, expert) set a PARTIAL reconfiguration actually touches
+    with host<->device traffic: uploads plus format flips of
+    device-resident experts — each expert counted ONCE even when it both
+    moves and flips format. Everything else stays in place (the paper's
+    partial-reconfiguration claim; the multi-tenant migration report
+    asserts against exactly this set, DESIGN.md §10.3)."""
+    keys = {(int(l), int(e)) for (l, e) in delta["to_upload"]}
+    for field in ("to_quantize", "to_dequantize"):
+        for (l, e) in delta[field]:
             if new.location[l, e] == DEVICE:
-                up += size_e4 if new.quant[l, e] else size_e16
+                keys.add((int(l), int(e)))
+    return sorted(keys)
+
+
+def delta_cost_bytes(delta, size_e4: int, size_e16: int, new: PrecisionPlan):
+    """Host->device traffic a reconfig needs (downtime estimator): each
+    migrated expert streams once, in its NEW format."""
+    up = 0
+    for (l, e) in migrated_expert_keys(delta, new):
+        up += size_e4 if new.quant[l, e] else size_e16
     return int(up)

@@ -15,14 +15,29 @@ requests stream:
 The imperative spelling (``--preference throughput|quality --num-q N``)
 is kept as a deprecated compatibility path over ``engine.configure``.
 
-``--trace`` replays a CSV of budget points — the multi-tenant scenario of
-the paper's Fig. 1. Rows are ``budget_gb,preference[,num_q[,min_tps]]``;
-the optional 4th SLO column switches that phase onto the declarative
-path with ``QoSTarget(mem_budget_bytes, min_tokens_per_s)``:
+``--trace`` replays a CSV of budget points — a single tenant under the
+changing allocations of the paper's Fig. 1 scenario. Rows are
+``budget_gb,preference[,num_q[,min_tps]]``; the optional 4th SLO column
+switches that phase onto the declarative path with
+``QoSTarget(mem_budget_bytes, min_tokens_per_s)``:
 
     # budget_gb, preference, num_q, min_tps (SLO)
     1.2, throughput
     0.8, quality, 0, 5.0
+
+``--tenants spec.json`` hosts N tenants under ONE shared budget through
+the :class:`~repro.serving.multi.MultiTenantEngine` (DESIGN.md §10).
+The spec carries per-tenant SLO columns (min_tps / max_ppl_x /
+deadline_s / priority) plus arbitration weight, and an optional
+``budget_fracs`` schedule replaying global budget shifts (each one a
+single joint re-arbitration). Budget fractions are of the SUMMED full
+bf16 footprint of all tenants:
+
+    {"budget_frac": 1.1, "budget_fracs": [1.1, 0.6],
+     "tenants": [
+       {"name": "chat",  "min_tps": null, "weight": 2.0,
+        "priority": 1, "deadline_s": 30.0, "requests": 3},
+       {"name": "batch", "max_ppl_x": 1.0, "requests": 3}]}
 
 Smoke-reduced on CPU (same-family config); the planner/engine logic and
 the plan signatures are identical at full scale.
@@ -30,6 +45,8 @@ the plan signatures are identical at full scale.
 from __future__ import annotations
 
 import argparse
+import json
+import math
 from pathlib import Path
 
 import jax
@@ -37,11 +54,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
+from repro.core.expert_cache import ExpertCache
 from repro.ft.checkpoint import CheckpointManager
 from repro.models.model import build_model
-from repro.serving.api import (EngineConfig, QoSTarget, RequestSLO,
-                               ServeRequest, build_engine)
-from repro.serving.qos import QoSController
+from repro.serving.api import (EngineConfig, MultiTenantEngine, QoSTarget,
+                               RequestSLO, ServeRequest, TenantSpec,
+                               build_engine)
+from repro.serving.qos import QoSController, QoSControllerConfig
 
 
 def _parse_trace(path: str):
@@ -59,6 +78,81 @@ def _parse_trace(path: str):
             float(parts[3]) if len(parts) > 3 and parts[3] else None,
         ))
     return points
+
+
+def _tenant_target(t: dict, full16: float) -> QoSTarget:
+    """Per-tenant SLO columns -> QoSTarget. ``min_tps`` null/absent means
+    best-effort-fast (inf) unless a quality cap pins the tenant."""
+    max_loss = (t["max_ppl_x"] - 1.0) if t.get("max_ppl_x") else None
+    min_tps = t.get("min_tps")
+    if min_tps is None and max_loss is None:
+        min_tps = math.inf
+    cap = t.get("budget_frac")
+    return QoSTarget(
+        min_tokens_per_s=min_tps, max_quality_loss=max_loss,
+        mem_budget_bytes=cap * full16 if cap else None)
+
+
+def _serve_tenants(args, cfg, model, params0):
+    """--tenants mode: N engines, one budget, one arbiter (DESIGN.md §10)."""
+    spec = json.loads(Path(args.tenants).read_text())
+    total = cfg.num_layers * cfg.moe.num_experts
+    full16 = cfg.non_expert_bytes() + total * cfg.expert_param_bytes(16)
+    # budget fractions are of the SUMMED full bf16 footprint of all
+    # tenants (1.0 = every tenant could be fully resident in bf16)
+    n_tenants = len(spec["tenants"])
+    fracs = spec.get("budget_fracs") \
+        or [spec.get("budget_frac", 1.1)]
+    shared = ExpertCache(capacity_bytes=max(
+        8 * cfg.expert_param_bytes(16), 1 << 20))
+    mt = MultiTenantEngine(
+        budget_bytes=fracs[0] * full16 * n_tenants, expert_cache=shared,
+        controller_config=QoSControllerConfig(
+            min_dwell_iterations=4, window_iterations=2))
+    for i, t in enumerate(spec["tenants"]):
+        params = params0 if i == 0 else model.init(jax.random.key(i))
+        engine = build_engine(
+            cfg, params,
+            EngineConfig(max_slots=2, max_len=16 + args.max_new_tokens),
+            expert_cache=shared.scoped(t["name"]))
+        mt.add_tenant(TenantSpec(t["name"], _tenant_target(t, full16),
+                                 weight=float(t.get("weight", 1.0))),
+                      engine)
+    rng = np.random.default_rng(0)
+    for phase, frac in enumerate(fracs):
+        reports0 = len(mt.reports)
+        if phase == 0:
+            sel = mt.arbitrate()
+        else:
+            mt.set_budget(frac * full16 * n_tenants)
+            sel = {n: t.point for n, t in mt.tenants.items()}
+        print(f"[serve] phase {phase}: budget {frac:.2f}x summed bf16 "
+              f"({mt.budget_bytes / 1e6:.1f} MB), "
+              f"{mt.metrics['arbitrations']:.0f} arbitrations")
+        for t in spec["tenants"]:
+            name = t["name"]
+            tn = mt.tenants[name]
+            print(f"[serve]   {name}: slo[{tn.spec.target.describe()}] "
+                  f"w={tn.spec.weight:g} "
+                  f"alloc={tn.allocated_bytes / 1e6:.2f}MB "
+                  f"-> {sel[name].summary()}")
+            for _ in range(int(t.get("requests", args.requests))):
+                tn.engine.submit_request(ServeRequest(
+                    prompt=rng.integers(1, cfg.vocab_size, 8),
+                    max_new_tokens=args.max_new_tokens,
+                    slo=RequestSLO(priority=int(t.get("priority", 0)),
+                                   deadline_s=t.get("deadline_s"))))
+        for r in mt.reports[reports0:]:     # this phase's migrations only
+            print(f"[serve]   {r.summary()}")
+        while mt.has_work():
+            mt.run_iteration(temperature=args.temperature)
+        for name, tn in mt.tenants.items():
+            lat = tn.engine.latency_percentiles()
+            print(f"[serve]   {name}: {len(tn.engine.done)} done, "
+                  f"{tn.engine.metrics['tokens_generated']} tokens, "
+                  f"p50 {lat['p50'] * 1e3:.0f} ms "
+                  f"p95 {lat['p95'] * 1e3:.0f} ms")
+    print("[serve] " + mt.summary().replace("\n", "\n[serve] "))
 
 
 def main():
@@ -92,6 +186,10 @@ def main():
     ap.add_argument("--trace", default=None,
                     help="CSV of budget_gb,preference[,num_q[,min_tps]] "
                          "to replay (4th column = SLO)")
+    ap.add_argument("--tenants", default=None,
+                    help="JSON spec of N tenants served under ONE budget "
+                         "via the multi-tenant arbiter (DESIGN.md §10); "
+                         "see the module docstring for the schema")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -110,6 +208,10 @@ def main():
         print(f"[serve] restored params from {args.ckpt_dir}")
     else:
         params = model.init(jax.random.key(0))
+
+    if args.tenants:
+        _serve_tenants(args, cfg, model, params)
+        return
 
     engine = build_engine(cfg, params, EngineConfig(
         max_slots=4, max_len=32 + args.max_new_tokens))

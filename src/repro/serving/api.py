@@ -35,6 +35,9 @@ from repro.core.cost_model import HardwareModel
 from repro.core.pareto import (  # noqa: F401  (public re-exports)
     FrontierPoint, InfeasibleTarget, ParetoFrontier, QoSTarget,
 )
+from repro.serving.multi import (  # noqa: F401  (public re-exports)
+    MultiTenantEngine, ReplanReport, ResourceArbiter, TenantSpec,
+)
 from repro.serving.scheduler import (  # noqa: F401  (public re-exports)
     Request, RequestSLO, SamplingParams,
 )
@@ -43,6 +46,7 @@ __all__ = [
     "EngineConfig", "SamplingParams", "RequestSLO", "ServeRequest",
     "ServeResult", "QoSTarget", "FrontierPoint", "ParetoFrontier",
     "InfeasibleTarget", "build_engine",
+    "MultiTenantEngine", "TenantSpec", "ResourceArbiter", "ReplanReport",
 ]
 
 
@@ -117,10 +121,14 @@ def results_of(requests: Sequence[Request]) -> List[ServeResult]:
 
 
 def build_engine(cfg, params, config: Optional[EngineConfig] = None, *,
-                 mesh=None):
+                 mesh=None, expert_cache=None):
     """Construct an :class:`~repro.serving.engine.AdaptiveServingEngine`
     from an :class:`EngineConfig` (lazy import keeps this module jax-free
-    until an engine is actually built)."""
+    until an engine is actually built). ``expert_cache`` attaches a
+    tenant-scoped view of a shared swap space
+    (:meth:`~repro.core.expert_cache.ExpertCache.scoped`) for
+    multi-tenant deployments (DESIGN.md §10)."""
     from repro.serving.engine import AdaptiveServingEngine
     return AdaptiveServingEngine(cfg, params, mesh=mesh,
-                                 config=config or EngineConfig())
+                                 config=config or EngineConfig(),
+                                 expert_cache=expert_cache)

@@ -118,7 +118,8 @@ class AdaptiveServingEngine:
                  max_active_tokens: Optional[int] = None,
                  max_queue: Optional[int] = None,
                  swap_bytes: Optional[int] = None,
-                 prefetch: bool = False):
+                 prefetch: bool = False,
+                 expert_cache=None):
         if cfg.moe is None:
             raise ValueError("the adaptive engine serves MoE models")
         if config is None:
@@ -149,15 +150,29 @@ class AdaptiveServingEngine:
             max_prompt_len=self.window,
             max_active_tokens=config.max_active_tokens,
             max_queue=config.max_queue))
-        # runtime expert streaming: host master store + device LRU swap
+        # runtime expert streaming: host master store + device LRU swap.
+        # A multi-tenant deployment passes a tenant-scoped VIEW of the
+        # shared swap space instead (core/expert_cache.py, DESIGN.md §10)
+        # — same interface, namespaced keys, jointly shared byte budget.
         self._swap_bytes = config.swap_bytes
-        cache_cls = PrefetchingExpertCache if config.prefetch \
-            else ExpertCache
-        self.expert_cache = cache_cls(
-            self._fetch_expert,
-            capacity_bytes=config.swap_bytes
-            or 4 * max(cfg.expert_param_bytes(16), 1))
-        self._prefetch = config.prefetch
+        if expert_cache is not None:
+            if config.prefetch and not hasattr(expert_cache, "hint"):
+                raise ValueError(
+                    "EngineConfig(prefetch=True) needs an expert cache "
+                    "with hint() support; the provided shared view has "
+                    "none")
+            self.expert_cache = expert_cache
+            if hasattr(expert_cache, "bind_fetch"):
+                expert_cache.bind_fetch(self._fetch_expert)
+        else:
+            cache_cls = PrefetchingExpertCache if config.prefetch \
+                else ExpertCache
+            self.expert_cache = cache_cls(
+                self._fetch_expert,
+                capacity_bytes=config.swap_bytes
+                or 4 * max(cfg.expert_param_bytes(16), 1))
+        self._prefetch = config.prefetch and hasattr(self.expert_cache,
+                                                     "hint")
         self._prev_demanded: List[Tuple[int, int]] = []
         self._host_store: Dict[Tuple[int, int], Any] = {}
         self._resident: set = set()
@@ -321,11 +336,20 @@ class AdaptiveServingEngine:
         self._prev_demanded = []     # stale-plan hints must not re-stage
         hit, self._miss_bytes_per_tok = expert_access_stats(self.cfg, plan)
         self.metrics["miss_rate"] = 1.0 - hit
-        self.metrics["reconfig_s"] += time.perf_counter() - t0 - drain_s
+        downtime = time.perf_counter() - t0 - drain_s
+        self.metrics["reconfig_s"] += downtime
         self.metrics["reconfigs"] += 1
         if delta is not None:
+            # partial-reconfiguration report (DESIGN.md §10.3): only the
+            # diffed experts migrate; everything else stays in place
             self.metrics["last_delta_traffic_gib"] = \
                 delta["traffic_bytes"] / 2**30
+            self.metrics["last_migrated_experts"] = len(delta["migrated"])
+            self.metrics["last_migrated_bytes"] = delta["traffic_bytes"]
+            self.metrics["last_reconfig_downtime_s"] = downtime
+            self.metrics["migrated_bytes_total"] = \
+                self.metrics.get("migrated_bytes_total", 0) \
+                + delta["traffic_bytes"]
         return result
 
     # ------------------------------------------------------------------

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
 
@@ -63,11 +63,15 @@ class QoSController:
     """Feedback loop from measured QoS to frontier walks (DESIGN.md §9)."""
 
     def __init__(self, engine, frontier: Optional[ParetoFrontier] = None,
-                 config: QoSControllerConfig = QoSControllerConfig()):
+                 config: QoSControllerConfig = QoSControllerConfig(),
+                 on_violation: Optional[Callable[[], None]] = None):
         self.engine = engine
         self.frontier = frontier if frontier is not None \
             else engine.frontier
         self.config = config
+        #: fired whenever a target violation is recorded — the
+        #: multi-tenant arbiter's re-arbitration trigger (DESIGN.md §10).
+        self.on_violation = on_violation
         self.target: Optional[QoSTarget] = None
         self.point: Optional[FrontierPoint] = None
         self._win_iter = 0
@@ -88,6 +92,15 @@ class QoSController:
         self.target = target
         self._apply(point)
         return point
+
+    def adopt(self, target: QoSTarget, point: FrontierPoint) -> None:
+        """Activate an EXTERNALLY selected (target, point) pair — the
+        multi-tenant :class:`~repro.serving.multi.ResourceArbiter` picks
+        points jointly across tenants, so the local ``select()`` is
+        bypassed; ordinary banded control resumes from the adopted
+        point (with the usual post-replan dwell)."""
+        self.target = target
+        self._apply(point)
 
     # -- the loop ----------------------------------------------------------
     def step(self) -> bool:
@@ -126,7 +139,7 @@ class QoSController:
         if self.target.max_p95_latency_s is not None and faster is not None:
             p95 = self._measured_p95()
             if p95 is not None and p95 > self.target.max_p95_latency_s:
-                self.metrics["violations"] += 1
+                self._violation()
                 self._apply(faster)
                 return True
         if tgt is None:
@@ -135,7 +148,7 @@ class QoSController:
             # an infinite target is "as fast as possible" (best effort),
             # not an SLO that can be violated
             if math.isfinite(tgt):
-                self.metrics["violations"] += 1
+                self._violation()
             if faster is None:
                 return False               # already at the fast end: best
                                            # effort, keep serving
@@ -155,6 +168,11 @@ class QoSController:
         return False
 
     # -- internals ---------------------------------------------------------
+    def _violation(self):
+        self.metrics["violations"] += 1
+        if self.on_violation is not None:
+            self.on_violation()
+
     def _measured_p95(self) -> Optional[float]:
         fn = getattr(self.engine, "latency_percentiles", None)
         if fn is None:

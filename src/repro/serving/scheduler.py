@@ -127,6 +127,12 @@ class SchedulerConfig:
     max_prompt_len: Optional[int] = None
     max_queue: Optional[int] = None
     max_active_tokens: Optional[int] = None
+    # Starvation control (DESIGN.md §9.2): every ``aging_s`` seconds a
+    # request waits in the queue, its EFFECTIVE priority rises one class,
+    # so a sustained stream of high-priority arrivals cannot starve
+    # low-priority requests forever (deadline-style aging — the wait
+    # itself becomes the urgency). None disables aging (strict classes).
+    aging_s: Optional[float] = None
 
 
 class ContinuousScheduler:
@@ -193,29 +199,42 @@ class ContinuousScheduler:
         return bool(self.queue) or self.num_active > 0
 
     # -- join / retire -----------------------------------------------------
-    @staticmethod
-    def _admission_key(req: Request):
-        """Priority classes first, then earliest deadline, then FIFO.
+    def effective_priority(self, req: Request, now: Optional[float]) -> int:
+        """SLO priority plus aging: one class per ``aging_s`` of queue
+        wait (0 extra when aging is disabled or ``now`` is unknown)."""
+        prio = req.slo.priority
+        if self.cfg.aging_s is not None and now is not None:
+            prio += int(max(0.0, now - req.t_submit) / self.cfg.aging_s)
+        return prio
+
+    def _admission_key(self, req: Request, now: Optional[float]):
+        """Aged priority classes first, then earliest deadline, then FIFO.
         Deadline-less requests sort after any deadline in their class."""
         dl = req.deadline
-        return (-req.slo.priority,
+        return (-self.effective_priority(req, now),
                 dl if dl is not None else float("inf"),
                 req.t_submit, req.rid)
 
     def admit(self, now: Optional[float] = None
               ) -> List[Tuple[int, Request]]:
         """Pop queued requests into free slots subject to the token budget,
-        in admission order (priority desc, deadline asc, FIFO); returns
-        [(slot, request)] for the engine to prefill. When the next request
-        in admission order does not fit the token budget, admission stops —
-        no skip-ahead, so a large high-priority request is never starved
-        by smaller low-priority ones."""
+        in admission order (aged priority desc, deadline asc, FIFO);
+        returns [(slot, request)] for the engine to prefill. When the next
+        request in admission order does not fit the token budget, admission
+        stops — no skip-ahead, so a large high-priority request is never
+        starved by smaller low-priority ones."""
         joined: List[Tuple[int, Request]] = []
         claim = self.active_token_claim
+        # aging compares WAITED time, so it needs a consistent "now":
+        # the caller's virtual clock when given, wall clock otherwise.
+        key_now = now
+        if key_now is None and self.cfg.aging_s is not None:
+            key_now = time.perf_counter()
         for slot in self.free_slots():
             if not self.queue:
                 break
-            nxt = min(self.queue, key=self._admission_key)
+            nxt = min(self.queue,
+                      key=lambda r: self._admission_key(r, key_now))
             if self.cfg.max_active_tokens is not None and \
                     claim + nxt.token_claim > self.cfg.max_active_tokens \
                     and self.num_active > 0:

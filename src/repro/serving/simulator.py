@@ -1,0 +1,183 @@
+"""Deterministic serving simulator — the reusable test/benchmark harness
+behind the QoS, scheduler and multi-tenant suites (DESIGN.md §10.4).
+
+The QoS controller and the multi-tenant arbiter are CONTROL loops: what
+they need from "an engine" is a metrics dict, ``apply_frontier_point``
+and (optionally) ``latency_percentiles``. Driving the real jax engine
+through every controller scenario would be slow and, worse,
+non-deterministic (wall-clock throughput noise would flake the
+convergence assertions). This module is the shared stand-in:
+
+* :class:`VirtualClock` — simulated time; nothing here reads
+  ``time.perf_counter``, so a scenario replays bit-identically.
+* :class:`SimulatedEngine` — engine-shaped object whose *measured*
+  throughput is scriptable per frontier point: by default the analytic
+  estimate times a constant ``model_error`` (the controller must close
+  exactly that gap, as it would close wall-clock drift in production), or
+  an arbitrary ``throughput_fn(point, iteration)`` for time-varying
+  interference. Per-request latency is scriptable the same way
+  (``latency_fn``) for p95-target scenarios.
+* :func:`run_scripted` — drives N decode iterations with a controller
+  stepping between them, firing scheduled events (budget shocks, target
+  renegotiations, interference onsets) at exact iteration indices.
+* :func:`budget_shock` — the canonical event: the job manager grows or
+  shrinks the active target's memory budget mid-run.
+
+Used by ``tests/test_qos.py``, ``tests/test_multi_tenant.py`` and the
+multi-tenant mode of ``benchmarks/fig3_throughput.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.pareto import FrontierPoint
+
+__all__ = ["VirtualClock", "SimulatedEngine", "run_scripted", "budget_shock"]
+
+
+class VirtualClock:
+    """Deterministic simulated time (seconds). Engines sharing one clock
+    advance it cooperatively; tests read/advance it explicitly."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"time only moves forward (dt={dt})")
+        self._t += dt
+        return self._t
+
+
+ThroughputFn = Callable[[FrontierPoint, int], float]
+LatencyFn = Callable[[FrontierPoint, int], float]
+
+
+class SimulatedEngine:
+    """Engine-shaped deterministic stand-in for control-loop tests.
+
+    Interface (the subset of ``AdaptiveServingEngine`` the QoSController
+    and the MultiTenantEngine consume):
+
+    * ``metrics`` — iterations / tokens_generated / decode_s / transfer_s;
+    * ``apply_frontier_point(point)`` — records the replan (count +
+      full history in ``applied``) and switches the simulated speed;
+    * ``latency_percentiles(qs, last_n=None)`` — over scripted latencies.
+
+    Scripting knobs:
+
+    * ``model_error`` — measured tokens/s = analytic estimate × this
+      factor (constant miscalibration);
+    * ``throughput_fn(point, iteration)`` — overrides ``model_error``
+      with an arbitrary schedule (time-varying co-tenant interference);
+    * ``latency_fn(point, iteration)`` — one completed-request latency
+      recorded per iteration (drives p95 targets);
+    * ``clock`` — a shared :class:`VirtualClock`; each iteration advances
+      it by the simulated decode time ``batch / measured_tps``.
+    """
+
+    def __init__(self, *, model_error: float = 1.0,
+                 throughput_fn: Optional[ThroughputFn] = None,
+                 latency_fn: Optional[LatencyFn] = None,
+                 clock: Optional[VirtualClock] = None,
+                 batch: int = 4):
+        self.model_error = model_error
+        self.clock = clock if clock is not None else VirtualClock()
+        self.batch = batch
+        self._throughput_fn = throughput_fn
+        self._latency_fn = latency_fn
+        self.point: Optional[FrontierPoint] = None
+        self.replans = 0
+        #: full replan history, oldest first (assertable trace)
+        self.applied: List[FrontierPoint] = []
+        self.metrics: Dict[str, float] = {
+            "iterations": 0, "tokens_generated": 0,
+            "decode_s": 0.0, "transfer_s": 0.0,
+        }
+        self._latencies: List[float] = []
+
+    # -- engine interface ---------------------------------------------------
+    def apply_frontier_point(self, point: FrontierPoint):
+        self.point = point
+        self.replans += 1
+        self.applied.append(point)
+
+    def measured_tps(self) -> float:
+        """The tokens/s the NEXT iteration will run at."""
+        if self.point is None:
+            raise RuntimeError("no frontier point applied")
+        if self._throughput_fn is not None:
+            return float(self._throughput_fn(self.point,
+                                             int(self.metrics["iterations"])))
+        return self.point.qos.tokens_per_s * self.model_error
+
+    def run_iteration(self, batch: Optional[int] = None) -> None:
+        """One decode iteration at the active point's simulated speed.
+        Both scripting hooks see the SAME (pre-increment) iteration
+        index, so a schedule keyed on one iteration switches throughput
+        and latency together."""
+        b = self.batch if batch is None else batch
+        it = int(self.metrics["iterations"])
+        tps = self.measured_tps()
+        dt = b / max(tps, 1e-12)
+        self.metrics["iterations"] += 1
+        self.metrics["tokens_generated"] += b
+        self.metrics["decode_s"] += dt
+        self.clock.advance(dt)
+        if self._latency_fn is not None:
+            self._latencies.append(float(self._latency_fn(self.point, it)))
+
+    def latency_percentiles(self, qs: Sequence[int] = (50, 95),
+                            last_n: Optional[int] = None
+                            ) -> Dict[str, float]:
+        lats = self._latencies if last_n is None else self._latencies[-last_n:]
+        if not lats:
+            return {f"p{q}": 0.0 for q in qs}
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def has_work(self) -> bool:
+        """The simulator is driven open-loop (no request queue)."""
+        return False
+
+    def summary(self) -> str:
+        p = self.point.summary() if self.point else "no point"
+        return (f"sim[{p}] it={self.metrics['iterations']:.0f} "
+                f"tok={self.metrics['tokens_generated']:.0f} "
+                f"t={self.clock.now():.2f}s replans={self.replans}")
+
+
+def run_scripted(engine, controller, iterations: int, *,
+                 events: Optional[Dict[int, Callable[[], None]]] = None,
+                 batch: Optional[int] = None) -> None:
+    """Drive ``iterations`` decode iterations, stepping ``controller``
+    between them (exactly where the live driver's ``on_iteration`` hook
+    runs). ``events[i]`` fires BEFORE iteration ``i`` (0-based) — budget
+    shocks, target renegotiations, interference onsets. ``controller``
+    may be None (open-loop replay) or anything with a ``step()``."""
+    events = events or {}
+    for i in range(iterations):
+        if i in events:
+            events[i]()
+        engine.run_iteration(batch)
+        if controller is not None:
+            controller.step()
+
+
+def budget_shock(controller, mem_budget_bytes: float) -> Callable[[], None]:
+    """Event factory for :func:`run_scripted`: the job manager resizes
+    the active target's memory budget mid-run (the canonical shock of
+    the paper's Fig. 1 multi-tenant scenario). The controller sees the
+    new budget on its next ``step()`` — a shrink below the active point
+    is a feasibility violation and bypasses hysteresis (DESIGN.md §9.3)."""
+    def fire():
+        if controller.target is None:
+            raise RuntimeError("controller has no active target to shock")
+        controller.target = dataclasses.replace(
+            controller.target, mem_budget_bytes=mem_budget_bytes)
+    return fire

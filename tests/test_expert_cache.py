@@ -85,3 +85,104 @@ class TestPrefetch:
         c.get(("l1", 1))
         assert c.stats.misses == before
         assert c.stats.hits >= 2
+
+
+def make_shared(capacity_experts=4, expert_kb=1):
+    """Shared parent + one distinct host store per owner: identical
+    (layer, expert) keys map to DIFFERENT blobs per owner — exactly the
+    collision the namespace field exists to prevent."""
+    nbytes = expert_kb * 1024
+    parent = ExpertCache(capacity_bytes=capacity_experts * nbytes)
+
+    def mk_fetch(owner_fill):
+        def fetch(key):
+            return np.full(nbytes, owner_fill, np.uint8)
+        return fetch
+
+    a = parent.scoped("A", mk_fetch(1))
+    b = parent.scoped("B", mk_fetch(2))
+    return parent, a, b
+
+
+class TestNamespaces:
+    def test_same_key_different_owners_no_collision(self):
+        parent, a, b = make_shared()
+        va = a.get((0, 3))
+        vb = b.get((0, 3))
+        # two distinct entries, two distinct blobs — no cross-tenant reuse
+        assert parent.stats.misses == 2 and parent.stats.hits == 0
+        assert int(np.asarray(va)[0]) == 1 and int(np.asarray(vb)[0]) == 2
+        assert a.resident_keys() == [(0, 3)]
+        assert b.resident_keys() == [(0, 3)]
+        assert len(parent.resident_keys()) == 2
+
+    def test_hits_stay_per_owner(self):
+        _, a, b = make_shared()
+        a.get((0, 0))
+        a.get((0, 0))
+        b.get((0, 0))
+        assert a.stats.hits == 1 and a.stats.misses == 1
+        assert b.stats.hits == 0 and b.stats.misses == 1
+
+    def test_invalidate_scoped_to_owner(self):
+        parent, a, b = make_shared()
+        a.get((0, 0))
+        a.get((0, 1))
+        b.get((0, 0))
+        a.invalidate([(0, 0)])
+        assert a.resident_keys() == [(0, 1)]
+        assert b.resident_keys() == [(0, 0)]       # untouched
+        a.invalidate()                              # full namespace clear
+        assert a.resident_keys() == []
+        assert b.resident_keys() == [(0, 0)]
+        assert a.stats.evictions == 2 and b.stats.evictions == 0
+        assert parent.stats.evictions == 2
+        assert parent.used_bytes == 1024
+
+    def test_cross_owner_lru_eviction_credited_to_loser(self):
+        """The byte budget is jointly shared: B's miss may evict A's LRU
+        entry, and the eviction is charged to A's accounting."""
+        parent, a, b = make_shared(capacity_experts=2)
+        a.get((0, 0))
+        a.get((0, 1))
+        b.get((0, 0))          # budget full -> evicts A's LRU (0,0)
+        assert a.resident_keys() == [(0, 1)]
+        assert b.resident_keys() == [(0, 0)]
+        assert a.stats.evictions == 1
+        assert b.stats.evictions == 0
+        assert parent.stats.evictions == 1
+        assert parent.used_bytes <= parent.capacity
+
+    def test_owner_used_bytes(self):
+        parent, a, b = make_shared(capacity_experts=4, expert_kb=2)
+        a.get((0, 0))
+        a.get((0, 1))
+        b.get((0, 0))
+        assert a.used_bytes == 2 * 2048
+        assert b.used_bytes == 2048
+        assert parent.used_bytes == 3 * 2048
+
+    def test_duplicate_owner_rejected(self):
+        parent, _, _ = make_shared()
+        with pytest.raises(ValueError, match="already has a scoped view"):
+            parent.scoped("A")
+
+    def test_unbound_fetch_raises_then_bind_fetch(self):
+        parent = ExpertCache(capacity_bytes=4096)
+        v = parent.scoped("late")
+        with pytest.raises(RuntimeError, match="no fetch"):
+            v.get((0, 0))
+        v.bind_fetch(lambda key: np.zeros(16, np.uint8))
+        assert np.asarray(v.get((0, 0))).shape == (16,)
+
+    def test_shared_parent_get_requires_view(self):
+        parent = ExpertCache(capacity_bytes=4096)
+        with pytest.raises(RuntimeError, match="scoped"):
+            parent.get((0, 0))
+
+    def test_zero_capacity_rejected(self):
+        """A 0-byte cache would silently thrash every access."""
+        with pytest.raises(ValueError, match="capacity"):
+            ExpertCache(lambda k: None)
+        with pytest.raises(ValueError, match="capacity"):
+            ExpertCache(lambda k: None, capacity_bytes=0)

@@ -1,0 +1,70 @@
+"""Golden regression fixture for the ParetoFrontier (DESIGN.md §10.4).
+
+The frontier is the contract every declarative-serving layer (QoS
+controller, multi-tenant arbiter, launch CLI) builds on: a silent
+cost-model drift — a changed constant, a reordered float reduction, a
+different rng consumption pattern in plan assignment — would move every
+tenant's operating point without failing any behavioural test. This
+fixture pins the ENUMERATED DOMINANT SET for one canonical
+configuration (mixtral-8x7b, default HardwareModel, batch 1, seed 0)
+bit-exactly: QoS floats are compared via ``float.hex()`` and each
+point's concrete PrecisionPlan via a sha256 of its arrays.
+
+On an INTENTIONAL cost-model/planner change, regenerate with:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/test_frontier_golden.py -q
+
+and commit the fixture diff alongside the change that caused it.
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.pareto import ParetoFrontier
+
+FIXTURE = Path(__file__).parent / "fixtures" \
+    / "frontier_mixtral-8x7b_hw-default_b1_s0.json"
+
+
+@pytest.fixture(scope="module")
+def frontier():
+    # pinned config: default HardwareModel(), batch_size=1, seed=0
+    return ParetoFrontier(get_config("mixtral-8x7b"))
+
+
+def test_dominant_set_matches_golden_fixture(frontier):
+    records = frontier.records()
+    if os.environ.get("REGEN_GOLDEN"):
+        FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+        FIXTURE.write_text(json.dumps(records, indent=1) + "\n")
+        pytest.skip(f"regenerated {FIXTURE.name}")
+    assert FIXTURE.exists(), \
+        f"golden fixture missing — regenerate with REGEN_GOLDEN=1 " \
+        f"({FIXTURE})"
+    golden = json.loads(FIXTURE.read_text())
+    assert len(records) == len(golden), \
+        f"dominant set size drifted: {len(records)} != {len(golden)}"
+    for i, (got, want) in enumerate(zip(records, golden)):
+        assert got == want, (
+            f"frontier point {i} drifted:\n  got  {got}\n  want {want}\n"
+            f"(bit-exact compare; intentional cost-model changes must "
+            f"regenerate the fixture)")
+
+
+def test_enumeration_is_deterministic_run_to_run(frontier):
+    """Two independent enumerations in one process are bit-identical —
+    no hidden global rng/state feeds the frontier."""
+    again = ParetoFrontier(get_config("mixtral-8x7b"))
+    assert again.records() == frontier.records()
+
+
+def test_records_roundtrip_floats_bitexact(frontier):
+    """float.hex() survives JSON round-tripping without precision loss."""
+    rt = json.loads(json.dumps(frontier.records()))
+    for rec, p in zip(rt, frontier.points):
+        assert float.fromhex(rec["tokens_per_s"]) == p.qos.tokens_per_s
+        assert float.fromhex(rec["quality_proxy"]) == p.qos.quality_proxy

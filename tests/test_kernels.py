@@ -95,6 +95,80 @@ class TestQ4MatmulKernel:
                              interpret=True)
 
 
+class TestParityPropertyGrid:
+    """Property-style parity vs the pure-jnp oracle across a SEEDED grid
+    of shapes, group sizes and int4/int8 — including edge tiles where
+    M/N/K are NOT multiples of the default (128, 256, 128) blocks, so
+    the clamp/divisor tile-selection paths and the M-padding wrapper are
+    exercised, not just the aligned fast path (interpret mode on CPU)."""
+
+    @given(m=st.integers(1, 200), ki=st.integers(1, 5),
+           ni=st.integers(1, 6), bits=st.sampled_from([4, 8]),
+           group=st.sampled_from([32, 64]), seed=st.integers(0, 9999))
+    @settings(max_examples=20, deadline=None)
+    def test_wrapper_parity_any_shape(self, m, ki, ni, bits, group, seed):
+        """q_matmul == oracle for arbitrary M (padded inside the
+        wrapper) and K/N that are multiples of the group size but NOT of
+        the default blocks (the wrapper shrinks tiles to divisors)."""
+        k, n = group * ki, 32 * ni
+        x, qt = make_case(m, k, n, bits, group, seed)
+        out = q_matmul(x, qt, out_dtype=jnp.float32, interpret=True)
+        assert out.shape == (m, n)
+        assert_matches_oracle(out, x, qt)
+
+    @given(mi=st.integers(1, 4), ki=st.integers(1, 4), ni=st.integers(1, 4),
+           bits=st.sampled_from([4, 8]), seed=st.integers(0, 9999))
+    @settings(max_examples=12, deadline=None)
+    def test_kernel_parity_odd_explicit_tiles(self, mi, ki, ni, bits,
+                                              seed):
+        """The raw kernel with deliberately odd (non-default,
+        non-square) tile choices: 3 tiles per axis of sizes that never
+        equal the defaults. Output must not depend on the tiling."""
+        m, k, n = 32 * mi, 96 * ki, 96 * ni
+        x, qt = make_case(m, k, n, bits, 32, seed)
+        out = quantized_matmul(
+            x, qt.q, qt.scales, bits=bits, group_size=32,
+            block_m=32, block_n=96, block_k=96,
+            out_dtype=jnp.float32, interpret=True)
+        assert_matches_oracle(out, x, qt)
+
+    def test_edge_tile_clamp_below_default_blocks(self):
+        """Dims smaller than every default block (M=8 < 128, N=64 < 256,
+        K=64 < 128): the kernel clamps each block to the dim."""
+        x, qt = make_case(8, 64, 64, 4, 32)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=4, group_size=32,
+                               out_dtype=jnp.float32, interpret=True)
+        assert out.shape == (8, 64)
+        assert_matches_oracle(out, x, qt)
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_wrapper_parity_prime_ish_edge_case(self, bits):
+        """A deliberately awkward single case: M prime, K=160 and N=96
+        not multiples of any default block (the divisor search lands on
+        32-multiples)."""
+        x, qt = make_case(37, 160, 96, bits, 32, seed=7)
+        out = q_matmul(x, qt, out_dtype=jnp.float32, interpret=True)
+        assert out.shape == (37, 96)
+        assert_matches_oracle(out, x, qt)
+
+    @given(e=st.integers(1, 3), c=st.sampled_from([8, 40]),
+           bits=st.sampled_from([4, 8]), seed=st.integers(0, 999))
+    @settings(max_examples=6, deadline=None)
+    def test_expert_batched_parity_edge_tiles(self, e, c, bits, seed):
+        """The vmapped expert path on non-default tile shapes."""
+        rng = np.random.default_rng(seed)
+        k, n = 96, 96
+        x = jnp.asarray(rng.standard_normal((e, c, k)), jnp.bfloat16)
+        w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+        qt = quantize(w, bits, 32)
+        out = q_expert_matmul(x, qt, interpret=True)
+        ref = expert_matmul_ref(x, qt.q, qt.scales, bits=bits,
+                                group_size=32, out_dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=5e-2, atol=5e-2 * float(jnp.abs(ref).max()))
+
+
 class TestOpsWrappers:
     @pytest.mark.parametrize("m", [1, 7, 128, 200])
     def test_q_matmul_pads_m(self, m):

@@ -1,0 +1,234 @@
+"""Multi-tenant serving under one shared budget (serving/multi.py,
+DESIGN.md §10), driven entirely on the deterministic simulator
+(serving/simulator.py): joint water-filling arbitration, exactly-once
+re-arbitration on a global budget shift, partial (diff-only) expert
+migration, and violation-driven joint rebalancing."""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.pareto import InfeasibleTarget, ParetoFrontier, QoSTarget
+from repro.core.precision_plan import migrated_expert_keys, reconfig_delta
+from repro.serving.multi import (GlobalBudgetInfeasible, MultiTenantEngine,
+                                 ResourceArbiter, TenantSpec)
+from repro.serving.qos import QoSControllerConfig
+from repro.serving.simulator import SimulatedEngine, VirtualClock
+
+MIXTRAL = get_config("mixtral-8x7b")
+GIB = 2**30
+
+CTL = QoSControllerConfig(tolerance=0.1, min_dwell_iterations=4,
+                          window_iterations=2)
+
+
+@pytest.fixture(scope="module")
+def frontier():
+    return ParetoFrontier(MIXTRAL)
+
+
+def make_mt(frontier, budget_gib, specs_errors, **kw):
+    """MultiTenantEngine over simulated tenants sharing one virtual
+    clock; specs_errors = [(TenantSpec, model_error), ...]."""
+    clock = VirtualClock()
+    mt = MultiTenantEngine(budget_gib * GIB, controller_config=CTL, **kw)
+    engines = []
+    for spec, err in specs_errors:
+        eng = SimulatedEngine(model_error=err, clock=clock)
+        mt.add_tenant(spec, eng, frontier)
+        engines.append(eng)
+    return mt, engines
+
+
+def run_joint(mt, engines, iterations):
+    for _ in range(iterations):
+        for eng in engines:
+            eng.run_iteration()
+        mt.step()
+
+
+INTERACTIVE = TenantSpec("interactive", QoSTarget(min_tokens_per_s=20.0))
+BATCH = TenantSpec("batch", QoSTarget(min_tokens_per_s=1.0,
+                                      max_quality_loss=0.0))
+
+
+class TestJointArbitration:
+    def test_distinct_points_under_shared_budget(self, frontier):
+        """Two tenants with different SLOs (a tokens/s-hungry interactive
+        tenant, a quality-pinned batch tenant) land on DISTINCT frontier
+        points whose joint footprint fits the shared budget, and stay
+        there (one arbitration, no further replans) when measurements
+        match the model."""
+        mt, (eng_i, eng_b) = make_mt(
+            frontier, 40.0, [(INTERACTIVE, 1.0), (BATCH, 1.0)])
+        sel = mt.arbitrate()
+        assert sel["interactive"] is not sel["batch"]
+        assert (sel["interactive"].qos.device_bytes
+                + sel["batch"].qos.device_bytes) <= 40 * GIB
+        # each SLO shaped its own point
+        assert sel["interactive"].qos.tokens_per_s >= 20.0
+        assert sel["batch"].qos.quality_proxy == 1.0
+        run_joint(mt, [eng_i, eng_b], 100)
+        # converged: measured throughput holds each tenant's target
+        assert eng_i.point is sel["interactive"]
+        assert eng_b.point is sel["batch"]
+        assert mt.metrics["arbitrations"] == 1
+        assert eng_i.replans == 1 and eng_b.replans == 1
+        ctl_i = mt.tenants["interactive"].controller
+        assert ctl_i.metrics["last_measured_tps"] \
+            >= 20.0 * (1 - CTL.tolerance)
+        assert ctl_i.metrics["violations"] == 0
+
+    def test_budget_shrink_exactly_one_rearbitration(self, frontier):
+        """A global budget shrink triggers EXACTLY one joint
+        re-arbitration — the downsized tenant migrates once, the other
+        keeps its point, and no replan storm follows."""
+        specs = [(TenantSpec("interactive",
+                             QoSTarget(min_tokens_per_s=8.0)), 1.0),
+                 (BATCH, 1.0)]
+        mt, engines = make_mt(frontier, 40.0, specs)
+        sel0 = mt.arbitrate()
+        run_joint(mt, engines, 30)
+        assert mt.metrics["arbitrations"] == 1
+        replans0 = mt.metrics["replans"]
+
+        assert mt.set_budget(20.0 * GIB) is True
+        assert mt.metrics["arbitrations"] == 2      # the one re-arbitration
+        sel1 = {n: t.point for n, t in mt.tenants.items()}
+        assert sel1["interactive"] is not sel0["interactive"]
+        assert sel1["batch"] is sel0["batch"]       # untouched tenant
+        assert (sel1["interactive"].qos.device_bytes
+                + sel1["batch"].qos.device_bytes) <= 20 * GIB
+        # exactly one tenant replanned, with a partial migration report
+        assert mt.metrics["replans"] == replans0 + 1
+        assert mt.reports[-1].tenant == "interactive"
+        assert 0 < mt.reports[-1].migrated_experts \
+            < MIXTRAL.num_layers * MIXTRAL.moe.num_experts
+        # quiet afterwards: still meeting floors -> no storm
+        run_joint(mt, engines, 80)
+        assert mt.metrics["arbitrations"] == 2
+        assert mt.metrics["replans"] == replans0 + 1
+        assert mt.tenants["interactive"].controller.metrics[
+            "last_measured_tps"] >= 8.0 * (1 - CTL.tolerance)
+
+    def test_placement_only_replan_migrates_only_the_diff(self, frontier):
+        """A budget change that moves a tenant along the residency axis
+        (same bank split) must migrate EXACTLY the experts the plan diff
+        names — not the full expert set (the paper's partial runtime
+        reconfiguration)."""
+        spec = TenantSpec("pinned", QoSTarget(min_tokens_per_s=math.inf,
+                                              max_quality_loss=0.0))
+        mt, engines = make_mt(frontier, 14.0, [(spec, 1.0)])
+        mt.arbitrate()
+        old = mt.tenants["pinned"].point
+        mt.set_budget(25.0 * GIB)                   # residency-only grow
+        new = mt.tenants["pinned"].point
+        assert new is not old
+        assert new.plan.bank_sizes() == old.plan.bank_sizes()
+        report = mt.reports[-1]
+        expected = migrated_expert_keys(
+            reconfig_delta(old.plan, new.plan), new.plan)
+        total = MIXTRAL.num_layers * MIXTRAL.moe.num_experts
+        assert report.placement_only is True
+        assert report.migrated_experts == len(expected)
+        # the diff is the residency delta, NOT the whole expert set
+        assert report.migrated_experts \
+            == new.resident_experts - old.resident_experts
+        assert 0 < report.migrated_experts < total
+        assert report.evicted_experts == 0
+        assert report.migrated_bytes > 0 and report.downtime_s > 0
+
+    def test_qos_miss_triggers_joint_rearbitration(self, frontier):
+        """A tenant whose measured throughput misses its floor (2x
+        cost-model error) reports violations; the arbiter re-arbitrates
+        with the observed derate and shifts bytes until the floor holds
+        — then goes quiet."""
+        specs = [(TenantSpec("interactive",
+                             QoSTarget(min_tokens_per_s=8.0)), 0.5),
+                 (BATCH, 1.0)]
+        mt, engines = make_mt(frontier, 26.0, specs, cooldown_iterations=8)
+        mt.arbitrate()
+        t = mt.tenants["interactive"]
+        assert t.point.qos.tokens_per_s >= 8.0      # analytically fine
+        assert t.point.qos.tokens_per_s * 0.5 < 8.0  # measured will miss
+        run_joint(mt, engines, 200)
+        ctl = t.controller
+        assert ctl.metrics["violations"] > 0
+        assert mt.metrics["arbitrations"] >= 2       # rebalanced jointly
+        assert t.derate == pytest.approx(0.5, rel=1e-6)
+        assert ctl.metrics["last_measured_tps"] \
+            >= 8.0 * (1 - CTL.tolerance)
+        # the joint footprint never overflows the envelope
+        used = sum(tt.point.qos.device_bytes for tt in mt.tenants.values())
+        assert used <= 26 * GIB
+
+    def test_shared_swap_is_tenant_namespaced(self, frontier):
+        """Both tenants get scoped views of ONE shared swap space; their
+        identical (layer, expert) ids never collide."""
+        mt, _ = make_mt(frontier, 40.0,
+                        [(INTERACTIVE, 1.0), (BATCH, 1.0)])
+        va = mt.tenants["interactive"].cache_view
+        vb = mt.tenants["batch"].cache_view
+        assert va.parent is mt.cache and vb.parent is mt.cache
+        va.bind_fetch(lambda key: __import__("numpy").zeros(8, "uint8"))
+        vb.bind_fetch(lambda key: __import__("numpy").ones(8, "uint8"))
+        assert int(va.get((0, 0))[0]) == 0
+        assert int(vb.get((0, 0))[0]) == 1          # distinct entry
+        assert mt.cache.stats.misses == 2
+
+
+class TestResourceArbiter:
+    def test_deterministic(self, frontier):
+        arb = ResourceArbiter()
+        entries = [(INTERACTIVE, frontier, 1.0), (BATCH, frontier, 1.0)]
+        sel1, used1 = arb.arbitrate(entries, 40 * GIB)
+        sel2, used2 = arb.arbitrate(entries, 40 * GIB)
+        assert used1 == used2
+        assert all(sel1[k] is sel2[k] for k in sel1)
+
+    def test_global_budget_infeasible(self, frontier):
+        arb = ResourceArbiter()
+        entries = [(INTERACTIVE, frontier, 1.0), (BATCH, frontier, 1.0)]
+        with pytest.raises(GlobalBudgetInfeasible):
+            arb.arbitrate(entries, 5 * GIB)     # < 2 non-expert floors
+
+    def test_tenant_cap_respected_and_named_on_infeasible(self, frontier):
+        spec = TenantSpec("capped", QoSTarget(mem_budget_bytes=1 * GIB))
+        with pytest.raises(InfeasibleTarget, match="capped"):
+            ResourceArbiter().arbitrate([(spec, frontier, 1.0)], 40 * GIB)
+
+    def test_weight_tilts_water_filling(self, frontier):
+        """Same SLO, 3x weight: the heavier tenant wins the marginal
+        bytes of a tight budget."""
+        heavy = TenantSpec("heavy", QoSTarget(min_tokens_per_s=math.inf),
+                           weight=3.0)
+        light = TenantSpec("light", QoSTarget(min_tokens_per_s=math.inf),
+                           weight=1.0)
+        sel, used = ResourceArbiter().arbitrate(
+            [(heavy, frontier, 1.0), (light, frontier, 1.0)], 20 * GIB)
+        assert used <= 20 * GIB
+        assert sel["heavy"].qos.device_bytes > sel["light"].qos.device_bytes
+        assert sel["heavy"].qos.tokens_per_s > sel["light"].qos.tokens_per_s
+
+    def test_floor_saturation_spends_surplus_on_quality(self, frontier):
+        """Once a finite tokens/s floor is met, additional bytes buy
+        QUALITY (lower quality proxy), not more speed — the
+        water-filling objective of DESIGN.md §10.2."""
+        spec = TenantSpec("t", QoSTarget(min_tokens_per_s=8.0))
+        arb = ResourceArbiter()
+        sel_small, _ = arb.arbitrate([(spec, frontier, 1.0)], 20 * GIB)
+        sel_big, _ = arb.arbitrate([(spec, frontier, 1.0)], 60 * GIB)
+        assert sel_small["t"].qos.tokens_per_s >= 8.0
+        assert sel_big["t"].qos.tokens_per_s >= 8.0
+        assert sel_big["t"].qos.quality_proxy \
+            < sel_small["t"].qos.quality_proxy
+
+    def test_duplicate_tenant_rejected(self, frontier):
+        mt = MultiTenantEngine(40 * GIB, controller_config=CTL)
+        mt.add_tenant(BATCH, SimulatedEngine(), frontier)
+        with pytest.raises(ValueError, match="already hosted"):
+            mt.add_tenant(BATCH, SimulatedEngine(), frontier)
+
+    def test_zero_weight_rejected(self):
+        with pytest.raises(ValueError, match="weight"):
+            TenantSpec("t", QoSTarget(), weight=0.0)

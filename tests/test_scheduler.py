@@ -5,7 +5,13 @@ Covers: staggered arrivals (short requests retire before long ones in the
 same slot generation), heterogeneous max_new_tokens, slot reuse after
 retirement, join/batch invariance of greedy outputs, mid-flight
 ``configure()`` (placement-only preserves in-flight outputs; bank-split
-changes drain gracefully), and the measured expert-streaming metrics."""
+changes drain gracefully), and the measured expert-streaming metrics.
+
+The pure scheduler tests run on the deterministic simulation clock
+(``repro.serving.simulator.VirtualClock``, DESIGN.md §10.4): every
+``now=`` the scheduler sees comes from one explicitly advanced virtual
+timeline, so wait-dependent behaviour (TTFT, latency percentiles,
+priority aging) is scripted rather than wall-clock-dependent."""
 import jax
 import numpy as np
 import pytest
@@ -13,7 +19,9 @@ import pytest
 from repro.configs import get_config, reduce_for_smoke
 from repro.models.model import build_model
 from repro.serving.engine import AdaptiveServingEngine
-from repro.serving.scheduler import (ContinuousScheduler, SchedulerConfig)
+from repro.serving.scheduler import (ContinuousScheduler, RequestSLO,
+                                     SchedulerConfig)
+from repro.serving.simulator import VirtualClock
 
 
 # ---------------------------------------------------------------------------
@@ -75,23 +83,74 @@ class TestSchedulerUnit:
         assert len(dropped) == 2 and not s.queue
 
     def test_ttft_tracked_from_submit(self):
+        clock = VirtualClock(start=1.0)
         s = self.mk(max_slots=1, max_len=32)
-        rid = s.submit(np.arange(1, 4), 2, now=1.0)
-        s.admit(now=2.5)
+        rid = s.submit(np.arange(1, 4), 2, now=clock.now())
+        s.admit(now=clock.advance(1.5))
         st = s.slots[0]
-        st.req.t_first = 3.0
-        s.retire(0, now=4.0)
+        st.req.t_first = clock.advance(0.5)
+        s.retire(0, now=clock.advance(1.0))
         assert s.done[rid].ttft_s == pytest.approx(2.0)
         assert s.done[rid].latency_s == pytest.approx(3.0)
 
     def test_latency_percentiles_shape(self):
+        clock = VirtualClock()
         s = self.mk(max_slots=1, max_len=32)
-        s.submit(np.arange(2), 2, now=0.0)
-        s.admit(now=1.0)
-        s.retire(0, now=3.0)
+        s.submit(np.arange(2), 2, now=clock.now())
+        s.admit(now=clock.advance(1.0))
+        s.retire(0, now=clock.advance(2.0))
         lat = s.latency_percentiles()
         assert lat["p50"] == pytest.approx(3.0)
         assert set(lat) == {"p50", "p95"}
+
+    def test_high_priority_stream_starves_low_without_aging(self):
+        """Strict priority classes (aging disabled): a sustained stream
+        of high-priority arrivals keeps a low-priority request queued
+        forever — the failure mode aging exists to fix."""
+        clock = VirtualClock()
+        s = self.mk(max_slots=1, max_len=32)
+        lo = s.submit(np.arange(4), 4, now=clock.now())
+        for _ in range(30):
+            s.submit(np.arange(4), 4, now=clock.now(),
+                     slo=RequestSLO(priority=3))
+            for slot, _req in s.admit(now=clock.now()):
+                s.retire(slot, now=clock.advance(1.0))
+        assert lo not in s.done
+        assert any(r.rid == lo for r in s.queue)
+
+    def test_aging_rescues_low_priority_under_sustained_load(self):
+        """Deadline-style aging (SchedulerConfig.aging_s): queue wait
+        promotes the low-priority request one class per aging_s, so it
+        completes despite an unbroken priority-3 arrival stream."""
+        clock = VirtualClock()
+        s = self.mk(max_slots=1, max_len=32, aging_s=1.0)
+        lo = s.submit(np.arange(4), 4, now=clock.now())
+        hi_done = 0
+        for _ in range(30):
+            s.submit(np.arange(4), 4, now=clock.now(),
+                     slo=RequestSLO(priority=3))
+            for slot, _req in s.admit(now=clock.now()):
+                s.retire(slot, now=clock.advance(1.0))
+            if lo in s.done:
+                break
+        else:
+            pytest.fail("low-priority request starved despite aging")
+        # it waited at least long enough to out-age priority 3 (4 classes
+        # at aging_s=1.0), and high-priority requests ran meanwhile
+        hi_done = sum(1 for r in s.done.values()
+                      if r.rid != lo and r.slo.priority == 3)
+        assert s.done[lo].latency_s >= 3.0
+        assert hi_done >= 3
+
+    def test_aging_keeps_fifo_within_class(self):
+        """Two deadline-less requests of one class age in lockstep —
+        aging must not reorder FIFO inside a priority class."""
+        clock = VirtualClock()
+        s = self.mk(max_slots=2, max_len=32, aging_s=0.5)
+        r1 = s.submit(np.arange(4), 4, now=clock.now())
+        r2 = s.submit(np.arange(4), 4, now=clock.now())
+        clock.advance(5.0)
+        assert [rq.rid for _, rq in s.admit(now=clock.now())] == [r1, r2]
 
 
 # ---------------------------------------------------------------------------
