@@ -118,17 +118,20 @@ def eval_perplexity(cfg: ModelConfig, params, eval_batches) -> float:
 
 def fake_quant_experts(params, cfg: ModelConfig, plan: PrecisionPlan):
     """Quantize->dequantize the experts selected by ``plan`` in the train
-    layout (mathematically identical to the dual-bank mixed compute — the
-    kernel's oracle is dequant-then-matmul; equality is tested in
-    tests/test_mixed_moe_banks.py)."""
+    layout, each at its own ladder rung (mathematically identical to the
+    N-bank mixed compute — the kernel's oracle is dequant-then-matmul)."""
     moe = params["layers"]["moe"]
-    mask = jnp.asarray(np.asarray(plan.quant))          # (L, E) bool
+    bits_arr = np.asarray(plan.bits)                    # (L, E) rungs
     new_moe = dict(moe)
     for name in ("w_gate", "w_up", "w_down"):
         w = moe[name]                                    # (L, E, K, N)
-        deq = dequantize(quantize(w, plan.bits, plan.group_size))
-        new_moe[name] = jnp.where(mask[:, :, None, None], deq.astype(w.dtype),
-                                  w)
+        out_w = w
+        for b in sorted({int(v) for v in np.unique(bits_arr) if v < 16}):
+            mask = jnp.asarray(bits_arr == b)
+            deq = dequantize(quantize(w, b, plan.group_size))
+            out_w = jnp.where(mask[:, :, None, None], deq.astype(w.dtype),
+                              out_w)
+        new_moe[name] = out_w
     out = dict(params)
     out["layers"] = dict(params["layers"])
     out["layers"]["moe"] = new_moe

@@ -7,10 +7,15 @@ frontier — the fine-grained configuration space of paper Figs. 2+3 — and
 then resolves a few declarative :class:`QoSTarget` queries against it,
 the way a deployment would (DESIGN.md §9).
 
+With ``--ladder 16,8,4`` the configuration space opens up to per-expert
+bit-widths (DESIGN.md §11): each frontier point then reports its expert
+count per ladder rung instead of a single Num_E4.
+
     PYTHONPATH=src python examples/pareto_explorer.py [--budget-gb 40]
-        [--min-tps 5] [--max-ppl-x 1.05]
+        [--min-tps 5] [--max-ppl-x 1.05] [--ladder 16,8,4]
 """
 import argparse
+import dataclasses
 import math
 
 from repro.configs import get_config
@@ -33,9 +38,16 @@ def main():
                     help="demo QoSTarget: minimum tokens/s")
     ap.add_argument("--max-ppl-x", type=float, default=None,
                     help="demo QoSTarget: perplexity ceiling, e.g. 1.05")
+    ap.add_argument("--ladder", default=None,
+                    help="precision ladder as descending CSV rungs, e.g. "
+                         "'16,8,4' — opens per-expert mixed precision "
+                         "(DESIGN.md §11)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    if args.ladder:
+        ladder = tuple(int(b) for b in args.ladder.split(","))
+        cfg = cfg.replace(mop=dataclasses.replace(cfg.mop, ladder=ladder))
     planner = AdaptivePlanner(cfg, hw=HardwareModel())
     frontier = planner.frontier(batch_size=args.batch)
     budget = args.budget_gb * 1e9
@@ -44,20 +56,29 @@ def main():
     lo = min(r.qos.tokens_per_s for r in results)
     hi = max(r.qos.tokens_per_s for r in results)
 
+    ladder = frontier.ladder
     print(f"{cfg.arch_id} @ {args.budget_gb} GB budget "
-          f"(v5e-chip model, batch={args.batch}); frontier holds "
-          f"{len(frontier.points)} dominant of "
+          f"(v5e-chip model, batch={args.batch}, ladder={ladder}); "
+          f"frontier holds {len(frontier.points)} dominant of "
           f"{len(frontier.all_points)} enumerated configs")
-    print(f"{'E4':>5} {'resident':>8} {'tok/s':>8} {'ppl-proxy':>9}  "
+    rung_hdr = " ".join(f"{'E' + str(b):>5}" for b in ladder)
+    print(f"{rung_hdr} {'resident':>8} {'tok/s':>8} {'ppl-proxy':>9}  "
           f"throughput")
     for i, r in enumerate(results):
         mark = " *" if i in pareto else "  "
         q = r.qos
-        print(f"{r.plan.num_q_experts:5d} "
+        counts = r.plan.rung_counts()
+        rung_cols = " ".join(f"{counts[b]:5d}" for b in ladder)
+        print(f"{rung_cols} "
               f"{r.plan.resident_fraction():8.0%} "
               f"{q.tokens_per_s:8.2f} {q.quality_proxy:9.3f}  "
               f"|{bar(q.tokens_per_s, lo, hi)}|{mark}")
     print("* = Pareto-optimal (throughput vs quality)")
+    if len(ladder) > 2:
+        print("\nper-rung expert counts per dominant frontier point "
+              "(bytes-ascending):")
+        for p in frontier.points[::max(1, len(frontier.points) // 12)]:
+            print(f"  {p.summary()}")
 
     # declarative queries: what a tenant actually asks for (DESIGN.md §9)
     targets = [
@@ -83,10 +104,10 @@ def main():
     if len(pts) >= 2:
         a, b = pts[0], pts[-1]
         planner.current = a
-        _, delta = planner.replan(budget, "quality",
-                                  b.plan.num_q_experts)
+        counts = {k: v for k, v in b.plan.rung_counts().items() if k < 16}
+        _, delta = planner.replan(budget, "quality", counts=counts)
         print(f"\nreconfig {a.plan.num_q_experts}->{b.plan.num_q_experts} "
-              f"4-bit experts: {len(delta['to_quantize'])} quantize, "
+              f"quantized experts: {len(delta['to_quantize'])} quantize, "
               f"{len(delta['to_upload'])} upload, "
               f"traffic {delta['traffic_bytes']/2**30:.2f} GiB "
               f"(vs full reload "

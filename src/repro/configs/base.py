@@ -34,13 +34,25 @@ class MoPConfig:
     ``num_q_experts`` counts 4-bit experts across the whole model (paper's
     Num_E4 knob, 0..num_layers*num_experts). Assignment is balanced-random:
     the same count per layer (see DESIGN.md §2).
+
+    ``ladder`` declares the precision rungs a serving deployment may
+    assign per expert (descending, must contain 16; DESIGN.md §11).
+    ``None`` resolves to the binary ladder ``(16, bits)`` — bit-identical
+    to the historical boolean plans. Set ``(16, 8, 4)`` to open the
+    per-expert mixed-precision configuration space.
     """
     enabled: bool = False
-    bits: int = 4                  # 4 or 8
+    bits: int = 4                  # legacy single quantized rung (4 or 8)
     group_size: int = 64           # quantization group along the reduction dim
     num_q_experts: int = 0         # global Num_E4 (paper eq. 1 output)
+    ladder: Optional[Tuple[int, ...]] = None
     # Serving-time placement knobs (host vs HBM residency).
     hbm_budget_gb: Optional[float] = None
+
+    @property
+    def precision_ladder(self) -> Tuple[int, ...]:
+        """The resolved ladder: declared ``ladder`` or ``(16, bits)``."""
+        return tuple(self.ladder) if self.ladder else (16, self.bits)
 
 
 @dataclass(frozen=True)

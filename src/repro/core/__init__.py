@@ -2,19 +2,20 @@
 
 Layers:
   quantization   — int4/int8 group-wise QTensor + pack/unpack + tree quant
-  precision_plan — per-expert {bits, placement} table (balanced-random)
+  precision_plan — per-expert {bits, placement} ladder table (balanced-random)
   planner        — eq.(1) partitioner, budget->plan, incremental reconfig
   cost_model     — analytic tokens/s + quality proxy (Fig. 3 model)
   pareto         — declarative QoS targets over the config-space frontier
   expert_cache   — LRU device cache + swap space (+ speculative prefetch)
-  mixed_moe      — dual-bank (int4|bf16) MoE layer, EP/TP dispatch
+  mixed_moe      — N-bank (int4|int8|bf16) MoE layer, EP/TP dispatch
 """
 from repro.core.quantization import (  # noqa: F401
     QTensor, dequantize, dequantize_tree, pack_int4, quantize, quantize_tree,
     tree_nbytes, unpack_int4,
 )
 from repro.core.precision_plan import (  # noqa: F401
-    DEVICE, HOST, PrecisionPlan, balanced_random_plan, reconfig_delta,
+    DEFAULT_LADDER, DEVICE, HOST, PrecisionPlan, balanced_ladder_plan,
+    balanced_random_plan, quantized_rungs, reconfig_delta, validate_ladder,
 )
 from repro.core.planner import AdaptivePlanner, PlanResult, num_e16_eq1  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401

@@ -1,4 +1,5 @@
-"""Analytic throughput/quality model behind the planner (paper Fig. 3).
+"""Analytic throughput/quality model behind the planner (paper Fig. 3),
+rung-indexed over the precision ladder (DESIGN.md §11).
 
 Token-generation time for an offloading MoE server decomposes as
 
@@ -11,14 +12,24 @@ region the model reproduces Fig. 3's plateau (max throughput, slight 4-bit
 matmul penalty — which our fused Pallas kernel turns into a *gain*, see
 EXPERIMENTS.md §Perf); in the offloading region throughput decays
 hyperbolically with the miss volume, as in the paper.
+
+Every term is a sum over the plan's ladder rungs: per-rung byte sizes,
+per-rung decode speedups (int4 and int8 read 4x/2x fewer HBM bytes) and a
+per-rung quality cost. The binary ladder reproduces the historical
+two-term expressions bit-for-bit (the frontier golden fixture pins this).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.precision_plan import DEVICE, PrecisionPlan
+from repro.core.precision_plan import DEVICE, PrecisionPlan, quantized_rungs
+
+#: perplexity-multiplier cost per fully-quantized model at each rung,
+#: calibrated on the paper's Table 1 (all-4-bit ~= +7% ppl on WikiText2)
+#: and the int8 rows (~+2%); 16-bit costs nothing by definition.
+RUNG_QUALITY_COST: Dict[int, float] = {4: 0.07, 8: 0.02, 16: 0.0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,11 +42,20 @@ class HardwareModel:
     # Serving decode is memory-bound; effective MBU for weight streaming.
     mbu: float = 0.6
     mfu: float = 0.4
-    # 4-bit matmul throughput relative to bf16. The paper (PyTorch/bnb)
-    # observed < 1. Our fused kernel reads 4x fewer bytes -> > 1 in the
-    # memory-bound decode regime.
+    # Quantized matmul throughput relative to bf16, per rung. The paper
+    # (PyTorch/bnb) observed < 1. Our fused kernel reads bits/16 of the
+    # bytes -> > 1 in the memory-bound decode regime; int8 reads 2x fewer
+    # bytes than bf16 so its ceiling is lower than int4's.
     q4_speedup_decode: float = 2.8
     q4_speedup_prefill: float = 0.95
+    q8_speedup_decode: float = 1.6
+    q8_speedup_prefill: float = 0.98
+
+    def q_speedup_decode(self, bits: int) -> float:
+        """Decode-regime matmul speedup of rung ``bits`` vs bf16."""
+        if bits >= 16:
+            return 1.0
+        return {4: self.q4_speedup_decode, 8: self.q8_speedup_decode}[bits]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,40 +73,50 @@ def expert_access_stats(cfg: ModelConfig, plan: PrecisionPlan
     """(hit_rate, expected transfer bytes per token)."""
     e = cfg.moe
     assert e is not None
-    l, ne = plan.quant.shape
+    ne = plan.bits.shape[1]
     on_dev = plan.location == DEVICE
     # uniform routing: each of top_k accesses per layer hits a uniformly
     # random expert
     hit = float(on_dev.mean())
-    s4 = cfg.expert_param_bytes(plan.bits)
-    s16 = cfg.expert_param_bytes(16)
-    miss_bytes = 0.0
-    for li in range(l):
-        for ei in range(ne):
-            if not on_dev[li, ei]:
-                miss_bytes += (s4 if plan.quant[li, ei] else s16) / ne
+    # exact rational accumulation: every off-device expert contributes
+    # size/ne; summing the integer numerators first and dividing once is
+    # the correctly-rounded value of the rational sum, which coincides
+    # with the historical per-element float loop whenever the per-expert
+    # terms are exactly representable (ne a power of two — every config
+    # the golden fixture pins), while running as a few numpy reductions
+    # instead of an O(L*E) Python loop per enumerated frontier point.
+    off = ~on_dev
+    numerator = 0
+    for b in plan.ladder:
+        numerator += int((off & (plan.bits == b)).sum()) \
+            * cfg.expert_param_bytes(b)
+    miss_bytes = numerator / ne
     # per token: top_k accesses per layer
     per_token = miss_bytes * e.top_k
     return hit, per_token
 
 
 def device_bytes(cfg: ModelConfig, plan: PrecisionPlan) -> int:
-    """HBM footprint of the plan (non-expert 16-bit + resident experts)."""
-    s4 = cfg.expert_param_bytes(plan.bits)
-    s16 = cfg.expert_param_bytes(16)
+    """HBM footprint of the plan (non-expert 16-bit + resident experts,
+    each at its own rung's size)."""
     on_dev = plan.location == DEVICE
-    n4 = int((on_dev & plan.quant).sum())
-    n16 = int((on_dev & ~plan.quant).sum())
-    return cfg.non_expert_bytes() + n4 * s4 + n16 * s16
+    total = cfg.non_expert_bytes()
+    for b in sorted(plan.ladder):
+        total += int((on_dev & (plan.bits == b)).sum()) \
+            * cfg.expert_param_bytes(b)
+    return total
 
 
 def quality_proxy(cfg: ModelConfig, plan: PrecisionPlan) -> float:
-    """Monotone perplexity-ratio proxy, calibrated on the paper's Table 1:
-    all experts 4-bit cost ~= +7% ppl (2.62->2.80 WikiText2); linear in the
-    quantized fraction (Fig. 2 is ~linear with noise)."""
-    frac = plan.quant.mean()
-    per_bit = {4: 0.07, 8: 0.02}[plan.bits]
-    return 1.0 + per_bit * float(frac)
+    """Monotone perplexity-ratio proxy, calibrated on the paper's Table 1
+    (all experts 4-bit ~= +7% ppl, 2.62->2.80 WikiText2; int8 ~= +2%);
+    linear per rung in the rung's expert fraction (Fig. 2 is ~linear with
+    noise), summed over the ladder's quantized rungs ascending."""
+    proxy = 1.0
+    for b in quantized_rungs(plan.ladder):
+        frac = float((plan.bits == b).mean())
+        proxy += RUNG_QUALITY_COST[b] * frac
+    return proxy
 
 
 def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
@@ -98,13 +128,20 @@ def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
     hit, miss_bytes = expert_access_stats(cfg, plan)
 
     # compute: read every active weight byte once per token (memory-bound
-    # decode); quantized experts read bits/16 of the bytes.
+    # decode); a rung-``b`` expert reads b/16 of the bytes, sped up by the
+    # fused kernel's rung speedup. The 16-bit fraction is the REMAINDER
+    # (1 - sum of quantized fractions) so the binary ladder reproduces the
+    # historical ``(1 - frac4) * s16`` term bit-for-bit.
     s16 = cfg.expert_param_bytes(16)
-    s4 = cfg.expert_param_bytes(plan.bits)
-    frac4 = float(plan.quant.mean())
-    active_expert_bytes = cfg.num_layers * e.top_k * (
-        frac4 * s4 / hw.q4_speedup_decode * (16 / plan.bits)
-        + (1 - frac4) * s16)
+    per_active = 0.0
+    frac_q_sum = 0.0
+    for b in quantized_rungs(plan.ladder):
+        frac = float((plan.bits == b).mean())
+        per_active += frac * cfg.expert_param_bytes(b) \
+            / hw.q_speedup_decode(b) * (16 / b)
+        frac_q_sum += frac
+    per_active += (1 - frac_q_sum) * s16
+    active_expert_bytes = cfg.num_layers * e.top_k * per_active
     weight_bytes = cfg.non_expert_bytes() + active_expert_bytes
     t_compute = weight_bytes / (hw.hbm_bw * hw.mbu)
 

@@ -128,6 +128,20 @@ class ExpertCache:
             self._used -= nb
             self._credit_eviction(key)
 
+    def update(self, key: Hashable, host) -> int:
+        """Replace ``key``'s entry IN PLACE with a new host pytree — the
+        precision-ladder promote/demote path (DESIGN.md §11): an expert
+        that flips rung (e.g. 4 -> 8 bit) but stays swap-resident
+        re-streams in its new format and the cache's byte accounting
+        charges exactly the size delta. Admits the key when absent
+        (delta = full new size). Returns the byte delta (new - old)."""
+        old_nb = 0
+        if key in self._cache:
+            _, old_nb = self._cache.pop(key)
+            self._used -= old_nb
+        nb, _ = self._admit(key, host)
+        return nb - old_nb
+
     # -- namespacing (multi-tenant shared swap, DESIGN.md §10) --------------
     def scoped(self, owner: str,
                fetch: Optional[Callable[[Hashable], object]] = None
@@ -221,6 +235,16 @@ class ScopedExpertCache:
     def pin(self, keys):
         for k in keys:
             self.get(k)
+
+    def update(self, key: Hashable, host) -> int:
+        """In-place rung promote/demote of this owner's entry
+        (see :meth:`ExpertCache.update`); returns the byte delta."""
+        bytes_before = self.parent.stats.bytes_in
+        time_before = self.parent.stats.transfer_s
+        delta = self.parent.update(self._full(key), host)
+        self.stats.bytes_in += self.parent.stats.bytes_in - bytes_before
+        self.stats.transfer_s += self.parent.stats.transfer_s - time_before
+        return delta
 
     def invalidate(self, keys=None):
         """Drop this owner's entries only — other namespaces are

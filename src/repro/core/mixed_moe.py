@@ -1,11 +1,14 @@
-"""Mixed-precision MoE layer: dual expert banks (int4 | bf16) + explicit
-expert-parallel dispatch under shard_map.
+"""Mixed-precision MoE layer: N expert banks (one per ladder rung, e.g.
+int4 | int8 | bf16) + explicit expert-parallel dispatch under shard_map.
 
-The paper's partial expert quantization turns each MoE layer into two banks:
-``q4`` (packed int4 + scales, E4 experts) and ``f16`` (bf16, E16 experts),
-with a per-layer expert permutation mapping routed ids into bank slots
-(``PrecisionPlan.expert_order``). Bank sizes are static per plan — one
-recompile per (E4, E16) signature, placement changes are graph-free.
+The paper's partial expert quantization turns each MoE layer into per-rung
+banks — ``q4`` (packed int4 + scales), ``q8`` (int8 + scales) and ``f16``
+(bf16) — in ASCENDING-bits bank order, with a per-layer expert permutation
+mapping routed ids into bank slots (``PrecisionPlan.expert_order``). Bank
+sizes are static per plan — one recompile per ladder-rung-count signature
+(``PrecisionPlan.bank_sizes()``), placement changes are graph-free. The
+binary ladder degenerates to the historical dual-bank ``[q4 | f16]``
+layout bit-for-bit (DESIGN.md §11).
 
 Dispatch (DESIGN.md §4) runs under shard_map over (dp..., model):
 
@@ -85,34 +88,54 @@ def route(router_w: jax.Array, x: jax.Array, moe: MoEConfig, *,
 # weighted combine. Everything here is per-device.
 # --------------------------------------------------------------------------
 
-def _local_slot(flat_e, *, rank, e4_total, e4_loc, e16_loc):
+def _bank_bits(name: str) -> int:
+    """Bank key -> bit-width: 'f16' -> 16, 'qN' -> N."""
+    return 16 if name == "f16" else int(name[1:])
+
+
+def _bank_name(bits: int) -> str:
+    return "f16" if bits >= 16 else f"q{bits}"
+
+
+def bank_keys(banks) -> list:
+    """Non-empty bank keys in ascending-bits BANK ORDER (the expert
+    storage order: cheapest rung first — binary: ['q4', 'f16'])."""
+    return sorted((k for k in banks if banks.get(k) is not None),
+                  key=_bank_bits)
+
+
+def _local_slot(flat_e, *, rank, totals, locs):
     """Map global (permuted) expert ids to this rank's local bank slots.
 
-    Each bank is sharded over the EP axis independently: rank r owns q4
-    experts [r*e4_loc, (r+1)*e4_loc) -> local slots [0, e4_loc) and f16
-    experts [e4_total + r*e16_loc, ...) -> slots [e4_loc, e4_loc+e16_loc).
-    Returns (slot, is_local)."""
-    in_q4 = flat_e < e4_total
-    q4_slot = flat_e - rank * e4_loc
-    f16_rel = flat_e - e4_total - rank * e16_loc
-    slot = jnp.where(in_q4, q4_slot, e4_loc + f16_rel)
-    ok = jnp.where(in_q4,
-                   (q4_slot >= 0) & (q4_slot < e4_loc),
-                   (f16_rel >= 0) & (f16_rel < e16_loc))
+    ``totals``/``locs`` are per-bank global/per-rank expert counts in
+    bank order. Each bank is sharded over the EP axis independently:
+    within bank b (global offset O_b), rank r owns experts
+    [O_b + r*loc_b, O_b + (r+1)*loc_b) -> local slots
+    [sum(loc_<b), sum(loc_<b) + loc_b). Returns (slot, is_local)."""
+    slot = jnp.zeros_like(flat_e)
+    ok = jnp.zeros(flat_e.shape, bool)
+    g_off = l_off = 0
+    for tot, loc in zip(totals, locs):
+        rel = flat_e - g_off - rank * loc
+        in_bank = (flat_e >= g_off) & (flat_e < g_off + tot)
+        bank_ok = in_bank & (rel >= 0) & (rel < loc)
+        slot = jnp.where(bank_ok, l_off + rel, slot)
+        ok = ok | bank_ok
+        g_off += tot
+        l_off += loc
     return slot, ok
 
 
-def _dispatch_local(x, ids, weights, *, rank, e4_total, e4_loc, e16_loc,
-                    capacity):
+def _dispatch_local(x, ids, weights, *, rank, totals, locs, capacity):
     """Pack routed tokens into (e_loc, capacity, d); returns buffers +
     metadata needed for the combine."""
     t, d = x.shape
-    e_loc = e4_loc + e16_loc
+    e_loc = sum(locs)
     k = ids.shape[1]
     flat_e = ids.reshape(-1)                                  # (T*k,)
     flat_w = weights.reshape(-1)
-    local_e, is_local = _local_slot(flat_e, rank=rank, e4_total=e4_total,
-                                    e4_loc=e4_loc, e16_loc=e16_loc)
+    local_e, is_local = _local_slot(flat_e, rank=rank, totals=totals,
+                                    locs=locs)
     key = jnp.where(is_local, local_e, e_loc)
     order = jnp.argsort(key, stable=True)                     # (T*k,)
     sorted_e = key[order]
@@ -136,7 +159,7 @@ def _combine_local(ybuf, dest, tok, w_sorted, t, d):
 
 
 # --------------------------------------------------------------------------
-# Dual-bank expert FFN
+# N-bank expert FFN (one bank per ladder rung, ascending-bits order)
 # --------------------------------------------------------------------------
 
 def _ffn_bf16(bank, xb, act):
@@ -170,14 +193,22 @@ def _ffn_q(bank, xb, act, use_kernel: bool):
 
 
 def _expert_ffn(banks, xb, act, use_kernel):
-    """banks: {"q4": {...QTensor...}|None, "f16": {...bf16...}|None} with
-    bank order [q4 experts, f16 experts] along E."""
+    """banks: {"q4"|"q8": {...QTensor...}|None, "f16": {...bf16...}|None}
+    with expert storage in ascending-bits bank order along E (quantized
+    rungs first); ``xb`` is sliced per bank accordingly."""
     outs = []
-    e4 = banks["q4"]["w_up"].shape[0] if banks.get("q4") is not None else 0
-    if e4:
-        outs.append(_ffn_q(banks["q4"], xb[:e4], act, use_kernel))
-    if banks.get("f16") is not None and banks["f16"]["w_up"].shape[0]:
-        outs.append(_ffn_bf16(banks["f16"], xb[e4:], act))
+    off = 0
+    for key in bank_keys(banks):
+        bank = banks[key]
+        n = bank["w_up"].shape[0]
+        if not n:
+            continue
+        sl = xb[off:off + n]
+        if _bank_bits(key) < 16:
+            outs.append(_ffn_q(bank, sl, act, use_kernel))
+        else:
+            outs.append(_ffn_bf16(bank, sl, act))
+        off += n
     return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
 
 
@@ -222,10 +253,8 @@ def _fsdp_active(banks, moe: MoEConfig, par: MoEParallelism, ep: bool):
     def ok(leaf_shape, fdim):
         return leaf_shape[fdim] % fs == 0
 
-    for key in ("q4", "f16"):
-        b = banks.get(key)
-        if b is None:
-            continue
+    for key in bank_keys(banks):
+        b = banks[key]
         for name, w in b.items():
             arr = w.q if isinstance(w, QTensor) else w
             fdim = 1 if name == "w_down" else 2
@@ -272,8 +301,9 @@ def moe_apply(banks, x: jax.Array, weights: jax.Array, ids: jax.Array,
               use_kernel: bool = False) -> jax.Array:
     """x: (T, d) sharded over dp_axes; returns (T, d) same sharding.
 
-    ``banks`` is either the train layout {"f16": {...(E,d,f) bf16...}} /
-    {"q4": ..., "f16": ...} serve layout (bank order = q4 first).
+    ``banks`` is either the train layout {"f16": {...(E,d,f) bf16...}} or
+    the rung-keyed serve layout {"q4": ..., "q8": ..., "f16": ...}
+    (bank order = ascending bits, cheapest rung first).
     """
     t, d = x.shape
     ep = moe.num_experts >= par.ep_size
@@ -295,15 +325,15 @@ def moe_apply(banks, x: jax.Array, weights: jax.Array, ids: jax.Array,
     dp = P(lead, None)
     n_dp = int(np.prod([par.mesh.shape[a] for a in par.dp_axes]))
     t_loc = t // n_dp
-    e4_total = banks["q4"]["w_up"].shape[0] if banks.get("q4") is not None \
-        else 0
-    e16_total = moe.num_experts - e4_total
+    keys = bank_keys(banks)
+    totals = tuple(banks[k]["w_up"].shape[0] for k in keys)
     shards = par.ep_size if ep else 1
-    if e4_total % shards or e16_total % shards:
+    if any(tot % shards for tot in totals):
         raise ValueError(
-            f"EP banks must split evenly: E4={e4_total}, E16={e16_total} "
-            f"over {shards} shards (planner rounds per-layer counts)")
-    e4_loc, e16_loc = e4_total // shards, e16_total // shards
+            f"EP banks must split evenly: "
+            f"{dict(zip(keys, totals))} over {shards} shards "
+            f"(planner rounds per-layer counts)")
+    locs = tuple(tot // shards for tot in totals)
     # Token-gather mode: the fsdp axis contributes its tokens instead of
     # its weight shards (§Perf 'kimi-decode' iteration: for 1T-scale
     # experts, tokens are ~4 orders of magnitude lighter than weights).
@@ -325,8 +355,8 @@ def moe_apply(banks, x: jax.Array, weights: jax.Array, ids: jax.Array,
             ids_l = jax.lax.all_gather(ids_l, par.fsdp_axis, axis=0,
                                        tiled=True)
         xbuf, dest, tok, w_sorted = _dispatch_local(
-            x_l, ids_l, w_l, rank=rank, e4_total=e4_total,
-            e4_loc=e4_loc, e16_loc=e16_loc, capacity=cap)
+            x_l, ids_l, w_l, rank=rank, totals=totals, locs=locs,
+            capacity=cap)
         # the expert FFN is shape-polymorphic in f: gate/up/silu are
         # elementwise on this rank's f-slice, w_down yields partial sums
         ybuf = _expert_ffn(banks_l, xbuf, act, use_kernel)
@@ -367,26 +397,45 @@ def train_banks(moe_params: Dict[str, jax.Array]) -> Dict[str, Any]:
             "f16": {k: moe_params[k] for k in ("w_gate", "w_up", "w_down")}}
 
 
-def build_mixed_banks(moe_params: Dict[str, jax.Array], quant_mask,
-                      *, bits: int = 4, group_size: int = 64):
-    """Split one layer's experts into [q4 | f16] banks.
+def build_ladder_banks(moe_params: Dict[str, jax.Array], bits_row,
+                       *, ladder=(16, 4), group_size: int = 64):
+    """Split one layer's experts into per-rung banks in ascending-bits
+    bank order (DESIGN.md §11).
 
-    quant_mask: (E,) bool. Returns (banks, order) where ``order`` is the
-    expert permutation (quantized first) — the caller permutes the router
-    columns with it."""
-    quant_mask = np.asarray(quant_mask)
-    order = np.concatenate([np.where(quant_mask)[0],
-                            np.where(~quant_mask)[0]]).astype(np.int32)
-    e4 = int(quant_mask.sum())
-    banks: Dict[str, Any] = {"q4": None, "f16": None}
+    ``bits_row``: (E,) int — each expert's ladder rung. Returns
+    (banks, order) where ``order`` is the expert permutation (cheapest
+    rung first) — the caller permutes the router columns with it. Every
+    ladder rung gets a bank key (``None`` when empty) so per-layer bank
+    pytrees stack cleanly across a balanced plan."""
+    bits_row = np.asarray(bits_row)
+    rungs = sorted(ladder)
+    order = np.concatenate(
+        [np.where(bits_row == b)[0] for b in rungs]).astype(np.int32)
     perm = {k: jnp.take(moe_params[k], order, axis=0)
             for k in ("w_gate", "w_up", "w_down")}
-    if e4:
-        banks["q4"] = {k: quantize(v[:e4], bits, group_size)
-                       for k, v in perm.items()}
-    if e4 < len(order):
-        banks["f16"] = {k: v[e4:] for k, v in perm.items()}
+    banks: Dict[str, Any] = {}
+    off = 0
+    for b in rungs:
+        cnt = int((bits_row == b).sum())
+        name = _bank_name(b)
+        if cnt == 0:
+            banks[name] = None
+            continue
+        sl = {k: v[off:off + cnt] for k, v in perm.items()}
+        banks[name] = sl if b >= 16 else \
+            {k: quantize(v, b, group_size) for k, v in sl.items()}
+        off += cnt
     return banks, order
+
+
+def build_mixed_banks(moe_params: Dict[str, jax.Array], quant_mask,
+                      *, bits: int = 4, group_size: int = 64):
+    """Legacy binary spelling of :func:`build_ladder_banks`:
+    quant_mask (E,) bool -> [q4 | f16] banks, quantized first."""
+    quant_mask = np.asarray(quant_mask).astype(bool)
+    bits_row = np.where(quant_mask, bits, 16)
+    return build_ladder_banks(moe_params, bits_row, ladder=(16, bits),
+                              group_size=group_size)
 
 
 def moe_dense_ref(moe_params, x, moe: MoEConfig, act: str = "swiglu"):

@@ -1,14 +1,20 @@
-"""Pareto frontier over the MoP configuration space (DESIGN.md §9).
+"""Pareto frontier over the MoP configuration space (DESIGN.md §9, §11).
 
 The paper's planner exposes the *mechanism* — (Num_E4, residency) knobs —
 but a serving deployment declares *targets*: "at least X tokens/s, at most
 Y% perplexity loss, inside Z bytes of HBM". This module is the bridge:
 
-* :class:`ParetoFrontier` enumerates the full (num_q_experts × residency
-  split) configuration space through the analytic cost model ONCE per
-  (model, hardware, batch) — the enumeration is what the paper calls the
-  fine-grained configuration space of Figs. 2+3 — and keeps the dominant
-  set in the three QoS axes (tokens/s ↑, quality_proxy ↓, device bytes ↓).
+* :class:`ParetoFrontier` enumerates the (counts-per-ladder-rung ×
+  residency split) configuration space through the analytic cost model
+  ONCE per (model, hardware, batch) — the enumeration is what the paper
+  calls the fine-grained configuration space of Figs. 2+3, generalized
+  from the boolean Num_E4 axis to one count axis per quantized ladder
+  rung — and keeps the dominant set in the three QoS axes (tokens/s ↑,
+  quality_proxy ↓, device bytes ↓). Binary ladders enumerate the full
+  per-layer grid (bit-identical to the legacy (Num_E4 × residency)
+  space); multi-rung ladders prune the count grid to a stride lattice
+  (always containing 0 and E per rung) sized so the enumeration stays
+  under ``max_enum_points`` — the §11 tractability rule.
 * :class:`QoSTarget` is the declarative constraint a caller states instead
   of knob values; :meth:`ParetoFrontier.select` resolves it to one
   :class:`FrontierPoint` with deterministic tie-breaking: among points
@@ -24,13 +30,15 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import cost_model
 from repro.core.cost_model import HardwareModel, QoSEstimate
-from repro.core.precision_plan import PrecisionPlan, balanced_random_plan
+from repro.core.precision_plan import (PrecisionPlan, balanced_ladder_plan,
+                                       quantized_rungs, validate_ladder)
 
 __all__ = [
     "QoSTarget", "FrontierPoint", "ParetoFrontier", "InfeasibleTarget",
@@ -88,11 +96,22 @@ class QoSTarget:
 @dataclasses.dataclass(frozen=True, eq=False)
 class FrontierPoint:
     """One dominant configuration: the knob values, the concrete plan they
-    expand to, and the cost model's QoS estimate for it."""
-    num_q_experts: int        # global Num_E4 (multiple of num_layers)
+    expand to, and the cost model's QoS estimate for it.
+
+    ``counts_per_rung`` are the GLOBAL expert counts aligned with the
+    plan's ladder (descending, 16-bit rung first); ``num_q_experts`` is
+    their sub-16-bit sum — the paper's Num_E4 for a binary ladder."""
+    num_q_experts: int        # global quantized count (multiple of L)
     resident_experts: int     # global on-device expert count
     plan: PrecisionPlan
     qos: QoSEstimate
+    counts_per_rung: Tuple[int, ...] = ()
+
+    def quantized_counts(self) -> Dict[int, int]:
+        """{rung: global count} over the plan's quantized rungs — the
+        planner's ``counts`` argument (engine apply path)."""
+        return {b: c for b, c in zip(self.plan.ladder, self.counts_per_rung)
+                if b < 16}
 
     def meets(self, target: QoSTarget) -> bool:
         """Hard constraints AND the throughput objective (analytically)."""
@@ -113,7 +132,15 @@ class FrontierPoint:
 
     def summary(self) -> str:
         q = self.qos
-        return (f"E4={self.num_q_experts} res={self.resident_experts} "
+        rungs = [b for b in self.plan.ladder if b < 16]
+        if len(rungs) <= 1:
+            knobs = f"E{rungs[0] if rungs else 4}={self.num_q_experts}"
+        else:
+            counts = self.quantized_counts()
+            knobs = "E[" + ",".join(f"{b}b={counts[b]}"
+                                    for b in self.plan.ladder
+                                    if b < 16) + "]"
+        return (f"{knobs} res={self.resident_experts} "
                 f"dev={_fmt_bytes(q.device_bytes)} "
                 f"tok/s={q.tokens_per_s:.2f} ppl=x{q.quality_proxy:.3f}")
 
@@ -130,23 +157,32 @@ def _dominates(a: FrontierPoint, b: FrontierPoint) -> bool:
 
 
 class ParetoFrontier:
-    """The dominant set of the (Num_E4 × residency) configuration space.
+    """The dominant set of the (counts-per-rung × residency) space.
 
     Built once per (model config, hardware model, batch size, seed) — i.e.
     once per hardware/budget regime change, NOT per request. Budgets are
     query-time filters (``QoSTarget.mem_budget_bytes``) so one frontier
     serves every tenant budget.
 
+    The precision ladder comes from ``cfg.mop.precision_ladder``. A
+    binary ladder enumerates each per-layer quantized count 0..E (the
+    legacy ``(E+1)²`` space, bit-identical plans). A K-rung ladder
+    enumerates one count axis per quantized rung; the grid is pruned to
+    per-rung stride lattices (§11 rule: the per-rung level count is the
+    largest uniform choice keeping the whole enumeration under
+    ``max_enum_points``; 0 and E always enumerate, so pure-rung corners
+    and the legacy axis endpoints are never pruned away).
+
     ``residency_step`` controls enumeration granularity for the residency
     axis; the default (``num_layers``) matches the balanced per-layer
-    placement the dual-bank MoE needs and keeps the space at
-    ``(E+1)²`` points for an L×E expert grid.
+    placement the N-bank MoE needs.
     """
 
     def __init__(self, cfg: ModelConfig,
                  hw: HardwareModel = HardwareModel(), *,
                  batch_size: int = 1, seed: int = 0,
-                 residency_step: Optional[int] = None):
+                 residency_step: Optional[int] = None,
+                 max_enum_points: int = 8192):
         if cfg.moe is None:
             raise ValueError(f"{cfg.arch_id}: the MoP frontier needs routed "
                              "experts (DESIGN.md §5)")
@@ -154,22 +190,33 @@ class ParetoFrontier:
         self.hw = hw
         self.batch_size = batch_size
         self.seed = seed
+        self.ladder = validate_ladder(cfg.mop.precision_ladder)
         layers = cfg.num_layers
-        total = layers * cfg.moe.num_experts
+        e = cfg.moe.num_experts
+        total = layers * e
         step = residency_step or layers
-        nq_levels = range(0, total + 1, layers)
         res_levels = sorted({*range(0, total, step), total})
+        count_grids = self._count_grids(e, len(res_levels), max_enum_points)
+        #: per-rung per-layer count levels actually enumerated (ascending
+        #: rung order) — exposes the §11 pruning decision for inspection.
+        self.count_levels: Dict[int, List[int]] = count_grids
         pts: List[FrontierPoint] = []
-        for nq in nq_levels:
+        for combo in self._count_combos(e, count_grids):
+            counts = {b: c * layers
+                      for b, c in zip(sorted(count_grids), combo)}
+            nq = sum(counts.values())
             for r in res_levels:
-                plan = balanced_random_plan(
-                    layers, cfg.moe.num_experts, nq,
-                    bits=cfg.mop.bits, group_size=cfg.mop.group_size,
+                plan = balanced_ladder_plan(
+                    layers, e, counts, ladder=self.ladder,
+                    group_size=cfg.mop.group_size,
                     seed=seed, resident_experts=r)
                 qos = cost_model.estimate_qos(cfg, plan, hw, batch_size)
+                per_rung = tuple(total - nq if b >= 16 else counts[b]
+                                 for b in self.ladder)
                 pts.append(FrontierPoint(num_q_experts=nq,
                                          resident_experts=r,
-                                         plan=plan, qos=qos))
+                                         plan=plan, qos=qos,
+                                         counts_per_rung=per_rung))
         #: the full enumeration (kept for sweeps/plots); dominated points
         #: included.
         self.all_points: List[FrontierPoint] = pts
@@ -180,6 +227,38 @@ class ParetoFrontier:
             key=lambda p: (p.qos.tokens_per_s, p.qos.quality_proxy,
                            p.qos.device_bytes, p.num_q_experts,
                            p.resident_experts))
+
+    def _count_grids(self, e: int, n_res: int, max_enum_points: int
+                     ) -> Dict[int, List[int]]:
+        """Per-layer count levels per quantized rung (§11 pruning rule).
+
+        One rung (binary ladder): the full 0..E axis — the legacy
+        enumeration, never pruned. K >= 2 rungs: a uniform stride grid
+        per rung, levels chosen as the largest count whose K-fold product
+        times the residency levels stays under ``max_enum_points`` (the
+        count-combo constraint ``sum <= E`` only shrinks it further);
+        0 and E are always included."""
+        qr = quantized_rungs(self.ladder)
+        if len(qr) == 1:
+            return {qr[0]: list(range(e + 1))}
+        budget = max(max_enum_points // max(n_res, 1), 1)
+        per_rung = max(2, int(budget ** (1.0 / len(qr))))
+        if per_rung >= e + 1:
+            levels = list(range(e + 1))
+        else:
+            stride = -(-e // (per_rung - 1))        # ceil
+            levels = sorted({*range(0, e + 1, stride), e})
+        return {b: list(levels) for b in qr}
+
+    @staticmethod
+    def _count_combos(e: int, grids: Dict[int, List[int]]):
+        """Jointly-feasible per-layer count vectors (sum <= E), iterated
+        lexicographically in ascending-rung order — the binary ladder
+        yields the legacy ascending-Num_E4 sequence."""
+        rungs = sorted(grids)
+        for combo in itertools.product(*(grids[b] for b in rungs)):
+            if sum(combo) <= e:
+                yield combo
 
     @staticmethod
     def _prune(pts: Sequence[FrontierPoint]) -> List[FrontierPoint]:
@@ -254,21 +333,33 @@ class ParetoFrontier:
         digest of its concrete plan arrays (quant + location + format),
         so precision/placement changes are caught even when the QoS
         estimate happens to coincide."""
+        binary = len(quantized_rungs(self.ladder)) == 1
         out = []
         for p in self.points:
             h = hashlib.sha256()
             h.update(p.plan.quant.tobytes())
             h.update(p.plan.location.tobytes())
-            h.update(f"{p.plan.bits}:{p.plan.group_size}:{p.plan.seed}"
-                     .encode())
-            out.append({
+            if binary:
+                # historical digest: the boolean mask + the scalar rung —
+                # byte-identical to the pre-ladder fixture format.
+                h.update(f"{p.plan.q_bits}:{p.plan.group_size}"
+                         f":{p.plan.seed}".encode())
+            else:
+                h.update(p.plan.bits.tobytes())
+                h.update(f"{p.plan.ladder}:{p.plan.group_size}"
+                         f":{p.plan.seed}".encode())
+            rec = {
                 "num_q_experts": int(p.num_q_experts),
                 "resident_experts": int(p.resident_experts),
                 "tokens_per_s": float(p.qos.tokens_per_s).hex(),
                 "quality_proxy": float(p.qos.quality_proxy).hex(),
                 "device_bytes": int(p.qos.device_bytes),
                 "plan_sha256": h.hexdigest(),
-            })
+            }
+            if not binary:
+                rec["counts_per_rung"] = [int(c) for c in p.counts_per_rung]
+                rec["ladder"] = list(self.ladder)
+            out.append(rec)
         return out
 
     def best_per_quality_level(self, mem_budget_bytes: float

@@ -4,27 +4,32 @@ Given a memory budget and a task preference ("throughput" | "quality"),
 produce a :class:`PrecisionPlan`:
 
 * throughput preference — bring as many experts on-device as possible.
-  If the budget exceeds non-expert + all-4-bit experts, eq. (1) converts the
-  surplus into 16-bit experts:
+  If the budget exceeds non-expert + all-quantized experts (at the
+  ladder's LOWEST rung), eq. (1) converts the surplus into 16-bit
+  experts:
 
       Num_E16 = floor((Mem - Size_NE - Num_E*Size_E4) / (3*Size_E4))
 
   (3*Size_E4 = Size_E16 - Size_E4 when Size_E16 = 4*Size_E4). Otherwise all
-  experts are 4-bit and only a budget-sized subset is resident.
+  experts are quantized and only a budget-sized subset is resident.
 
-* quality preference — the caller picks Num_E4 (0..Num_E) directly; the
-  planner derives residency from the leftover budget, 4-bit experts first.
+* quality preference — the caller picks the quantized counts directly:
+  either the legacy ``num_q_experts`` scalar (all at the lowest rung)
+  or ``counts`` — a {rung: global count} mapping over the ladder's
+  quantized rungs (DESIGN.md §11); the planner derives residency from
+  the leftover budget, cheapest rung first.
 
 Reconfiguration between plans is incremental (precision_plan.reconfig_delta).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional
+from typing import Dict, Literal, Mapping, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core import cost_model
-from repro.core.precision_plan import PrecisionPlan, balanced_random_plan
+from repro.core.precision_plan import (PrecisionPlan, balanced_ladder_plan,
+                                       quantized_rungs, validate_ladder)
 
 Preference = Literal["throughput", "quality"]
 
@@ -53,7 +58,7 @@ class PlanResult:
 
     def summary(self) -> str:
         p, q = self.plan, self.qos
-        return (f"[{self.preference}] E4={p.num_q_experts}/{p.quant.size} "
+        return (f"[{self.preference}] E4={p.num_q_experts}/{p.bits.size} "
                 f"resident={p.resident_fraction():.0%} "
                 f"dev={q.device_bytes/2**30:.2f}GiB "
                 f"tok/s={q.tokens_per_s:.2f} "
@@ -73,13 +78,20 @@ class AdaptivePlanner:
         self.cfg = cfg
         self.hw = hw
         self.seed = seed
+        self.ladder = validate_ladder(cfg.mop.precision_ladder)
         self.current: Optional[PlanResult] = None
         self._frontiers: dict = {}   # batch_size -> ParetoFrontier
 
     # -- sizes ------------------------------------------------------------
+    def expert_bytes(self, rung: int) -> int:
+        """One expert's byte size at ``rung`` (paper Size_E*)."""
+        return self.cfg.expert_param_bytes(rung)
+
     @property
     def size_e4(self) -> int:
-        return self.cfg.expert_param_bytes(self.cfg.mop.bits)
+        """Size of the ladder's CHEAPEST rung (legacy name: with the
+        default ladder the lowest rung is 4-bit)."""
+        return self.cfg.expert_param_bytes(quantized_rungs(self.ladder)[0])
 
     @property
     def size_e16(self) -> int:
@@ -96,7 +108,8 @@ class AdaptivePlanner:
     # -- planning ---------------------------------------------------------
     def plan(self, mem_budget_bytes: float, preference: Preference,
              num_q_experts: Optional[int] = None,
-             batch_size: int = 1) -> PlanResult:
+             batch_size: int = 1,
+             counts: Optional[Mapping[int, int]] = None) -> PlanResult:
         if mem_budget_bytes < self.size_ne:
             # paper §3: non-expert layers always live on the accelerator in
             # 16-bit — below that floor no plan exists.
@@ -105,27 +118,35 @@ class AdaptivePlanner:
                 f"non-expert floor {self.size_ne/2**20:.1f} MiB")
         total = self.num_experts_total
         layers = self.cfg.num_layers
+        low = quantized_rungs(self.ladder)[0]
         if preference == "throughput":
+            if counts is not None:
+                raise ValueError("throughput preference derives its own "
+                                 "counts (eq. 1); pass counts with the "
+                                 "quality preference")
             n16 = num_e16_eq1(mem_budget_bytes, self.size_ne, total,
                               self.size_e4, self.size_e16)
             # balanced split: floor per layer keeps the footprint <= budget
             # (each skipped promotion only frees memory)
             n16 = (n16 // layers) * layers
-            nq = total - n16
+            counts = {low: total - n16}
         elif preference == "quality":
-            if num_q_experts is None:
-                raise ValueError("quality preference needs num_q_experts "
-                                 "(paper: user-provided range)")
-            nq = int(round(num_q_experts / layers)) * layers
-            nq = min(max(nq, 0), total)
+            if counts is None:
+                if num_q_experts is None:
+                    raise ValueError(
+                        "quality preference needs num_q_experts or a "
+                        "per-rung counts mapping (paper: user-provided "
+                        "range; DESIGN.md §11)")
+                counts = {low: int(num_q_experts)}
         else:
             raise ValueError(preference)
-        # residency from the ACTUAL balanced count
-        resident = self._resident_budget(mem_budget_bytes, nq)
+        # residency from the ACTUAL balanced counts
+        counts = self._balance_counts(counts)
+        resident = self._resident_budget(mem_budget_bytes, counts)
 
-        plan = balanced_random_plan(
-            self.cfg.num_layers, self.cfg.moe.num_experts, nq,
-            bits=self.cfg.mop.bits, group_size=self.cfg.mop.group_size,
+        plan = balanced_ladder_plan(
+            self.cfg.num_layers, self.cfg.moe.num_experts, counts,
+            ladder=self.ladder, group_size=self.cfg.mop.group_size,
             seed=self.seed, resident_experts=resident)
         qos = cost_model.estimate_qos(self.cfg, plan, self.hw, batch_size)
         if qos.device_bytes > mem_budget_bytes * 1.001:
@@ -135,25 +156,50 @@ class AdaptivePlanner:
                             mem_budget_bytes=mem_budget_bytes)
         return result
 
-    def _resident_budget(self, mem_bytes: float, num_q: int) -> int:
-        """How many experts fit on-device: 4-bit first (paper priority)."""
+    def _balance_counts(self, counts: Mapping[int, int]) -> Dict[int, int]:
+        """Round each rung's global count to a balanced per-layer multiple
+        and clip the joint total to the expert grid (cheapest rung keeps
+        priority on clipping, matching the assignment order)."""
+        layers = self.cfg.num_layers
+        e = self.cfg.moe.num_experts
+        out: Dict[int, int] = {}
+        room = e
+        for b in quantized_rungs(self.ladder):
+            per_layer = int(round(int(counts.get(b, 0)) / layers))
+            per_layer = min(max(per_layer, 0), room)
+            out[b] = per_layer * layers
+            room -= per_layer
+        return out
+
+    def _resident_budget(self, mem_bytes: float,
+                         counts: Mapping[int, int]) -> int:
+        """How many experts fit on-device: cheapest rung first (the
+        paper's priority rule generalized over the ladder)."""
         total = self.num_experts_total
         left = mem_bytes - self.size_ne
         if left <= 0:
             return 0
-        n4 = min(num_q, int(left // self.size_e4))
-        left -= n4 * self.size_e4
-        n16 = min(total - num_q, max(0, int(left // self.size_e16)))
-        return n4 + n16
+        resident = 0
+        remaining = total
+        for b in quantized_rungs(self.ladder):
+            have = int(counts.get(b, 0))
+            n = min(have, int(left // self.expert_bytes(b)))
+            n = max(n, 0)
+            resident += n
+            left -= n * self.expert_bytes(b)
+            remaining -= have
+        n16 = min(remaining, max(0, int(left // self.size_e16)))
+        return resident + n16
 
     def replan(self, mem_budget_bytes: float, preference: Preference,
-               num_q_experts: Optional[int] = None, batch_size: int = 1):
+               num_q_experts: Optional[int] = None, batch_size: int = 1,
+               counts: Optional[Mapping[int, int]] = None):
         """Returns (PlanResult, delta|None). Keeps planner state."""
         from repro.core.precision_plan import (delta_cost_bytes,
                                                migrated_expert_keys,
                                                reconfig_delta)
         new = self.plan(mem_budget_bytes, preference, num_q_experts,
-                        batch_size)
+                        batch_size, counts=counts)
         delta = None
         if self.current is not None:
             delta = reconfig_delta(self.current.plan, new.plan)
@@ -161,7 +207,7 @@ class AdaptivePlanner:
             # actually stream (each once), and the traffic they cost
             delta["migrated"] = migrated_expert_keys(delta, new.plan)
             delta["traffic_bytes"] = delta_cost_bytes(
-                delta, self.size_e4, self.size_e16, new.plan)
+                delta, self.cfg.expert_param_bytes, new.plan)
         self.current = new
         return new, delta
 
@@ -177,13 +223,15 @@ class AdaptivePlanner:
 
     def sweep(self, mem_budget_bytes: float, batch_size: int = 1,
               points: Optional[int] = None):
-        """Quality-mode sweep over Num_E4 — the paper's config space
-        (Fig. 2/3 x-axes); returns list of PlanResult + Pareto indices.
+        """Quality-mode sweep over the quantized-count levels — the
+        paper's config space (Fig. 2/3 x-axes); returns list of
+        PlanResult + Pareto indices.
 
-        Rebased on :meth:`frontier`: one point per balanced Num_E4 level,
-        each at the max residency fitting the budget. ``points`` is kept
-        for backward compatibility and ignored (the balanced levels ARE
-        the distinct plans the old dense sampling collapsed to)."""
+        Rebased on :meth:`frontier`: one point per balanced quantized
+        level, each at the max residency fitting the budget. ``points``
+        is kept for backward compatibility and ignored (the balanced
+        levels ARE the distinct plans the old dense sampling collapsed
+        to)."""
         del points
         results = [
             PlanResult(plan=p.plan, qos=p.qos, preference="quality",

@@ -12,6 +12,10 @@ requests stream:
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --max-ppl-x 1.02 --budget-gb 30
 
+``--ladder 16,8,4`` opens the per-expert mixed-precision configuration
+space (DESIGN.md §11): the frontier then enumerates counts per ladder
+rung and the controller may promote/demote expert rungs at runtime.
+
 The imperative spelling (``--preference throughput|quality --num-q N``)
 is kept as a deprecated compatibility path over ``engine.configure``.
 
@@ -167,6 +171,11 @@ def main():
                          "vs all-16-bit, e.g. 1.05 = at most +5%%")
     ap.add_argument("--budget-gb", type=float, default=None,
                     help="HBM budget; default = full bf16 size * 0.6")
+    ap.add_argument("--ladder", default=None,
+                    help="precision ladder as descending CSV rungs, e.g. "
+                         "'16,8,4' (DESIGN.md §11); default = the arch's "
+                         "binary ladder (16,<bits>) reproducing boolean "
+                         "plans bit-identically")
     # -- deprecated imperative knobs ------------------------------------
     ap.add_argument("--preference", default=None,
                     choices=("throughput", "quality"),
@@ -200,6 +209,11 @@ def main():
                          "(see examples/quickstart.py)")
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
+    if args.ladder:
+        import dataclasses
+        ladder = tuple(int(b) for b in args.ladder.split(","))
+        cfg = cfg.replace(mop=dataclasses.replace(cfg.mop, ladder=ladder))
+        print(f"[serve] precision ladder {ladder}")
     model = build_model(cfg)
     if args.ckpt_dir and CheckpointManager(args.ckpt_dir).latest_step():
         tree, _ = CheckpointManager(args.ckpt_dir).restore()

@@ -310,10 +310,11 @@ def build_model(cfg: ModelConfig, mesh=None, *,
 # ---------------------------------------------------------------------------
 
 def apply_precision_plan(params, cfg: ModelConfig, plan: PrecisionPlan):
-    """Convert train-layout MoE params into dual-bank serve layout:
-    per-layer [q4 | f16] banks + router column permutation.
+    """Convert train-layout MoE params into N-bank serve layout: one
+    bank per ladder rung (ascending-bits order, e.g. [q4 | q8 | f16]) +
+    router column permutation (DESIGN.md §11).
 
-    Works on stacked (L, ...) params; per-layer E4 counts are equal by
+    Works on stacked (L, ...) params; per-layer rung counts are equal by
     construction (balanced plan) so banks stack cleanly."""
     assert cfg.moe is not None
     moe_p = params["layers"]["moe"]
@@ -322,13 +323,13 @@ def apply_precision_plan(params, cfg: ModelConfig, plan: PrecisionPlan):
     routers = []
     for li in range(l):
         layer_p = {k: moe_p[k][li] for k in ("w_gate", "w_up", "w_down")}
-        banks, order = mixed_moe.build_mixed_banks(
-            layer_p, plan.quant[li], bits=plan.bits,
+        banks, order = mixed_moe.build_ladder_banks(
+            layer_p, plan.bits[li], ladder=plan.ladder,
             group_size=plan.group_size)
         banks_per_layer.append(banks)
         routers.append(jnp.take(moe_p["router"][li], order, axis=1))
     stacked = {}
-    for bank in ("q4", "f16"):
+    for bank in banks_per_layer[0]:
         if banks_per_layer[0][bank] is None:
             stacked[bank] = None
         else:

@@ -27,7 +27,7 @@ itself is transitively imported via the cost model's config types.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -63,6 +63,11 @@ class EngineConfig:
     Expert streaming:
       * ``swap_bytes`` — device LRU swap capacity for non-resident
         experts; ``prefetch`` enables the speculative prefetch cache.
+    Precision:
+      * ``ladder`` — the deployment's precision ladder (descending rung
+        tuple, e.g. ``(16, 8, 4)``; DESIGN.md §11). ``None`` keeps the
+        model config's ladder (binary ``(16, bits)`` by default, which
+        reproduces the pre-ladder plans bit-identically).
     Hardware:
       * ``hw`` — analytic hardware model; None measures the host link
         bandwidth once per process and uses defaults otherwise.
@@ -74,6 +79,7 @@ class EngineConfig:
     max_queue: Optional[int] = None
     swap_bytes: Optional[int] = None
     prefetch: bool = False
+    ladder: Optional[Tuple[int, ...]] = None
     hw: Optional[HardwareModel] = None
 
 

@@ -128,6 +128,12 @@ class AdaptiveServingEngine:
                 use_kernel=use_kernel,
                 max_active_tokens=max_active_tokens, max_queue=max_queue,
                 swap_bytes=swap_bytes, prefetch=prefetch, hw=hw)
+        if config.ladder is not None:
+            # the deployment declares its precision ladder on the typed
+            # surface; it overrides the config default (DESIGN.md §11)
+            import dataclasses as _dc
+            cfg = cfg.replace(mop=_dc.replace(
+                cfg.mop, ladder=tuple(config.ladder)))
         self.config = config
         self.cfg = cfg
         self.params_train = params        # train-layout master copy
@@ -253,10 +259,15 @@ class AdaptiveServingEngine:
         """Apply one frontier point (the QoSController's walk step).
         Frontier plans are bit-identical to planner plans for the same
         knobs, so this routes through the ordinary replan path: the
-        point's exact device footprint is the budget and surplus HBM is
-        returned to the pool."""
+        point's exact device footprint is the budget, the point's
+        per-rung counts are the quality knobs (a multi-rung point is not
+        expressible through Num_E4 alone — DESIGN.md §11), and surplus
+        HBM is returned to the pool."""
+        counts = point.quantized_counts() if point.counts_per_rung \
+            else None
         result = self._reconfigure(float(point.qos.device_bytes),
-                                   "quality", point.num_q_experts)
+                                   "quality", point.num_q_experts,
+                                   counts=counts)
         self._active_point = point
         return result
 
@@ -278,9 +289,13 @@ class AdaptiveServingEngine:
         else:
             loss = None
             if num_q_experts is not None:
+                from repro.core.cost_model import RUNG_QUALITY_COST
+                from repro.core.precision_plan import quantized_rungs
                 frac = num_q_experts / max(self.planner.num_experts_total,
                                            1)
-                per_bit = {4: 0.07, 8: 0.02}.get(self.cfg.mop.bits, 0.07)
+                # legacy shim: Num_E4 counts experts at the LOWEST rung
+                low = quantized_rungs(self.planner.ladder)[0]
+                per_bit = RUNG_QUALITY_COST.get(low, 0.07)
                 loss = per_bit * min(max(frac, 0.0), 1.0)
             self._target = QoSTarget(mem_budget_bytes=mem_budget_bytes,
                                      max_quality_loss=loss)
@@ -290,14 +305,15 @@ class AdaptiveServingEngine:
         return result
 
     def _reconfigure(self, mem_budget_bytes: float, preference: str,
-                     num_q_experts: Optional[int] = None) -> PlanResult:
+                     num_q_experts: Optional[int] = None,
+                     counts=None) -> PlanResult:
         """Replan under new constraints; safe to call with requests in
         flight. Placement-only changes apply immediately (between decode
         iterations); a bank-split change drains the active slots first."""
         t0 = time.perf_counter()
         result, delta = self.planner.replan(
             mem_budget_bytes, preference, num_q_experts,
-            batch_size=self.max_slots)
+            batch_size=self.max_slots, counts=counts)
         plan = result.plan
         sig = plan.bank_sizes()
         rebuild = (self._plan_result is None
@@ -383,8 +399,8 @@ class AdaptiveServingEngine:
     # -- expert streaming ----------------------------------------------
     def _fetch_expert(self, key):
         """Host loader for the expert swap cache: the expert's weights in
-        the precision the active plan assigns it (packed int4 + scales or
-        bf16), staged from the train-layout master copy."""
+        the precision RUNG the active plan assigns it (packed int4/int8 +
+        scales or bf16), staged from the train-layout master copy."""
         li, ei = key[0], key[1]
         blob = self._host_store.get((li, ei))
         if blob is None:
@@ -392,9 +408,9 @@ class AdaptiveServingEngine:
             moe_p = self.params_train["layers"]["moe"]
             w = {k: np.asarray(moe_p[k][li, ei])
                  for k in ("w_gate", "w_up", "w_down")}
-            if self._plan_result.plan.quant[li, ei]:
+            bits = int(self._plan_result.plan.bits[li, ei])
+            if bits < 16:
                 from repro.core.quantization import quantize
-                bits = self._plan_result.plan.bits
                 gs = self._plan_result.plan.group_size
                 blob = {}
                 for k, v in w.items():

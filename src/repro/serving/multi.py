@@ -356,9 +356,9 @@ class MultiTenantEngine:
             delta = reconfig_delta(old.plan, point.plan)
             keys = migrated_expert_keys(delta, point.plan)
             cfg = t.frontier.cfg
-            s_q = cfg.expert_param_bytes(point.plan.bits)
-            s16 = cfg.expert_param_bytes(16)
-            mbytes = sum(s_q if point.plan.quant[l, e] else s16
+            # each migrated expert streams once, in its NEW ladder rung's
+            # format (a 4->8 promotion charges the 8-bit size)
+            mbytes = sum(cfg.expert_param_bytes(int(point.plan.bits[l, e]))
                          for (l, e) in keys)
             placement_only = (
                 old.plan.bank_sizes() == point.plan.bank_sizes()

@@ -11,7 +11,11 @@ against the active target, and when the measurement leaves the tolerance
 band walks the :class:`~repro.core.pareto.ParetoFrontier` to the
 *adjacent* point — one step at a time, through the engine's ordinary
 mid-flight replan path, so a placement-only move applies with zero drain
-and a bank-split move drains gracefully.
+and a bank-split move drains gracefully. On a multi-rung precision
+ladder (DESIGN.md §11) an adjacent point may PROMOTE or DEMOTE experts
+between rungs (e.g. 4->8 bit) instead of only swapping counts or
+residency; the ``rung_promotions``/``rung_demotions`` metrics count
+those steps.
 
 Stability comes from two guards:
 
@@ -81,6 +85,11 @@ class QoSController:
         self.metrics: Dict[str, float] = {
             "replans": 0, "decisions": 0, "violations": 0,
             "last_measured_tps": 0.0,
+            # ladder telemetry (DESIGN.md §11): a walk step whose plan
+            # raises the mean expert bit-width is a rung PROMOTION
+            # (quality up), lowering it is a DEMOTION — the controller
+            # can now trade precision, not only counts/residency.
+            "rung_promotions": 0, "rung_demotions": 0,
         }
 
     # -- target management -------------------------------------------------
@@ -185,6 +194,13 @@ class QoSController:
         return p95 if p95 > 0 else None
 
     def _apply(self, point: FrontierPoint):
+        if self.point is not None:
+            old_bits = float(self.point.plan.bits.mean())
+            new_bits = float(point.plan.bits.mean())
+            if new_bits > old_bits:
+                self.metrics["rung_promotions"] += 1
+            elif new_bits < old_bits:
+                self.metrics["rung_demotions"] += 1
         self.engine.apply_frontier_point(point)
         self.point = point
         self.metrics["replans"] += 1

@@ -76,6 +76,81 @@ class TestLRU:
                                                  abs=0.06)
 
 
+class TestLadderPromote:
+    """Mixed-precision entries under the ladder (DESIGN.md §11): a rung
+    flip of a swap-resident expert is an IN-PLACE update charging
+    exactly the byte delta."""
+
+    @staticmethod
+    def make_rung_cache(capacity_kb=16):
+        sizes = {}     # key -> current rung blob size
+
+        def fetch(key):
+            return np.zeros(sizes[key], np.uint8)
+
+        return ExpertCache(fetch, capacity_bytes=capacity_kb * 1024), sizes
+
+    def test_promote_4_to_8_charges_exact_delta(self):
+        c, sizes = self.make_rung_cache()
+        s4, s8 = 1024, 2048                       # int4 vs int8 blob
+        sizes[(0, 0)] = s4
+        c.get((0, 0))
+        used_before = c.used_bytes
+        delta = c.update((0, 0), np.zeros(s8, np.uint8))
+        assert delta == s8 - s4
+        assert c.used_bytes - used_before == s8 - s4
+        assert c.resident_keys() == [(0, 0)]      # in place, no eviction
+        assert c.stats.evictions == 0
+
+    def test_demote_8_to_4_returns_negative_delta(self):
+        c, sizes = self.make_rung_cache()
+        sizes[(0, 1)] = 2048
+        c.get((0, 1))
+        delta = c.update((0, 1), np.zeros(1024, np.uint8))
+        assert delta == -1024
+        assert c.used_bytes == 1024
+
+    def test_update_admits_absent_key(self):
+        c, _ = self.make_rung_cache()
+        delta = c.update((3, 3), np.zeros(512, np.uint8))
+        assert delta == 512 and c.used_bytes == 512
+
+    def test_scoped_view_update_stays_namespaced(self):
+        parent = ExpertCache(capacity_bytes=16 * 1024)
+        a = parent.scoped("A", lambda k: np.zeros(1024, np.uint8))
+        b = parent.scoped("B", lambda k: np.zeros(1024, np.uint8))
+        a.get((0, 0))
+        b.get((0, 0))
+        delta = a.update((0, 0), np.zeros(2048, np.uint8))
+        assert delta == 1024
+        assert a.used_bytes == 2048
+        assert b.used_bytes == 1024               # other namespace untouched
+
+    def test_promotion_delta_reaches_replan_report(self):
+        """End to end through the multi-tenant diff path: two plans that
+        differ ONLY by one layer's experts flipping 4->8 bits must
+        report exactly those experts, each charged at the NEW (8-bit)
+        size, in ReplanReport.migrated_bytes
+        (delta_cost_bytes semantics)."""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.core.precision_plan import (balanced_ladder_plan,
+                                               delta_cost_bytes,
+                                               migrated_expert_keys,
+                                               reconfig_delta)
+        cfg = get_config("mixtral-8x7b")
+        a = balanced_ladder_plan(4, 8, {4: 8}, ladder=(16, 8, 4), seed=0,
+                                 resident_experts=32)
+        b_bits = a.bits.copy()
+        b_bits[2][b_bits[2] == 4] = 8             # promote layer 2 in place
+        b = dataclasses.replace(a, bits=b_bits)
+        delta = reconfig_delta(a, b)
+        keys = migrated_expert_keys(delta, b)
+        assert keys == [(2, int(e)) for e in np.where(a.bits[2] == 4)[0]]
+        cost = delta_cost_bytes(delta, cfg.expert_param_bytes, b)
+        assert cost == len(keys) * cfg.expert_param_bytes(8)
+
+
 class TestPrefetch:
     def test_hint_avoids_demand_miss(self):
         c, _ = make_cache(capacity_experts=4, cls=PrefetchingExpertCache)

@@ -151,6 +151,34 @@ class TestParityPropertyGrid:
         assert out.shape == (37, 96)
         assert_matches_oracle(out, x, qt)
 
+    @pytest.mark.parametrize("group", [32, 64, 128])
+    def test_q8_group_sweep(self, group):
+        """int8 across all group sizes (the q4 group sweep's twin — the
+        q8 bank is first-class on the precision ladder)."""
+        x, qt = make_case(128, 256, 256, 8, group)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=8, group_size=group,
+                               interpret=True)
+        assert_matches_oracle(out, x, qt)
+
+    def test_q8_edge_tile_clamp_below_default_blocks(self):
+        """int8 with dims smaller than every default block (M=8 < 128,
+        N=64 < 256, K=64 < 128): the clamp path, not just the aligned
+        fast path."""
+        x, qt = make_case(8, 64, 64, 8, 32)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=8, group_size=32,
+                               out_dtype=jnp.float32, interpret=True)
+        assert out.shape == (8, 64)
+        assert_matches_oracle(out, x, qt)
+
+    def test_q8_odd_explicit_tiles(self):
+        """int8 with deliberately odd non-default tiles (96-multiples):
+        exercises the q8 kernel body off the (128, 256, 128) defaults."""
+        x, qt = make_case(64, 192, 192, 8, 32, seed=11)
+        out = quantized_matmul(x, qt.q, qt.scales, bits=8, group_size=32,
+                               block_m=32, block_n=96, block_k=96,
+                               out_dtype=jnp.float32, interpret=True)
+        assert_matches_oracle(out, x, qt)
+
     @given(e=st.integers(1, 3), c=st.sampled_from([8, 40]),
            bits=st.sampled_from([4, 8]), seed=st.integers(0, 999))
     @settings(max_examples=6, deadline=None)
@@ -170,10 +198,12 @@ class TestParityPropertyGrid:
 
 
 class TestOpsWrappers:
+    @pytest.mark.parametrize("bits", [4, 8])
     @pytest.mark.parametrize("m", [1, 7, 128, 200])
-    def test_q_matmul_pads_m(self, m):
-        """Decode calls with tiny M must work (padding inside the wrapper)."""
-        x, qt = make_case(m, 256, 256, 4, 64)
+    def test_q_matmul_pads_m(self, m, bits):
+        """Decode calls with tiny M must work (padding inside the wrapper),
+        on both quantized rungs."""
+        x, qt = make_case(m, 256, 256, bits, 64)
         out = q_matmul(x, qt, interpret=True)
         assert out.shape == (m, 256)
         assert_matches_oracle(out, x, qt)

@@ -1,0 +1,233 @@
+"""Precision-ladder plan API (DESIGN.md §11).
+
+Two contracts are pinned here:
+
+* **compat** — with the binary ladder ``(16, 4)`` the redesigned
+  ``bits[L, E]`` encoding reproduces the pre-redesign boolean plans
+  bit-identically: frontier records match the checked-in golden fixture
+  byte-for-byte, ``balanced_ladder_plan`` consumes the rng exactly like
+  the legacy ``balanced_random_plan``, and the derived ``quant``/
+  ``num_q_experts``/``bank_sizes()`` views keep their historical values.
+* **dominance** — the 3-rung ladder ``(16, 8, 4)`` opens configurations
+  the binary space cannot express; its frontier must contain at least
+  one point STRICTLY dominating a binary-frontier point on the
+  (device bytes ↓, quality ↑, tokens/s ↑) axes.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import HardwareModel, estimate_qos
+from repro.core.pareto import ParetoFrontier, QoSTarget
+from repro.core.planner import AdaptivePlanner
+from repro.core.precision_plan import (
+    DEVICE, balanced_ladder_plan, balanced_random_plan, delta_cost_bytes,
+    migrated_expert_keys, quantized_rungs, reconfig_delta, validate_ladder,
+)
+
+MIXTRAL = get_config("mixtral-8x7b")
+LADDER3 = MIXTRAL.replace(
+    mop=dataclasses.replace(MIXTRAL.mop, ladder=(16, 8, 4)))
+FIXTURE = Path(__file__).parent / "fixtures" \
+    / "frontier_mixtral-8x7b_hw-default_b1_s0.json"
+
+
+@pytest.fixture(scope="module")
+def binary_frontier():
+    return ParetoFrontier(MIXTRAL)
+
+
+@pytest.fixture(scope="module")
+def ladder_frontier():
+    return ParetoFrontier(LADDER3)
+
+
+def _strictly_dominates(a, b) -> bool:
+    ge = (a.qos.tokens_per_s >= b.qos.tokens_per_s
+          and a.qos.quality_proxy <= b.qos.quality_proxy
+          and a.qos.device_bytes <= b.qos.device_bytes)
+    gt = (a.qos.tokens_per_s > b.qos.tokens_per_s
+          or a.qos.quality_proxy < b.qos.quality_proxy
+          or a.qos.device_bytes < b.qos.device_bytes)
+    return ge and gt
+
+
+class TestLadderValidation:
+    def test_accepts_supported_ladders(self):
+        assert validate_ladder((16, 4)) == (16, 4)
+        assert validate_ladder((16, 8, 4)) == (16, 8, 4)
+        assert validate_ladder((16, 8)) == (16, 8)
+
+    @pytest.mark.parametrize("bad", [
+        (4, 16), (16, 16, 4), (8, 4), (16, 2), (16,), (16, 12, 4),
+    ])
+    def test_rejects_malformed(self, bad):
+        with pytest.raises(ValueError):
+            validate_ladder(bad)
+
+    def test_quantized_rungs_ascending(self):
+        assert quantized_rungs((16, 8, 4)) == (4, 8)
+        assert quantized_rungs((16, 4)) == (4,)
+
+
+class TestBinaryCompat:
+    """Ladder (16, 4) must reproduce today's binary plans bit-identically
+    — the API contract of the redesign (ISSUE 4 acceptance)."""
+
+    def test_frontier_records_match_checked_in_golden_fixture(
+            self, binary_frontier):
+        """The strongest compat statement: the enumerated dominant set of
+        the DEFAULT (binary-ladder) config equals the fixture generated
+        BEFORE the redesign, byte for byte (hex floats + plan sha256 over
+        the boolean view)."""
+        assert FIXTURE.exists()
+        golden = json.loads(FIXTURE.read_text())
+        assert binary_frontier.records() == golden
+
+    @pytest.mark.parametrize("nq,res,seed", [
+        (0, None, 0), (64, 100, 0), (128, 64, 3), (256, 256, 7),
+    ])
+    def test_ladder_plan_rng_identical_to_legacy(self, nq, res, seed):
+        """balanced_ladder_plan({4: nq}, ladder=(16,4)) consumes the rng
+        exactly like the legacy boolean assignment."""
+        legacy = balanced_random_plan(32, 8, nq, seed=seed,
+                                      resident_experts=res)
+        ladder = balanced_ladder_plan(32, 8, {4: nq}, ladder=(16, 4),
+                                      seed=seed, resident_experts=res)
+        assert (legacy.bits == ladder.bits).all()
+        assert (legacy.location == ladder.location).all()
+
+    def test_derived_boolean_views(self):
+        p = balanced_random_plan(4, 8, 16, seed=1)
+        assert p.quant.dtype == bool
+        assert (p.quant == (p.bits == 4)).all()
+        assert p.num_q_experts == 16
+        assert p.num_q_per_layer == 4
+        assert p.bank_sizes() == (4, 4)          # (E4, E16)
+        assert p.q_bits == 4
+
+    def test_planner_counts_spelling_matches_num_q(self):
+        pl = AdaptivePlanner(MIXTRAL)
+        a = pl.plan(40 * 2**30, "quality", num_q_experts=128)
+        b = pl.plan(40 * 2**30, "quality", counts={4: 128})
+        assert (a.plan.bits == b.plan.bits).all()
+        assert (a.plan.location == b.plan.location).all()
+
+
+class TestThreeRungLadder:
+    def test_enumeration_covers_mixed_counts(self, ladder_frontier):
+        combos = {p.counts_per_rung for p in ladder_frontier.all_points}
+        # pure corners present ...
+        total = MIXTRAL.num_layers * MIXTRAL.moe.num_experts
+        assert (total, 0, 0) in combos
+        assert (0, total, 0) in combos
+        assert (0, 0, total) in combos
+        # ... and genuinely mixed rung assignments
+        assert any(c[1] > 0 and c[2] > 0 for c in combos)
+
+    def test_per_layer_counts_balanced_and_banks_static(self):
+        plan = balanced_ladder_plan(8, 8, {4: 16, 8: 24}, ladder=(16, 8, 4),
+                                    seed=2)
+        for l in range(8):
+            assert int((plan.bits[l] == 4).sum()) == 2
+            assert int((plan.bits[l] == 8).sum()) == 3
+        assert plan.bank_sizes() == (2, 3, 3)    # ascending bits
+        order = plan.expert_order()
+        for l in range(8):
+            assert sorted(order[l]) == list(range(8))
+            assert (plan.bits[l, order[l][:2]] == 4).all()
+            assert (plan.bits[l, order[l][2:5]] == 8).all()
+            assert (plan.bits[l, order[l][5:]] == 16).all()
+
+    def test_quality_proxy_orders_rungs(self):
+        """Same count at a higher rung must cost less quality."""
+        qos = {}
+        for rung in (4, 8):
+            plan = balanced_ladder_plan(
+                32, 8, {rung: 128}, ladder=(16, 8, 4), seed=0,
+                resident_experts=256)
+            qos[rung] = estimate_qos(LADDER3, plan)
+        assert qos[8].quality_proxy < qos[4].quality_proxy
+        assert qos[8].device_bytes > qos[4].device_bytes
+        assert qos[8].tokens_per_s < qos[4].tokens_per_s
+
+    def test_frontier_point_plans_bit_identical_to_planner(
+            self, ladder_frontier):
+        """The engine apply path: planner.plan(point bytes, 'quality',
+        counts=point.quantized_counts()) must reproduce a mixed-rung
+        frontier point's plan exactly."""
+        pl = AdaptivePlanner(LADDER3)
+        mixed = [p for p in ladder_frontier.points
+                 if p.quantized_counts().get(4, 0)
+                 and p.quantized_counts().get(8, 0)]
+        assert mixed, "ladder frontier lost all mixed-rung points"
+        for p in mixed[:: max(1, len(mixed) // 5)]:
+            r = pl.plan(float(p.qos.device_bytes), "quality",
+                        counts=p.quantized_counts())
+            assert (r.plan.bits == p.plan.bits).all()
+            assert (r.plan.location == p.plan.location).all()
+            assert r.qos.device_bytes == p.qos.device_bytes
+
+    def test_ladder_frontier_strictly_dominates_a_binary_point(
+            self, binary_frontier, ladder_frontier):
+        """ISSUE 4 acceptance: the 3-rung frontier contains >= 1 point
+        strictly dominating some binary-frontier point on the
+        (bytes, quality, tokens/s) axes."""
+        assert any(
+            _strictly_dominates(p, b)
+            for p in ladder_frontier.points for b in binary_frontier.points)
+
+    def test_select_can_land_on_a_mid_rung(self, ladder_frontier):
+        """A tight quality ceiling that only int8 can meet under a small
+        budget: the declarative surface reaches the new rung."""
+        t = QoSTarget(max_quality_loss=0.025, min_tokens_per_s=5.0,
+                      mem_budget_bytes=40 * 2**30)
+        p = ladder_frontier.select(t)
+        assert p.quantized_counts().get(8, 0) > 0
+
+    def test_records_carry_rung_counts(self, ladder_frontier):
+        recs = ladder_frontier.records()
+        assert all(r["ladder"] == [16, 8, 4] for r in recs)
+        assert all(sum(r["counts_per_rung"])
+                   == MIXTRAL.num_layers * MIXTRAL.moe.num_experts
+                   for r in recs)
+
+
+class TestLadderReconfig:
+    def test_promote_4_to_8_charges_delta(self):
+        """A rung promotion in place (same residency) migrates exactly
+        the flipped experts, each at its NEW size — the
+        delta_cost_bytes contract for ladder moves."""
+        a = balanced_ladder_plan(4, 8, {4: 8}, ladder=(16, 8, 4), seed=0,
+                                 resident_experts=32)
+        b = balanced_ladder_plan(4, 8, {8: 8}, ladder=(16, 8, 4), seed=0,
+                                 resident_experts=32)
+        delta = reconfig_delta(a, b)
+        flipped = np.argwhere(a.bits != b.bits)
+        keys = migrated_expert_keys(delta, b)
+        assert len(keys) == len(flipped)
+        cost = delta_cost_bytes(delta, MIXTRAL.expert_param_bytes, b)
+        s8 = MIXTRAL.expert_param_bytes(8)
+        s4 = MIXTRAL.expert_param_bytes(4)
+        # same seed -> the same experts flip 4->8 AND 8->4 is empty:
+        # every migrated expert streams at the 8-bit size
+        n_promoted = int((b.bits[tuple(flipped.T)] == 8).sum())
+        n_demoted = len(flipped) - n_promoted
+        assert cost == n_promoted * s8 + n_demoted * s4
+
+    def test_pruned_enumeration_stays_tractable_at_scale(self):
+        """kimi-scale (61 layers x 384 experts) with a 3-rung ladder:
+        the §11 pruning rule keeps the enumerated space bounded while
+        preserving the pure corners."""
+        cfg = get_config("kimi-k2-1t-a32b")
+        cfg = cfg.replace(mop=dataclasses.replace(cfg.mop, ladder=(16, 8, 4)))
+        f = ParetoFrontier(cfg, HardwareModel(), residency_step=None,
+                           max_enum_points=4096)
+        assert len(f.all_points) <= 4096
+        e = cfg.moe.num_experts
+        for levels in f.count_levels.values():
+            assert levels[0] == 0 and levels[-1] == e

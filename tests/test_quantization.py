@@ -113,6 +113,59 @@ class TestNF4:
         dq = dequantize_nf4(*quantize_nf4(w, 64), 64).astype(jnp.float32)
         assert float(jnp.abs(w - dq).max() / jnp.abs(w).max()) < 0.2
 
+    def test_nf4_roundtrip_exact_on_codebook_values(self):
+        """Weights that ARE codebook entries (times a per-group absmax)
+        must round-trip exactly: quantize_nf4 snaps to the nearest code,
+        dequantize_nf4 rescales it — zero error when the input sits on
+        the lattice."""
+        from repro.core.quantization import NF4_CODE
+        rng = np.random.default_rng(4)
+        g, n = 16, 8
+        codes = rng.integers(0, 16, (2 * g, n))
+        w = NF4_CODE[codes].astype(np.float32)
+        # give each group a distinct scale; keep one entry at ±1 per
+        # (group, col) so absmax reconstructs the scale exactly
+        w[0, :], w[g, :] = 1.0, -1.0
+        scale = np.array([1.5, 0.25])[:, None, None]     # (2 groups)
+        w = (w.reshape(2, g, n) * scale).reshape(2 * g, n)
+        q, absmax = quantize_nf4(jnp.asarray(w), g)
+        dq = dequantize_nf4(q, absmax, g).astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(dq), w, rtol=2e-2, atol=2e-2)
+
+    @given(seed=st.integers(0, 500), g=st.sampled_from([16, 32, 64]))
+    @settings(max_examples=15, deadline=None)
+    def test_nf4_roundtrip_error_bounded_property(self, seed, g):
+        """Property form of the round trip: relative max error is
+        bounded by half the widest codebook gap (~0.14 of the group
+        absmax) for any input."""
+        w = rand((2 * g, 16), seed)
+        dq = dequantize_nf4(*quantize_nf4(w, g), g).astype(jnp.float32)
+        err = float(jnp.abs(w - dq).max() / (jnp.abs(w).max() + 1e-12))
+        assert err < 0.15
+
+
+class TestLadderMonotonicity:
+    """rmse(4) >= rmse(8) >= 0 across the precision ladder — the
+    assumption behind the cost model's per-rung quality costs
+    (DESIGN.md §11)."""
+
+    @given(seed=st.integers(0, 1000), group=st.sampled_from([32, 64]))
+    @settings(max_examples=20, deadline=None)
+    def test_rmse_monotone_across_ladder(self, seed, group):
+        w = rand((256, 32), seed)
+        e4 = quantization_rmse(w, 4, group)
+        e8 = quantization_rmse(w, 8, group)
+        assert e4 >= e8 >= 0.0
+        assert e8 > 0.0            # int8 is lossy, not a no-op
+
+    def test_rmse_ladder_ordering_heavy_tails(self):
+        """Monotonicity must survive outlier-heavy weights (student-t),
+        not just gaussians."""
+        w = jnp.asarray(
+            np.random.default_rng(6).standard_t(2, (512, 64)), jnp.float32)
+        errs = [quantization_rmse(w, b, 64) for b in (4, 8)]
+        assert errs[0] >= errs[1] >= 0.0
+
 
 class TestTreeQuant:
     def test_tree_selectivity(self):
