@@ -16,14 +16,26 @@ byte budget stay GLOBAL — one tenant's misses may evict another tenant's
 swap entries, and the eviction is credited to the owner who lost the
 entry), and routes misses to the owner's own host loader.
 
+Asynchronous staging (DESIGN.md §12) moves transfers OFF the decode
+critical path: :class:`AsyncExpertCache` runs a small transfer worker
+pool behind the same interface — ``prefetch``/``hint`` is a non-blocking
+enqueue, ``wait(keys)`` blocks only until the named keys are resident,
+and the engine's per-layer lookahead pipeline hides most transfer time
+under layer compute. Demand traffic (``bytes_in``/``transfer_s``) and
+speculative traffic (``prefetch_bytes``/``prefetch_s``) are accounted
+separately so the engine's transfer metrics never conflate the two.
+
 This is the *runtime* placement path; the in-graph dual-bank path
 (``mixed_moe``) covers the resident portion.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
+import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
@@ -35,8 +47,14 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    #: DEMAND traffic only — transfers a decode step actually asked for.
     bytes_in: int = 0
     transfer_s: float = 0.0
+    #: SPECULATIVE traffic (hint/prefetch staging) — kept apart so
+    #: miss-rate and transfer metrics never conflate demand with
+    #: speculation (DESIGN.md §12).
+    prefetch_bytes: int = 0
+    prefetch_s: float = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -57,6 +75,10 @@ class ExpertCache:
     Used directly (one owner, ``fetch`` bound at construction) or as the
     shared store behind :meth:`scoped` views (``fetch`` may then be None —
     each view brings its own loader)."""
+
+    #: staging discipline flag: False = every transfer blocks the caller
+    #: (the paper's serial swap); AsyncExpertCache overrides (DESIGN.md §12).
+    is_async = False
 
     def __init__(self, fetch: Optional[Callable[[Hashable], object]] = None,
                  capacity_bytes: int = 0,
@@ -98,18 +120,24 @@ class ExpertCache:
         self._cache.move_to_end(key)
         return self._cache[key][0]
 
-    def _admit(self, key: Hashable, host) -> Tuple[int, float]:
+    def _admit(self, key: Hashable, host,
+               speculative: bool = False) -> Tuple[int, float]:
         """Stage a host pytree into the cache; returns (bytes, seconds)
         of the device transfer. Updates the parent's aggregate stats
-        (bytes_in/transfer_s only — hit/miss bookkeeping is the caller's)."""
+        (bytes_in/transfer_s for demand, prefetch_bytes/prefetch_s for
+        speculative staging — hit/miss bookkeeping is the caller's)."""
         nb = _nbytes(host)
         self._evict_until(nb)
         t0 = time.perf_counter()
         dev = jax.device_put(host, self.device)
         jax.block_until_ready(dev)
         dt = time.perf_counter() - t0
-        self.stats.transfer_s += dt
-        self.stats.bytes_in += nb
+        if speculative:
+            self.stats.prefetch_s += dt
+            self.stats.prefetch_bytes += nb
+        else:
+            self.stats.transfer_s += dt
+            self.stats.bytes_in += nb
         self._cache[key] = (dev, nb)
         self._used += nb
         return nb, dt
@@ -174,8 +202,18 @@ class ExpertCache:
                 self._credit_eviction(k)
 
     def resize(self, capacity_bytes: int):
+        """Change the byte budget. A shrink below ``used_bytes`` evicts
+        down IMMEDIATELY (LRU order) — the cache is never left over
+        budget until the next admission (tested)."""
         self.capacity = int(capacity_bytes)
         self._evict_until(0)
+
+    def drain(self):
+        """Synchronous staging has nothing in flight — no-op (the async
+        subclass blocks until every enqueued transfer lands)."""
+
+    def close(self):
+        """No transfer workers to join — no-op (see AsyncExpertCache)."""
 
     @property
     def used_bytes(self) -> int:
@@ -215,6 +253,8 @@ class ScopedExpertCache:
 
     # -- single-owner cache interface ---------------------------------------
     def get(self, key: Hashable):
+        if self.is_async:
+            return self._get_async(key)
         full = self._full(key)
         hit = self.parent._peek(full)
         if hit is not None:
@@ -236,14 +276,104 @@ class ScopedExpertCache:
         for k in keys:
             self.get(k)
 
+    # -- async transfer-engine delegation (DESIGN.md §12) -------------------
+    # Per-owner DEMAND accounting is delta-based over the parent's stats:
+    # safe because each tenant engine drives its cache view from the one
+    # serving thread (workers only touch the speculative counters, which
+    # stay parent-global).
+    @property
+    def is_async(self) -> bool:
+        return bool(getattr(self.parent, "is_async", False))
+
+    def _async_parent(self) -> "AsyncExpertCache":
+        if not self.is_async:
+            raise RuntimeError(
+                f"scoped cache {self.owner!r}: the shared swap space is "
+                "synchronous — build it as AsyncExpertCache for overlap "
+                "serving (DESIGN.md §12)")
+        return self.parent
+
+    def _scoped_fetch(self, full_key):
+        if self._fetch is None:
+            raise RuntimeError(f"scoped cache {self.owner!r}: no fetch "
+                               "bound (bind_fetch first)")
+        return self._fetch(full_key[1])
+
+    def _get_async(self, key: Hashable):
+        p = self._async_parent()
+        with p._lock:
+            h0, m0 = p.stats.hits, p.stats.misses
+            b0, t0 = p.stats.bytes_in, p.stats.transfer_s
+        val = p.get(self._full(key), fetch=self._scoped_fetch)
+        with p._lock:
+            self.stats.hits += p.stats.hits - h0
+            self.stats.misses += p.stats.misses - m0
+            self.stats.bytes_in += p.stats.bytes_in - b0
+            self.stats.transfer_s += p.stats.transfer_s - t0
+        return val
+
+    def prefetch(self, keys) -> int:
+        """Non-blocking speculative enqueue through the async parent
+        (speculative traffic is accounted parent-globally)."""
+        return self._async_parent().prefetch(
+            [self._full(k) for k in keys], fetch=self._scoped_fetch)
+
+    def hint(self, keys):
+        """Speculative staging for this namespace: non-blocking enqueue
+        on an async parent, inline speculative admit on a sync one (the
+        blocking staging time is mirrored into THIS view's stats so the
+        engine's exposed-time accounting sees it)."""
+        if self.is_async:
+            self.prefetch(keys)
+            return
+        for k in keys:
+            full = self._full(k)
+            if self.parent._peek(full) is None:
+                nb, dt = self.parent._admit(full, self._scoped_fetch(full),
+                                            speculative=True)
+                self.stats.prefetch_bytes += nb
+                self.stats.prefetch_s += dt
+
+    def wait(self, keys) -> int:
+        """Demand-wait through the async parent; per-owner demand stats
+        mirror the parent's deltas (snapshots under the parent's lock —
+        the same discipline as ``_get_async``). Returns the demand-fetch
+        count."""
+        p = self._async_parent()
+        keys = list(keys)
+        with p._lock:
+            b0, t0 = p.stats.bytes_in, p.stats.transfer_s
+        n = p.wait([self._full(k) for k in keys],
+                   fetch=self._scoped_fetch)
+        with p._lock:
+            self.stats.bytes_in += p.stats.bytes_in - b0
+            self.stats.transfer_s += p.stats.transfer_s - t0
+        self.stats.misses += n
+        self.stats.hits += len(keys) - n
+        return n
+
+    def drain(self):
+        self.parent.drain()
+
+    def close(self):
+        """Drain this view's traffic but leave the SHARED space open —
+        it is closed by whoever owns it (e.g. MultiTenantEngine)."""
+        self.parent.drain()
+
     def update(self, key: Hashable, host) -> int:
         """In-place rung promote/demote of this owner's entry
-        (see :meth:`ExpertCache.update`); returns the byte delta."""
-        bytes_before = self.parent.stats.bytes_in
-        time_before = self.parent.stats.transfer_s
-        delta = self.parent.update(self._full(key), host)
-        self.stats.bytes_in += self.parent.stats.bytes_in - bytes_before
-        self.stats.transfer_s += self.parent.stats.transfer_s - time_before
+        (see :meth:`ExpertCache.update`); returns the byte delta. On an
+        async parent the whole read-update-read runs under its (re-
+        entrant) lock so concurrent workers can't skew the deltas."""
+        lock = getattr(self.parent, "_lock", None)
+        with lock if lock is not None else contextlib.nullcontext():
+            bytes_before = self.parent.stats.bytes_in
+            time_before = self.parent.stats.transfer_s
+            delta = self.parent.update(self._full(key), host)
+            self.stats.bytes_in += \
+                self.parent.stats.bytes_in - bytes_before
+            self.stats.transfer_s += \
+                self.parent.stats.transfer_s - time_before
         return delta
 
     def invalidate(self, keys=None):
@@ -276,8 +406,13 @@ class PrefetchingExpertCache(ExpertCache):
     Mazur). The engine calls ``hint(keys)`` with the *predicted* experts of
     the next layer (reusing the current activations against the next layer's
     router); hints are fetched before they are demanded. Synchronous staging
-    keeps the implementation portable; the TPU runtime overlaps via its own
-    transfer streams."""
+    keeps the implementation portable; :class:`AsyncExpertCache` is the
+    overlapped variant (DESIGN.md §12).
+
+    Speculative staging is accounted in ``stats.prefetch_bytes`` /
+    ``stats.prefetch_s`` — it never pollutes the demand counters
+    (``misses``/``bytes_in``/``transfer_s``), so the engine's measured
+    miss rate and transfer time stay demand-only."""
 
     def __init__(self, *a, **kw):
         super().__init__(*a, **kw)
@@ -286,7 +421,219 @@ class PrefetchingExpertCache(ExpertCache):
     def hint(self, keys):
         for k in keys:
             if k not in self._cache:
-                self.get(k)
-                self.stats.misses -= 1      # speculative, not demand
+                self._admit(k, self._fetch(k), speculative=True)
             else:
                 self.prefetch_hits += 1
+
+
+class AsyncExpertCache(ExpertCache):
+    """Overlapped expert staging (DESIGN.md §12): a small transfer worker
+    pool + double-buffered swap staging behind the LRU cache interface.
+
+    * ``prefetch(keys)`` / ``hint(keys)`` — NON-BLOCKING speculative
+      enqueue; at most one in-flight future per key (futures are keyed by
+      the full cache key, i.e. ``(owner, layer, expert)`` through a
+      scoped view).
+    * ``wait(keys)`` — block until every key is device-resident; keys
+      that are neither resident nor in flight are fetched as DEMAND
+      (counted in ``misses``/``bytes_in``/``transfer_s``); keys whose
+      speculative fetch is still in flight only block for the remainder.
+    * ``drain()`` — barrier: every enqueued transfer lands (the engine
+      calls it before replans so stale-plan blobs can't be admitted after
+      an ``invalidate``).
+    * ``close()`` — drain + join the workers; idempotent. A deadlocked
+      pipeline therefore fails a wall-clock CI timeout instead of
+      leaking threads.
+
+    ``staging_buffers`` bounds CONCURRENT host→device copies (the
+    double-buffered swap staging: one buffer transfers while the next is
+    prepared); additional enqueues queue behind the semaphore.
+    Admission and eviction stay LRU-correct while fetches are in flight:
+    all cache-dict mutations happen under one lock, in-flight keys are
+    not yet admitted (hence not evictable), and a speculative entry that
+    was LRU-evicted before its demand is simply re-fetched on demand."""
+
+    is_async = True
+
+    def __init__(self, *a, workers: int = 2, staging_buffers: int = 2,
+                 **kw):
+        super().__init__(*a, **kw)
+        self._lock = threading.RLock()
+        self._inflight: Dict[Hashable, Future] = {}
+        self._staging = threading.BoundedSemaphore(max(int(staging_buffers),
+                                                       1))
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(int(workers), 1),
+            thread_name_prefix="expert-xfer")
+        self._closed = False
+        self.prefetch_hits = 0
+
+    # -- worker side --------------------------------------------------------
+    def _stage(self, key: Hashable, speculative: bool,
+               fetch: Optional[Callable]) -> Tuple[int, float]:
+        try:
+            with self._staging:          # double-buffered swap staging
+                host = (fetch or self._fetch)(key)
+                nb = _nbytes(host)
+                t0 = time.perf_counter()
+                dev = jax.device_put(host, self.device)
+                jax.block_until_ready(dev)
+                dt = time.perf_counter() - t0
+            with self._lock:
+                if speculative:
+                    self.stats.prefetch_s += dt
+                    self.stats.prefetch_bytes += nb
+                else:
+                    self.stats.transfer_s += dt
+                    self.stats.bytes_in += nb
+                if key in self._cache:   # raced with an update(): replace
+                    self._used -= self._cache.pop(key)[1]
+                self._evict_until(nb)
+                self._cache[key] = (dev, nb)
+                self._used += nb
+                self._inflight.pop(key, None)
+            return nb, dt
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(key, None)
+            raise
+
+    def _submit(self, key: Hashable, speculative: bool,
+                fetch: Optional[Callable]) -> Future:
+        """Enqueue one transfer; the caller holds the lock."""
+        if self._closed:
+            raise RuntimeError("AsyncExpertCache is closed")
+        fut = self._pool.submit(self._stage, key, speculative, fetch)
+        self._inflight[key] = fut
+        return fut
+
+    # -- async interface ----------------------------------------------------
+    def prefetch(self, keys, fetch: Optional[Callable] = None) -> int:
+        """Non-blocking speculative enqueue; returns the number of
+        transfers actually enqueued (resident / already-in-flight keys
+        are skipped)."""
+        n = 0
+        with self._lock:
+            for k in keys:
+                if k in self._cache:
+                    # LRU-touch: the prediction says this key is about
+                    # to be demanded — it must not sit at the LRU tail
+                    # where the current layer's admissions would evict
+                    # it right before its wait()
+                    self._cache.move_to_end(k)
+                    self.prefetch_hits += 1
+                    continue
+                if k in self._inflight:
+                    continue
+                self._submit(k, True, fetch)
+                n += 1
+        return n
+
+    def hint(self, keys):
+        """PrefetchingExpertCache-compatible spelling of
+        :meth:`prefetch` — a non-blocking enqueue (DESIGN.md §12)."""
+        self.prefetch(keys)
+
+    def wait(self, keys, fetch: Optional[Callable] = None) -> int:
+        """Block until every key's transfer has LANDED (each key was
+        admitted at least once). Under extreme memory pressure a just-
+        landed entry may already have been LRU-evicted by a concurrent
+        admission — a later access simply re-demands it (``get`` does so
+        transparently); simultaneous residency of an arbitrary key set
+        cannot be promised by a bounded cache (len(keys) may exceed
+        capacity). Returns the number of DEMAND fetches (keys that were
+        neither resident nor already in flight)."""
+        fetched = 0
+        futs: List[Future] = []
+        with self._lock:
+            for k in keys:
+                if k in self._cache:
+                    self._cache.move_to_end(k)
+                    self.stats.hits += 1
+                    continue
+                fut = self._inflight.get(k)
+                if fut is None:
+                    self.stats.misses += 1
+                    fetched += 1
+                    fut = self._submit(k, False, fetch)
+                else:
+                    # demanded while its speculative fetch is in flight:
+                    # block only for the remainder of the transfer
+                    self.stats.hits += 1
+                    self.prefetch_hits += 1
+                futs.append(fut)
+        for fut in futs:
+            fut.result()
+        return fetched
+
+    def drain(self):
+        while True:
+            with self._lock:
+                futs = list(self._inflight.values())
+            if not futs:
+                return
+            for fut in futs:
+                fut.result()
+
+    def close(self):
+        if self._closed:
+            return
+        try:
+            self.drain()
+        finally:
+            self._closed = True
+            self._pool.shutdown(wait=True)
+
+    # -- thread-safe overrides of the sync surface --------------------------
+    def get(self, key: Hashable, fetch: Optional[Callable] = None):
+        with self._lock:
+            if key in self._cache:
+                self._cache.move_to_end(key)
+                self.stats.hits += 1
+                return self._cache[key][0]
+            fut = self._inflight.get(key)
+            if fut is None:
+                if fetch is None and self._fetch is None:
+                    raise RuntimeError(
+                        "shared AsyncExpertCache has no fetch of its own "
+                        "— access it through a scoped() view "
+                        "(DESIGN.md §10)")
+                self.stats.misses += 1
+                fut = self._submit(key, False, fetch)
+            else:
+                self.stats.hits += 1
+                self.prefetch_hits += 1
+        fut.result()
+        while True:
+            with self._lock:
+                entry = self._cache.get(key)
+                if entry is not None:
+                    self._cache.move_to_end(key)
+                    return entry[0]
+                fut = self._inflight.get(key)
+                if fut is None:
+                    # LRU-evicted between the future landing and this
+                    # read (tiny caches): silent re-fetch, no re-count
+                    fut = self._submit(key, False, fetch)
+            fut.result()
+
+    def update(self, key: Hashable, host) -> int:
+        with self._lock:
+            return super().update(key, host)
+
+    def invalidate(self, keys=None):
+        with self._lock:
+            super().invalidate(keys)
+
+    def resize(self, capacity_bytes: int):
+        with self._lock:
+            super().resize(capacity_bytes)
+
+    def resident_keys(self):
+        with self._lock:
+            return super().resident_keys()
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used

@@ -190,6 +190,8 @@ class ParetoFrontier:
         self.hw = hw
         self.batch_size = batch_size
         self.seed = seed
+        self.residency_step = residency_step
+        self.max_enum_points = max_enum_points
         self.ladder = validate_ladder(cfg.mop.precision_ladder)
         layers = cfg.num_layers
         e = cfg.moe.num_experts
@@ -276,6 +278,22 @@ class ParetoFrontier:
                 continue
             out.append(p)
         return out
+
+    def overlap_variant(self, efficiency: float) -> "ParetoFrontier":
+        """Re-enumerate and re-rank THIS frontier's configuration space
+        under the overlap-aware token time (DESIGN.md §12): identical
+        axes/plans, the hardware model's ``overlap_efficiency`` replaced.
+        Transfer-dominated points whose transfers hide under compute gain
+        tokens/s, so membership of the dominant set can flip — points
+        dominated under the additive model may become dominant (tested).
+        ``efficiency=0.0`` returns a frontier bit-identical to the
+        additive ranking."""
+        hw = dataclasses.replace(self.hw,
+                                 overlap_efficiency=float(efficiency))
+        return ParetoFrontier(self.cfg, hw, batch_size=self.batch_size,
+                              seed=self.seed,
+                              residency_step=self.residency_step,
+                              max_enum_points=self.max_enum_points)
 
     # -- queries -----------------------------------------------------------
     def feasible(self, target: QoSTarget) -> List[FrontierPoint]:

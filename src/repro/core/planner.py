@@ -211,6 +211,15 @@ class AdaptivePlanner:
         self.current = new
         return new, delta
 
+    def recalibrate(self, hw: cost_model.HardwareModel) -> None:
+        """Swap the hardware model — e.g. after the serving engine
+        measures its actual overlap efficiency (DESIGN.md §12) — and
+        drop every cached frontier so future ``plan()``/``frontier()``
+        calls rank under the new constants. The active plan is kept:
+        recalibration changes predictions, not placements."""
+        self.hw = hw
+        self._frontiers.clear()
+
     def frontier(self, batch_size: int = 1) -> "ParetoFrontier":
         """The ParetoFrontier for this planner's (cfg, hw, seed) — built
         once per batch size and cached (DESIGN.md §9). Frontier plans are

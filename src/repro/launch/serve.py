@@ -16,6 +16,12 @@ requests stream:
 space (DESIGN.md §11): the frontier then enumerates counts per ladder
 rung and the controller may promote/demote expert rungs at runtime.
 
+``--overlap on`` switches expert staging to the async transfer pipeline
+(DESIGN.md §12): transfers run on AsyncExpertCache workers, decode runs
+the per-layer lookahead pipeline, and throughput charges only the
+EXPOSED transfer time; ``off`` (default) keeps the paper's serial
+staging so the two modes A/B against each other.
+
 The imperative spelling (``--preference throughput|quality --num-q N``)
 is kept as a deprecated compatibility path over ``engine.configure``.
 
@@ -58,7 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
-from repro.core.expert_cache import ExpertCache
+from repro.core.expert_cache import AsyncExpertCache, ExpertCache
 from repro.ft.checkpoint import CheckpointManager
 from repro.models.model import build_model
 from repro.serving.api import (EngineConfig, MultiTenantEngine, QoSTarget,
@@ -107,7 +113,11 @@ def _serve_tenants(args, cfg, model, params0):
     n_tenants = len(spec["tenants"])
     fracs = spec.get("budget_fracs") \
         or [spec.get("budget_frac", 1.1)]
-    shared = ExpertCache(capacity_bytes=max(
+    overlap = args.overlap == "on"
+    # the shared swap space is async when overlap serving is on — every
+    # tenant's scoped view then streams through its workers (§12)
+    cache_cls = AsyncExpertCache if overlap else ExpertCache
+    shared = cache_cls(capacity_bytes=max(
         8 * cfg.expert_param_bytes(16), 1 << 20))
     mt = MultiTenantEngine(
         budget_bytes=fracs[0] * full16 * n_tenants, expert_cache=shared,
@@ -117,7 +127,8 @@ def _serve_tenants(args, cfg, model, params0):
         params = params0 if i == 0 else model.init(jax.random.key(i))
         engine = build_engine(
             cfg, params,
-            EngineConfig(max_slots=2, max_len=16 + args.max_new_tokens),
+            EngineConfig(max_slots=2, max_len=16 + args.max_new_tokens,
+                         overlap=overlap),
             expert_cache=shared.scoped(t["name"]))
         mt.add_tenant(TenantSpec(t["name"], _tenant_target(t, full16),
                                  weight=float(t.get("weight", 1.0))),
@@ -157,6 +168,7 @@ def _serve_tenants(args, cfg, model, params0):
                   f"p50 {lat['p50'] * 1e3:.0f} ms "
                   f"p95 {lat['p95'] * 1e3:.0f} ms")
     print("[serve] " + mt.summary().replace("\n", "\n[serve] "))
+    mt.close()                  # joins the shared async transfer workers
 
 
 def main():
@@ -171,6 +183,11 @@ def main():
                          "vs all-16-bit, e.g. 1.05 = at most +5%%")
     ap.add_argument("--budget-gb", type=float, default=None,
                     help="HBM budget; default = full bf16 size * 0.6")
+    ap.add_argument("--overlap", default="off", choices=("on", "off"),
+                    help="async overlapped expert streaming (DESIGN.md "
+                         "§12): transfers stage on a worker pool and "
+                         "decode runs the per-layer lookahead pipeline; "
+                         "'off' keeps the paper's serial staging for A/B")
     ap.add_argument("--ladder", default=None,
                     help="precision ladder as descending CSV rungs, e.g. "
                          "'16,8,4' (DESIGN.md §11); default = the arch's "
@@ -228,7 +245,11 @@ def main():
         return
 
     engine = build_engine(cfg, params, EngineConfig(
-        max_slots=4, max_len=32 + args.max_new_tokens))
+        max_slots=4, max_len=32 + args.max_new_tokens,
+        overlap=args.overlap == "on"))
+    if args.overlap == "on":
+        print("[serve] async overlapped expert streaming ON "
+              "(DESIGN.md §12)")
     controller = QoSController(engine)
     full = engine.planner.size_ne + \
         engine.planner.num_experts_total * engine.planner.size_e16
@@ -282,6 +303,7 @@ def main():
     for rid in list(engine.done)[:2]:
         r = engine.result(rid)
         print(f"  {r.summary()} tokens={r.tokens[:12]}...")
+    engine.close()              # joins the async transfer workers (§12)
 
 
 if __name__ == "__main__":

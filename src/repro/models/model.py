@@ -18,7 +18,7 @@ from repro.core import mixed_moe
 from repro.core.precision_plan import PrecisionPlan
 from repro.models import layers as L
 from repro.models.encdec import encdec_forward, encoder_forward
-from repro.models.transformer import FORWARDS, _hybrid_layout
+from repro.models.transformer import FORWARDS, _ffn_or_moe, _hybrid_layout
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +148,20 @@ class Model:
     # (params, cache, tokens, positions) -> (logits, cache, route_ids)
     reset_slot: Optional[Callable] = None
     # (cache, slot) -> cache with the slot's position tags invalidated
+    # Per-layer decode hooks (DESIGN.md §12): the engine's async overlap
+    # pipeline drives the stack ONE layer at a time so expert transfers
+    # for layer L+1 can stage while layer L computes. Splitting the
+    # scanned step into embed -> layer^L -> logits is numerically
+    # IDENTICAL to decode_step_routed (same primitive sequence; tested
+    # bit-exact), it only changes dispatch granularity. None for
+    # families without the slot-cache MoE decode path.
+    decode_embed: Optional[Callable] = None
+    # (params, tokens (B,1)) -> x (B,1,d)
+    decode_layer_routed: Optional[Callable] = None
+    # (params, cache, x, positions (B,), layer) ->
+    #   (x', cache with layer's KV row replaced, route_ids (B, top_k))
+    decode_logits: Optional[Callable] = None
+    # (params, x (B,1,d)) -> logits (B,V)
 
 
 def _embed_inputs(params, cfg: ModelConfig, batch):
@@ -291,6 +305,45 @@ def build_model(cfg: ModelConfig, mesh=None, *,
         are dead once every tag is -1)."""
         return dict(cache, pos=cache["pos"].at[:, slot].set(-1))
 
+    # -- per-layer decode (async overlap pipeline, DESIGN.md §12) ----------
+    def decode_embed(params, tokens):
+        """tokens (B,1) -> embedded x (B,1,d); the pipeline's front."""
+        return L.embed(params["embed"]["table"], tokens) \
+            * jnp.asarray(math.sqrt(cfg.d_model),
+                          params["embed"]["table"].dtype)
+
+    def decode_layer_routed(params, cache, x, positions, layer):
+        """One decoder block of the stacked params at index ``layer`` (a
+        TRACED scalar — one compile serves every layer). Returns the
+        block output, the cache with that layer's KV row replaced, and
+        the layer's routed expert ids (B, top_k) in bank order. The body
+        is the same block as ``decoder_forward`` — the scanned and the
+        per-layer spellings produce identical values."""
+        with act_ctx():
+            p = jax.tree_util.tree_map(lambda v: v[layer],
+                                       params["layers"])
+            c = {k: cache[k][layer] for k in ("k", "v", "pos")}
+            pos2 = positions[:, None]
+            token_valid = pos2 >= 0
+            h, new_kv = L.attention(
+                p["attn"], L.rms_norm(x, p["attn_norm"]["scale"]),
+                cfg.attention, positions=pos2, cache=c)
+            x = L.constrain(x + h, "residual")
+            xn = L.rms_norm(x, p["ffn_norm"]["scale"])
+            h, _, ids = _ffn_or_moe(p, xn, cfg, par, False, use_kernel,
+                                    {}, token_valid=token_valid)
+            x = L.constrain(x + h, "residual")
+            merged = {k: cache[k].at[layer].set(new_kv[k])
+                      for k in ("k", "v", "pos")}
+            return x, merged, ids
+
+    def decode_logits(params, x):
+        """Pipeline tail: final norm + unembed of the last block output."""
+        y = L.rms_norm(x, params["final_norm"]["scale"])
+        return L.unembed(params["lm_head"]["table"], y)[:, 0]
+
+    layered_api = slot_api and cfg.moe is not None
+
     return Model(
         cfg=cfg,
         init=functools.partial(init_params, cfg),
@@ -302,6 +355,9 @@ def build_model(cfg: ModelConfig, mesh=None, *,
         decode_step_routed=decode_step_routed if cfg.moe is not None
         else None,
         reset_slot=reset_slot if slot_api else None,
+        decode_embed=decode_embed if layered_api else None,
+        decode_layer_routed=decode_layer_routed if layered_api else None,
+        decode_logits=decode_logits if layered_api else None,
     )
 
 

@@ -63,6 +63,14 @@ class EngineConfig:
     Expert streaming:
       * ``swap_bytes`` — device LRU swap capacity for non-resident
         experts; ``prefetch`` enables the speculative prefetch cache.
+      * ``overlap`` — async overlapped expert streaming (DESIGN.md §12):
+        transfers run on an ``AsyncExpertCache`` worker pool and the
+        engine decodes through the per-layer lookahead pipeline, hiding
+        transfer time under layer compute. ``overlap_efficiency`` seeds
+        the analytic overlap window (fraction of t_compute; ``None`` =
+        0.85 when overlap is on, 0.0 otherwise); the engine refines it
+        from measurement via ``calibrate_overlap()``. Off = the paper's
+        serial staging, bit-identical to the historical path.
     Precision:
       * ``ladder`` — the deployment's precision ladder (descending rung
         tuple, e.g. ``(16, 8, 4)``; DESIGN.md §11). ``None`` keeps the
@@ -79,6 +87,8 @@ class EngineConfig:
     max_queue: Optional[int] = None
     swap_bytes: Optional[int] = None
     prefetch: bool = False
+    overlap: bool = False
+    overlap_efficiency: Optional[float] = None
     ladder: Optional[Tuple[int, ...]] = None
     hw: Optional[HardwareModel] = None
 

@@ -19,6 +19,18 @@ Architecture:
     the MEASURED ``transfer_s``/``miss_rate_measured`` next to the
     retained analytical ``transfer_s_est``/``miss_rate`` so the cost model
     is cross-validated on every run.
+  * ASYNC OVERLAP mode (``EngineConfig(overlap=True)``, DESIGN.md §12):
+    staging moves to an ``AsyncExpertCache`` worker pool and the decode
+    step runs through the model's per-layer hooks as a lookahead
+    pipeline — while layer L computes, layer L+1's predicted experts
+    (the previous iteration's captured routes: decode re-demands most of
+    them for adjacent tokens) stage in the background; each layer's
+    ACTUAL routed demand is then awaited, exposing only what prediction
+    could not hide. ``metrics`` splits the transfer time into
+    ``transfer_exposed_s`` (blocked the critical path) and
+    ``transfer_overlapped_s`` (hidden under compute); throughput charges
+    only the exposed part. The sync path survives as ``overlap=False``
+    for A/B comparison, and ``close()`` joins the transfer workers.
 
 Fidelity model on this CPU container (DESIGN.md §2): model compute is
 REAL (jitted decode with the plan's dual-bank mixed-precision params);
@@ -42,7 +54,9 @@ deprecated shim that builds a ``QoSTarget`` internally.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+import threading
 import time
 import warnings
 from typing import Any, Dict, List, Optional, Tuple
@@ -53,7 +67,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import HardwareModel, expert_access_stats
-from repro.core.expert_cache import ExpertCache, PrefetchingExpertCache
+from repro.core.expert_cache import (AsyncExpertCache, ExpertCache,
+                                     PrefetchingExpertCache)
 from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
 from repro.core.planner import AdaptivePlanner, PlanResult
 from repro.core.precision_plan import DEVICE
@@ -131,8 +146,7 @@ class AdaptiveServingEngine:
         if config.ladder is not None:
             # the deployment declares its precision ladder on the typed
             # surface; it overrides the config default (DESIGN.md §11)
-            import dataclasses as _dc
-            cfg = cfg.replace(mop=_dc.replace(
+            cfg = cfg.replace(mop=dataclasses.replace(
                 cfg.mop, ladder=tuple(config.ladder)))
         self.config = config
         self.cfg = cfg
@@ -141,8 +155,25 @@ class AdaptiveServingEngine:
         self.max_slots = config.max_slots
         self.max_len = config.max_len
         self.use_kernel = config.use_kernel
-        self.hw = config.hw \
-            or HardwareModel(host_link_bw=measure_host_link_bw())
+        if config.hw is not None:
+            # an explicit hardware model wins, but an explicit
+            # overlap_efficiency knob still applies on top (it would
+            # otherwise be silently dropped and the frontier would rank
+            # under the additive model while the pipeline runs)
+            self.hw = config.hw
+            if config.overlap_efficiency is not None:
+                self.hw = dataclasses.replace(
+                    self.hw,
+                    overlap_efficiency=float(config.overlap_efficiency))
+        else:
+            # overlap mode seeds the analytic overlap window (refined at
+            # runtime by calibrate_overlap, DESIGN.md §12); sync keeps
+            # the additive model exactly.
+            eff = config.overlap_efficiency
+            if eff is None:
+                eff = 0.85 if config.overlap else 0.0
+            self.hw = HardwareModel(host_link_bw=measure_host_link_bw(),
+                                    overlap_efficiency=float(eff))
         self.planner = AdaptivePlanner(cfg, hw=self.hw)
         self.model: Model = build_model(cfg, mesh,
                                         use_kernel=self.use_kernel)
@@ -161,25 +192,42 @@ class AdaptiveServingEngine:
         # shared swap space instead (core/expert_cache.py, DESIGN.md §10)
         # — same interface, namespaced keys, jointly shared byte budget.
         self._swap_bytes = config.swap_bytes
+        self._owns_cache = expert_cache is None
         if expert_cache is not None:
             if config.prefetch and not hasattr(expert_cache, "hint"):
                 raise ValueError(
                     "EngineConfig(prefetch=True) needs an expert cache "
                     "with hint() support; the provided shared view has "
                     "none")
+            if config.overlap and not getattr(expert_cache, "is_async",
+                                              False):
+                raise ValueError(
+                    "EngineConfig(overlap=True) needs an async expert "
+                    "cache (AsyncExpertCache, or a scoped view of one — "
+                    "DESIGN.md §12); the provided cache stages "
+                    "synchronously")
             self.expert_cache = expert_cache
             if hasattr(expert_cache, "bind_fetch"):
                 expert_cache.bind_fetch(self._fetch_expert)
         else:
-            cache_cls = PrefetchingExpertCache if config.prefetch \
-                else ExpertCache
+            cache_cls = AsyncExpertCache if config.overlap \
+                else (PrefetchingExpertCache if config.prefetch
+                      else ExpertCache)
             self.expert_cache = cache_cls(
                 self._fetch_expert,
                 capacity_bytes=config.swap_bytes
                 or 4 * max(cfg.expert_param_bytes(16), 1))
         self._prefetch = config.prefetch and hasattr(self.expert_cache,
                                                      "hint")
+        # per-layer lookahead pipeline: overlap mode + the model's
+        # per-layer decode hooks (DESIGN.md §12)
+        self._pipeline = bool(config.overlap
+                              and self.model.decode_layer_routed
+                              is not None)
         self._prev_demanded: List[Tuple[int, int]] = []
+        #: pipelined mode's per-layer prediction: the previous
+        #: iteration's demanded (non-resident) keys, layer-indexed
+        self._prev_layer_keys: Optional[List[List[Tuple[int, int]]]] = None
         self._host_store: Dict[Tuple[int, int], Any] = {}
         self._resident: set = set()
         self._miss_bytes_per_tok = 0.0
@@ -191,9 +239,15 @@ class AdaptiveServingEngine:
         self._active_point: Optional[FrontierPoint] = None
         self._compiled: Dict[Any, Any] = {}
         self._key = jax.random.key(0)
+        # async transfer workers call _fetch_expert concurrently: its
+        # host-store insert is per-key-unique (one in-flight future per
+        # key) but the stage_s accumulation needs the lock
+        self._stage_lock = threading.Lock()
         self.metrics: Dict[str, Any] = {
             "tokens_generated": 0, "decode_s": 0.0, "prefill_s": 0.0,
             "transfer_s": 0.0, "transfer_s_est": 0.0, "stage_s": 0.0,
+            "prefetch_s": 0.0,
+            "transfer_exposed_s": 0.0, "transfer_overlapped_s": 0.0,
             "reconfig_s": 0.0, "reconfigs": 0,
             "drains": 0, "drain_s": 0.0,
             "miss_rate": 0.0, "miss_rate_measured": 0.0,
@@ -311,6 +365,10 @@ class AdaptiveServingEngine:
         flight. Placement-only changes apply immediately (between decode
         iterations); a bank-split change drains the active slots first."""
         t0 = time.perf_counter()
+        # async staging barrier (DESIGN.md §12): every enqueued transfer
+        # must land BEFORE the plan changes, or a stale-plan blob could
+        # be admitted after the invalidate below (no-op for sync caches)
+        self.expert_cache.drain()
         result, delta = self.planner.replan(
             mem_budget_bytes, preference, num_q_experts,
             batch_size=self.max_slots, counts=counts)
@@ -332,6 +390,9 @@ class AdaptiveServingEngine:
                     self.run_iteration(admit=False)
                 drain_s = time.perf_counter() - t_drain
                 self.metrics["drain_s"] += drain_s
+                # the drain iterations enqueued fresh async fetches on
+                # the OLD plan — barrier again before invalidating
+                self.expert_cache.drain()
             # bank split changed -> re-specialize the step functions
             self._serve_params = apply_precision_plan(
                 self.params_train, self.cfg, plan)
@@ -350,6 +411,7 @@ class AdaptiveServingEngine:
                  if k[:2] in newly_resident])
         self._resident = newly_resident
         self._prev_demanded = []     # stale-plan hints must not re-stage
+        self._prev_layer_keys = None
         hit, self._miss_bytes_per_tok = expert_access_stats(self.cfg, plan)
         self.metrics["miss_rate"] = 1.0 - hit
         downtime = time.perf_counter() - t0 - drain_s
@@ -391,9 +453,9 @@ class AdaptiveServingEngine:
         request is queued or in flight)."""
         return ServeResult.from_request(self.scheduler.done[rid])
 
-    def _jit(self, name, fn):
+    def _jit(self, name, fn, donate=()):
         if name not in self._compiled:
-            self._compiled[name] = jax.jit(fn)
+            self._compiled[name] = jax.jit(fn, donate_argnums=donate)
         return self._compiled[name]
 
     # -- expert streaming ----------------------------------------------
@@ -421,8 +483,10 @@ class AdaptiveServingEngine:
                 blob = w
             self._host_store[(li, ei)] = blob
             # host-side staging (extraction + on-the-fly quantization) is
-            # real request-latency but neither decode nor transfer time
-            self.metrics["stage_s"] += time.perf_counter() - t0
+            # real request-latency but neither decode nor transfer time;
+            # locked: async transfer workers run this loader concurrently
+            with self._stage_lock:
+                self.metrics["stage_s"] += time.perf_counter() - t0
         return blob
 
     def _stream_experts(self, route_ids: np.ndarray, rows: List[int]):
@@ -441,6 +505,7 @@ class AdaptiveServingEngine:
         latency dominates; at paper-scale expert sizes (hundreds of MB)
         the bandwidth term is the honest model."""
         st = self.expert_cache.stats
+        blocked0 = st.transfer_s + st.prefetch_s
         if self._prefetch and self._prev_demanded:
             # temporal-locality prefetch BEFORE this iteration's demand:
             # decode re-demands most of the previous iteration's experts
@@ -462,11 +527,93 @@ class AdaptiveServingEngine:
         self.metrics["expert_fetches"] += st.misses - misses0
         self._prev_demanded = [k for k in sorted(demanded)
                                if k not in self._resident]
+        # serial staging blocks the critical path for every transferred
+        # second (speculative hints included) — all of it is EXPOSED
+        self.metrics["transfer_exposed_s"] += \
+            st.transfer_s + st.prefetch_s - blocked0
+        self._finish_stream_metrics()
+
+    def _finish_stream_metrics(self):
+        """Fold the cache's counters into engine metrics. ``transfer_s``
+        is DEMAND transfer only (speculative staging reports separately
+        as ``prefetch_s`` — DESIGN.md §12); ``transfer_overlapped_s`` is
+        the transferred time that did NOT block the critical path."""
+        st = self.expert_cache.stats
         self.metrics["transfer_s"] = st.transfer_s
+        self.metrics["prefetch_s"] = st.prefetch_s
+        self.metrics["transfer_overlapped_s"] = max(
+            st.transfer_s + st.prefetch_s
+            - self.metrics["transfer_exposed_s"], 0.0)
         if self.metrics["expert_accesses"]:
             self.metrics["miss_rate_measured"] = \
                 self.metrics["expert_fetches"] \
                 / self.metrics["expert_accesses"]
+
+    def _decode_pipelined(self, toks, pos, rows):
+        """Per-layer lookahead pipeline (DESIGN.md §12): while layer L
+        computes, layer L+1's PREDICTED experts (the previous iteration's
+        captured routes for that layer) stage on the async cache's
+        workers; each layer's ACTUAL routed demand is then awaited, so
+        only the transfer time prediction could not hide is exposed.
+        Numerically identical to the scanned decode step (tested
+        bit-exact). Returns the next-token logits (B, V).
+
+        Exposed-time semantics: ``transfer_exposed_s`` is BLOCKED
+        WALL-CLOCK, so on a cold host store it also covers the demand
+        fetch's host-side staging (extraction + quantization) that the
+        sync path books under ``stage_s`` — exposed can then exceed the
+        device-transfer counters and ``transfer_overlapped_s`` clamps to
+        0. The host store is warm after first touch per (expert, plan),
+        so at steady state exposed converges to true transfer waits;
+        calibrate_overlap() should run on a warm store (same spirit as
+        the smoke-scale transfer_s vs transfer_s_est caveat above)."""
+        m, params = self.model, self._serve_params
+        cache = self.expert_cache
+        st = cache.stats
+        embed = self._jit("decode_embed", m.decode_embed)
+        # the cache argument is DONATED: each per-layer call rebinds
+        # self.cache, so XLA aliases the .at[layer].set update in place
+        # instead of copying the whole multi-layer KV cache L times per
+        # token (nothing else holds the old buffer)
+        layer_fn = self._jit("decode_layer", m.decode_layer_routed,
+                             donate=(1,))
+        finish = self._jit("decode_logits", m.decode_logits)
+        pos_j = jnp.asarray(pos)
+        n_layers = self.cfg.num_layers
+        predicted = self._prev_layer_keys
+        misses0 = st.misses
+        exposed = 0.0
+        t_loop0 = time.perf_counter()
+        x = embed(params, jnp.asarray(toks))
+        if predicted is not None and n_layers:
+            cache.prefetch(predicted[0])
+        new_layer_keys: List[List[Tuple[int, int]]] = []
+        for li in range(n_layers):
+            x, self.cache, ids = layer_fn(params, self.cache, x, pos_j,
+                                          jnp.int32(li))
+            if predicted is not None and li + 1 < n_layers:
+                # lookahead: stage layer li+1's predicted demand while
+                # layer li's compute is still in flight
+                cache.prefetch(predicted[li + 1])
+            ids_np = np.asarray(ids)       # blocks on layer li's compute
+            order = self._order[li]
+            demanded = sorted({(li, int(order[int(s)]))
+                               for b in rows for s in ids_np[b]})
+            self.metrics["expert_accesses"] += len(demanded)
+            need = [k for k in demanded if k not in self._resident]
+            t0 = time.perf_counter()
+            cache.wait(need)
+            exposed += time.perf_counter() - t0
+            new_layer_keys.append(need)
+        logits = finish(params, x)
+        jax.block_until_ready(logits)
+        t_loop = time.perf_counter() - t_loop0
+        self.metrics["decode_s"] += max(t_loop - exposed, 0.0)
+        self.metrics["transfer_exposed_s"] += exposed
+        self.metrics["expert_fetches"] += st.misses - misses0
+        self._prev_layer_keys = new_layer_keys
+        self._finish_stream_metrics()
+        return logits
 
     # -- iteration-level serving ----------------------------------------
     @staticmethod
@@ -535,13 +682,20 @@ class AdaptiveServingEngine:
         for i, st in active:
             toks[i, 0] = st.last_token
             pos[i] = st.position
-        decode = self._jit("decode", self.model.decode_step_routed)
-        t0 = time.perf_counter()
-        logits, self.cache, route_ids = decode(
-            self._serve_params, self.cache, jnp.asarray(toks),
-            jnp.asarray(pos))
-        jax.block_until_ready(logits)
-        self.metrics["decode_s"] += time.perf_counter() - t0
+        route_ids = None
+        if self._pipeline:
+            # overlap mode: decode through the per-layer lookahead
+            # pipeline; expert streaming happens inside (DESIGN.md §12)
+            logits = self._decode_pipelined(toks, pos,
+                                            [i for i, _ in active])
+        else:
+            decode = self._jit("decode", self.model.decode_step_routed)
+            t0 = time.perf_counter()
+            logits, self.cache, route_ids = decode(
+                self._serve_params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos))
+            jax.block_until_ready(logits)
+            self.metrics["decode_s"] += time.perf_counter() - t0
         self.metrics["iterations"] += 1
         self._key, sub = jax.random.split(self._key)
         if any(st.req.sampling is not None for _, st in active):
@@ -559,7 +713,9 @@ class AdaptiveServingEngine:
             new_toks = np.asarray(sample(logits, key=sub,
                                          temperature=temperature,
                                          vocab_size=self.cfg.vocab_size))
-        self._stream_experts(np.asarray(route_ids), [i for i, _ in active])
+        if route_ids is not None:     # sync path (pipelined streams inline)
+            self._stream_experts(np.asarray(route_ids),
+                                 [i for i, _ in active])
         # analytical cross-check: expected UNIQUE streamed bytes of this
         # iteration under uniform routing. n_active rows draw
         # d = top_k * n_active experts per layer; each off-device expert
@@ -607,10 +763,58 @@ class AdaptiveServingEngine:
     # ------------------------------------------------------------------
     def throughput_tokens_per_s(self, include_transfer: bool = True
                                 ) -> float:
+        """Measured tokens/s. ``include_transfer`` charges the EXPOSED
+        transfer time only (DESIGN.md §12) — for serial staging that IS
+        the total blocked transfer time; in overlap mode the hidden
+        portion already overlaps decode wall-clock and must not be
+        double-counted."""
         t = self.metrics["decode_s"]
         if include_transfer:
-            t += self.metrics["transfer_s"]
+            t += self.metrics["transfer_exposed_s"]
         return self.metrics["tokens_generated"] / max(t, 1e-9)
+
+    def measured_overlap_efficiency(self) -> Optional[float]:
+        """Measured overlap window as a fraction of decode compute —
+        the runtime counterpart of ``HardwareModel.overlap_efficiency``
+        (a LOWER bound when every transfer hid completely). None until
+        any expert time was transferred, and None through a SHARED
+        scoped cache view: its speculative traffic is accounted
+        parent-globally, so the per-tenant hidden/total ratio is not
+        measurable — folding the apparent ~0 into the hardware model
+        would wrongly revert the frontier to the additive ranking."""
+        if not self._owns_cache \
+                and getattr(self.expert_cache, "parent", None) is not None:
+            return None
+        total = self.metrics["transfer_s"] + self.metrics["prefetch_s"]
+        if total <= 0 or self.metrics["decode_s"] <= 0:
+            return None
+        eff = self.metrics["transfer_overlapped_s"] \
+            / self.metrics["decode_s"]
+        return max(0.0, min(1.0, eff))
+
+    def calibrate_overlap(self) -> Optional[float]:
+        """Fold the MEASURED overlap efficiency back into the analytic
+        hardware model and invalidate the cached frontier (DESIGN.md
+        §12), so subsequent plans/frontier walks rank configurations by
+        the transfer time this deployment actually exposes. Returns the
+        calibrated efficiency, or None when nothing was measured yet."""
+        eff = self.measured_overlap_efficiency()
+        if eff is None:
+            return None
+        self.hw = dataclasses.replace(self.hw, overlap_efficiency=eff)
+        self.planner.recalibrate(self.hw)
+        self._frontier = None
+        return eff
+
+    def close(self):
+        """Release the transfer pipeline: join the async cache's worker
+        threads (no-op for serial staging). A SHARED scoped view is only
+        drained — its owner (e.g. the MultiTenantEngine) closes the
+        space. Idempotent; the engine must not decode afterwards."""
+        if self._owns_cache:
+            self.expert_cache.close()
+        else:
+            self.expert_cache.drain()
 
     def latency_percentiles(self, qs=(50, 95),
                             last_n: Optional[int] = None
@@ -622,6 +826,8 @@ class AdaptiveServingEngine:
         points); plan/reconfig counters are preserved."""
         for k in ("tokens_generated", "decode_s", "prefill_s",
                   "transfer_s", "transfer_s_est", "stage_s",
+                  "prefetch_s", "transfer_exposed_s",
+                  "transfer_overlapped_s",
                   "expert_accesses", "expert_fetches", "iterations"):
             self.metrics[k] = 0 if isinstance(self.metrics[k], int) else 0.0
         self.expert_cache.stats.reset()
@@ -629,11 +835,28 @@ class AdaptiveServingEngine:
     def summary(self) -> str:
         p = self._plan_result
         lat = self.latency_percentiles()
-        return (f"plan[{p.preference} E4={p.plan.num_q_experts}"
-                f"/{p.plan.quant.size} res={p.plan.resident_fraction():.0%}]"
-                f" gen={self.metrics['tokens_generated']}tok"
-                f" decode={self.metrics['decode_s']:.2f}s"
-                f" +transfer={self.metrics['transfer_s']:.3f}s"
-                f" (est {self.metrics['transfer_s_est']:.3f}s)"
+        m = self.metrics
+        overlap = ""
+        if self._pipeline or m["prefetch_s"] or m["transfer_overlapped_s"]:
+            overlap = (f" xfer[prefetch={m['prefetch_s']:.3f}s"
+                       f" exposed={m['transfer_exposed_s']:.3f}s"
+                       f" hidden={m['transfer_overlapped_s']:.3f}s]")
+        rungs = [b for b in p.plan.ladder if b < 16]
+        if len(rungs) <= 1:
+            knobs = (f"E{rungs[0] if rungs else 4}="
+                     f"{p.plan.num_q_experts}/{p.plan.quant.size}")
+        else:
+            # multi-rung ladder: num_q_experts conflates the rungs —
+            # spell counts per rung like FrontierPoint.summary()
+            knobs = "E[" + ",".join(
+                f"{b}b={int((p.plan.bits == b).sum())}"
+                for b in rungs) + f"]/{p.plan.bits.size}"
+        return (f"plan[{p.preference} {knobs}"
+                f" res={p.plan.resident_fraction():.0%}]"
+                f" gen={m['tokens_generated']}tok"
+                f" decode={m['decode_s']:.2f}s"
+                f" +transfer={m['transfer_s']:.3f}s"
+                f" (est {m['transfer_s_est']:.3f}s)"
+                + overlap +
                 f" -> {self.throughput_tokens_per_s():.2f} tok/s"
                 f" p50={lat['p50']*1e3:.0f}ms p95={lat['p95']*1e3:.0f}ms")

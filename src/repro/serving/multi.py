@@ -21,7 +21,10 @@ elastic per-tenant quality/throughput framing (Xia et al., 2025):
   "marginal quality-per-byte" water-filling. Analytic tokens/s are
   DERATED by each tenant's observed model error (measured/analytic from
   its :class:`~repro.serving.qos.QoSController`), so re-arbitration
-  responds to the throughput tenants actually get.
+  responds to the throughput tenants actually get. The measured side
+  charges only EXPOSED transfer time (``transfer_exposed_s``, DESIGN.md
+  §12) — under async overlapped streaming a tenant's hidden transfers
+  must not deflate its derate and siphon bytes it does not need.
 * Reconfiguration is PARTIAL: the old and new precision-and-placement
   plans are diffed per tenant
   (:func:`~repro.core.precision_plan.reconfig_delta`) and only the
@@ -415,6 +418,16 @@ class MultiTenantEngine:
     def has_work(self) -> bool:
         return any(getattr(t.engine, "has_work", lambda: False)()
                    for t in self._tenants.values())
+
+    def close(self):
+        """Release every tenant's transfer pipeline, then close the
+        SHARED swap space (joins its async workers when the deployment
+        streams through an ``AsyncExpertCache`` — DESIGN.md §12)."""
+        for t in self._tenants.values():
+            close = getattr(t.engine, "close", None)
+            if close is not None:
+                close()
+        self.cache.close()
 
     def summary(self) -> str:
         m = self.metrics

@@ -127,7 +127,7 @@ class QoSController:
         it = int(m["iterations"])
         if it - self._win_iter < self.config.window_iterations:
             return False
-        dt = (m["decode_s"] + m["transfer_s"]) - self._win_time
+        dt = self._elapsed(m) - self._win_time
         dtok = m["tokens_generated"] - self._win_tokens
         self._snapshot(it)
         if dtok <= 0 or dt <= 0:
@@ -208,11 +208,21 @@ class QoSController:
         self._applied_iter = it
         self._snapshot(it)
 
+    @staticmethod
+    def _elapsed(m) -> float:
+        """Serving wall-time the window measures throughput over: decode
+        plus the EXPOSED transfer time (DESIGN.md §12) — overlapped
+        transfers already hide under decode and must not be
+        double-counted. Engines without the async pipeline report
+        ``transfer_exposed_s == transfer_s`` (or lack the key entirely:
+        engine-shaped stubs fall back to total transfer time)."""
+        return m["decode_s"] + m.get("transfer_exposed_s", m["transfer_s"])
+
     def _snapshot(self, it: int):
         m = self.engine.metrics
         self._win_iter = it
         self._win_tokens = m["tokens_generated"]
-        self._win_time = m["decode_s"] + m["transfer_s"]
+        self._win_time = self._elapsed(m)
 
     def summary(self) -> str:
         t = self.target.describe() if self.target else "no target"

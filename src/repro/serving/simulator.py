@@ -57,6 +57,7 @@ class VirtualClock:
 
 ThroughputFn = Callable[[FrontierPoint, int], float]
 LatencyFn = Callable[[FrontierPoint, int], float]
+TransferFn = Callable[[FrontierPoint, int], float]
 
 
 class SimulatedEngine:
@@ -65,7 +66,8 @@ class SimulatedEngine:
     Interface (the subset of ``AdaptiveServingEngine`` the QoSController
     and the MultiTenantEngine consume):
 
-    * ``metrics`` — iterations / tokens_generated / decode_s / transfer_s;
+    * ``metrics`` — iterations / tokens_generated / decode_s /
+      transfer_s / transfer_exposed_s;
     * ``apply_frontier_point(point)`` — records the replan (count +
       full history in ``applied``) and switches the simulated speed;
     * ``latency_percentiles(qs, last_n=None)`` — over scripted latencies.
@@ -76,15 +78,25 @@ class SimulatedEngine:
       factor (constant miscalibration);
     * ``throughput_fn(point, iteration)`` — overrides ``model_error``
       with an arbitrary schedule (time-varying co-tenant interference);
+      with a scripted ``transfer_fn`` this is the COMPUTE-only rate;
+    * ``transfer_fn(point, iteration)`` — scripted expert-transfer
+      seconds per iteration (DESIGN.md §12). With ``overlap=False`` all
+      of it lands on the critical path (serial staging); with
+      ``overlap=True`` only ``max(0, transfer - overlap_efficiency *
+      decode_dt)`` is exposed — the async pipeline's A/B switch, exactly
+      reproducible;
     * ``latency_fn(point, iteration)`` — one completed-request latency
       recorded per iteration (drives p95 targets);
     * ``clock`` — a shared :class:`VirtualClock`; each iteration advances
-      it by the simulated decode time ``batch / measured_tps``.
+      it by the simulated decode time plus the exposed transfer time.
     """
 
     def __init__(self, *, model_error: float = 1.0,
                  throughput_fn: Optional[ThroughputFn] = None,
                  latency_fn: Optional[LatencyFn] = None,
+                 transfer_fn: Optional[TransferFn] = None,
+                 overlap: bool = False,
+                 overlap_efficiency: float = 1.0,
                  clock: Optional[VirtualClock] = None,
                  batch: int = 4):
         self.model_error = model_error
@@ -92,6 +104,9 @@ class SimulatedEngine:
         self.batch = batch
         self._throughput_fn = throughput_fn
         self._latency_fn = latency_fn
+        self._transfer_fn = transfer_fn
+        self.overlap = overlap
+        self.overlap_efficiency = overlap_efficiency
         self.point: Optional[FrontierPoint] = None
         self.replans = 0
         #: full replan history, oldest first (assertable trace)
@@ -99,6 +114,7 @@ class SimulatedEngine:
         self.metrics: Dict[str, float] = {
             "iterations": 0, "tokens_generated": 0,
             "decode_s": 0.0, "transfer_s": 0.0,
+            "transfer_exposed_s": 0.0,
         }
         self._latencies: List[float] = []
 
@@ -109,13 +125,24 @@ class SimulatedEngine:
         self.applied.append(point)
 
     def measured_tps(self) -> float:
-        """The tokens/s the NEXT iteration will run at."""
+        """The tokens/s the NEXT iteration will run at (the COMPUTE-only
+        rate when a ``transfer_fn`` is scripted — exposed transfer time
+        is added on top per iteration)."""
         if self.point is None:
             raise RuntimeError("no frontier point applied")
         if self._throughput_fn is not None:
             return float(self._throughput_fn(self.point,
                                              int(self.metrics["iterations"])))
-        return self.point.qos.tokens_per_s * self.model_error
+        tps = self.point.qos.tokens_per_s * self.model_error
+        if self._transfer_fn is not None:
+            # the analytic rate already charges exposed transfer; with a
+            # scripted transfer_fn that time is added separately per
+            # iteration, so strip it back to the compute-only rate (no
+            # double count)
+            q = self.point.qos
+            if q.t_compute_ms > 0:
+                tps *= (q.t_compute_ms + q.t_exposed_ms) / q.t_compute_ms
+        return tps
 
     def run_iteration(self, batch: Optional[int] = None) -> None:
         """One decode iteration at the active point's simulated speed.
@@ -126,10 +153,18 @@ class SimulatedEngine:
         it = int(self.metrics["iterations"])
         tps = self.measured_tps()
         dt = b / max(tps, 1e-12)
+        transfer = float(self._transfer_fn(self.point, it)) \
+            if self._transfer_fn is not None else 0.0
+        # DESIGN.md §12: serial staging exposes every transferred second;
+        # the async pipeline hides up to overlap_efficiency * decode_dt
+        exposed = max(0.0, transfer - self.overlap_efficiency * dt) \
+            if self.overlap else transfer
         self.metrics["iterations"] += 1
         self.metrics["tokens_generated"] += b
         self.metrics["decode_s"] += dt
-        self.clock.advance(dt)
+        self.metrics["transfer_s"] += transfer
+        self.metrics["transfer_exposed_s"] += exposed
+        self.clock.advance(dt + exposed)
         if self._latency_fn is not None:
             self._latencies.append(float(self._latency_fn(self.point, it)))
 

@@ -1,0 +1,214 @@
+"""AsyncExpertCache — the overlapped staging engine (DESIGN.md §12):
+non-blocking prefetch, demand wait, LRU correctness with fetches in
+flight, drain/close lifecycle and worker-thread hygiene."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.expert_cache import AsyncExpertCache, ExpertCache
+
+
+def make_async(capacity_experts=4, expert_kb=1, fetch_delay_s=0.0, **kw):
+    nbytes = expert_kb * 1024
+    fetched = []
+
+    def fetch(key):
+        if fetch_delay_s:
+            time.sleep(fetch_delay_s)
+        fetched.append(key)
+        return np.zeros(nbytes, np.uint8) + (key[1] % 250)
+
+    cache = AsyncExpertCache(fetch,
+                             capacity_bytes=capacity_experts * nbytes,
+                             **kw)
+    return cache, fetched, nbytes
+
+
+def xfer_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("expert-xfer")]
+
+
+class TestAsyncStaging:
+    def test_prefetch_is_non_blocking(self):
+        c, fetched, _ = make_async(fetch_delay_s=0.05)
+        t0 = time.perf_counter()
+        n = c.prefetch([(0, 0), (0, 1)])
+        enqueue_s = time.perf_counter() - t0
+        assert n == 2
+        assert enqueue_s < 0.04          # returned before the fetches ran
+        c.drain()
+        assert set(fetched) == {(0, 0), (0, 1)}
+        assert set(c.resident_keys()) == {(0, 0), (0, 1)}
+        c.close()
+
+    def test_speculative_traffic_never_pollutes_demand_stats(self):
+        c, _, nb = make_async()
+        c.prefetch([(0, 0), (0, 1)])
+        c.drain()
+        assert c.stats.prefetch_bytes == 2 * nb
+        assert c.stats.bytes_in == 0
+        assert c.stats.misses == 0
+        assert c.stats.transfer_s == 0.0
+        assert c.stats.prefetch_s > 0.0
+        # demanding the prefetched keys is a hit, not a transfer
+        assert c.wait([(0, 0), (0, 1)]) == 0
+        assert c.stats.hits == 2 and c.stats.bytes_in == 0
+        c.close()
+
+    def test_wait_demand_fetches_and_accounts(self):
+        c, _, nb = make_async()
+        fetched = c.wait([(1, 0), (1, 1), (1, 2)])
+        assert fetched == 3
+        assert c.stats.misses == 3
+        assert c.stats.bytes_in == 3 * nb
+        assert c.stats.transfer_s > 0.0
+        assert set(c.resident_keys()) == {(1, 0), (1, 1), (1, 2)}
+        c.close()
+
+    def test_demand_on_inflight_speculative_blocks_remainder_only(self):
+        c, _, _ = make_async(fetch_delay_s=0.05)
+        c.prefetch([(2, 0)])
+        # the speculative fetch is (very likely) still in flight: the
+        # demand attaches to its future instead of re-transferring
+        fetched = c.wait([(2, 0)])
+        assert fetched == 0
+        assert c.stats.misses == 0
+        assert c.stats.bytes_in == 0            # traffic stayed speculative
+        assert c.stats.prefetch_bytes > 0
+        assert (2, 0) in c.resident_keys()
+        c.close()
+
+    def test_get_demand_and_hit_paths(self):
+        c, _, _ = make_async()
+        v = c.get((3, 7))
+        assert int(np.asarray(v)[0]) == 7
+        assert c.stats.misses == 1
+        c.get((3, 7))
+        assert c.stats.hits == 1
+        c.close()
+
+    def test_prefetch_dedupes_inflight_and_resident(self):
+        c, fetched, _ = make_async(fetch_delay_s=0.02)
+        assert c.prefetch([(0, 0)]) == 1
+        assert c.prefetch([(0, 0)]) == 0        # already in flight
+        c.drain()
+        assert c.prefetch([(0, 0)]) == 0        # already resident
+        assert c.prefetch_hits == 1
+        assert fetched.count((0, 0)) == 1
+        c.close()
+
+
+class TestAsyncLRU:
+    def test_capacity_respected_with_inflight_fetches(self):
+        c, _, nb = make_async(capacity_experts=2, fetch_delay_s=0.005)
+        c.prefetch([(0, i) for i in range(6)])
+        c.drain()
+        assert len(c.resident_keys()) <= 2
+        assert c.used_bytes <= c.capacity
+        assert c.stats.evictions >= 4
+        c.close()
+
+    def test_prefetch_hit_touches_lru_recency(self):
+        """A predicted key about to be demanded must move to MRU on the
+        prefetch hit — otherwise the current layer's admissions evict it
+        right before its wait() and the prediction buys nothing."""
+        c, _, _ = make_async(capacity_experts=2)
+        c.wait([(0, 0), (0, 1)])                # LRU order: 0 then 1
+        c.prefetch([(0, 0)])                    # predicted next: touch
+        c.wait([(0, 2)])                        # evicts LRU -> now (0, 1)
+        assert (0, 0) in c.resident_keys()
+        assert (0, 1) not in c.resident_keys()
+        c.close()
+
+    def test_evicted_prefetch_is_refetched_on_demand(self):
+        c, _, _ = make_async(capacity_experts=2)
+        c.prefetch([(0, 0)])
+        c.drain()
+        c.wait([(0, 1), (0, 2)])                # LRU-evicts (0, 0)
+        assert (0, 0) not in c.resident_keys()
+        assert c.wait([(0, 0)]) == 1            # honest demand re-fetch
+        assert (0, 0) in c.resident_keys()
+        c.close()
+
+    def test_resize_shrink_evicts_down_immediately(self):
+        """DESIGN.md §12 / satellite: shrinking below used_bytes must not
+        leave the cache over budget until the next admission."""
+        c, _, nb = make_async(capacity_experts=4)
+        c.wait([(0, i) for i in range(4)])
+        assert c.used_bytes == 4 * nb
+        c.resize(2 * nb)
+        assert c.used_bytes <= c.capacity == 2 * nb
+        assert len(c.resident_keys()) <= 2
+        assert c.stats.evictions >= 2
+        c.close()
+
+
+class TestLifecycle:
+    def test_close_joins_workers_and_is_idempotent(self):
+        c, _, _ = make_async(fetch_delay_s=0.01)
+        c.prefetch([(0, i) for i in range(4)])
+        c.close()
+        assert not any(t.is_alive() for t in xfer_threads())
+        c.close()                               # idempotent
+        with pytest.raises(RuntimeError, match="closed"):
+            c.wait([(9, 9)])
+
+    def test_drain_is_a_barrier(self):
+        c, fetched, _ = make_async(capacity_experts=8, fetch_delay_s=0.01)
+        c.prefetch([(0, i) for i in range(5)])
+        c.drain()
+        assert len(fetched) == 5
+        c.close()
+
+
+class TestScopedAsync:
+    def make_shared(self, capacity_experts=4):
+        nbytes = 1024
+        parent = AsyncExpertCache(capacity_bytes=capacity_experts * nbytes)
+        a = parent.scoped("A", lambda k: np.full(nbytes, 1, np.uint8))
+        b = parent.scoped("B", lambda k: np.full(nbytes, 2, np.uint8))
+        return parent, a, b, nbytes
+
+    def test_views_report_async_and_namespace_keys(self):
+        parent, a, b, nb = self.make_shared()
+        assert a.is_async and b.is_async
+        a.prefetch([(0, 0)])
+        parent.drain()
+        assert a.resident_keys() == [(0, 0)]
+        assert b.resident_keys() == []          # other namespace untouched
+        assert parent.stats.prefetch_bytes == nb
+        parent.close()
+
+    def test_wait_demand_accounting_per_owner(self):
+        parent, a, b, nb = self.make_shared()
+        assert a.wait([(0, 0), (0, 1)]) == 2
+        assert a.stats.misses == 2 and a.stats.bytes_in == 2 * nb
+        assert b.stats.misses == 0
+        assert b.wait([(0, 0)]) == 1            # same key, own namespace
+        assert b.stats.misses == 1
+        assert int(np.asarray(b.get((0, 0)))[0]) == 2
+        parent.close()
+
+    def test_scoped_get_threadsafe_demand(self):
+        parent, a, _, nb = self.make_shared()
+        v = a.get((4, 4))
+        assert int(np.asarray(v)[0]) == 1
+        assert a.stats.misses == 1 and a.stats.bytes_in == nb
+        a.get((4, 4))
+        assert a.stats.hits == 1
+        parent.close()
+
+    def test_sync_parent_rejects_async_ops(self):
+        parent = ExpertCache(capacity_bytes=4096)
+        view = parent.scoped("solo", lambda k: np.zeros(16, np.uint8))
+        assert not view.is_async
+        with pytest.raises(RuntimeError, match="synchronous"):
+            view.wait([(0, 0)])
+        # but hint() still works: inline speculative admit
+        view.hint([(0, 0)])
+        assert view.resident_keys() == [(0, 0)]
+        assert parent.stats.prefetch_bytes == 16
+        assert parent.stats.bytes_in == 0

@@ -49,6 +49,20 @@ class TestLRU:
         c.resize(2 * 1024)
         assert len(c.resident_keys()) <= 2
 
+    def test_resize_shrink_below_used_evicts_immediately(self):
+        """A shrink below used_bytes must evict down IN the resize call
+        (LRU order) — the over-budget state must not persist until the
+        next admission."""
+        c, _ = make_cache(capacity_experts=4)
+        for i in range(4):
+            c.get(("l", i))
+        assert c.used_bytes == 4 * 1024
+        c.get(("l", 0))                        # 0 now MRU
+        c.resize(1024)
+        assert c.used_bytes <= c.capacity == 1024
+        assert c.resident_keys() == [("l", 0)]  # LRU three evicted
+        assert c.stats.evictions == 3
+
     def test_pin_and_invalidate(self):
         c, _ = make_cache(capacity_experts=4)
         c.pin([("l", i) for i in range(3)])
@@ -160,6 +174,28 @@ class TestPrefetch:
         c.get(("l1", 1))
         assert c.stats.misses == before
         assert c.stats.hits >= 2
+
+    def test_hint_traffic_split_from_demand(self):
+        """Speculative staging reports as prefetch_bytes/prefetch_s and
+        must NOT pollute the demand counters — miss_rate and transfer_s
+        stay demand-only (DESIGN.md §12 satellite)."""
+        c, _ = make_cache(capacity_experts=4, expert_kb=2,
+                          cls=PrefetchingExpertCache)
+        c.hint([("l1", 0), ("l1", 1)])
+        assert c.stats.prefetch_bytes == 2 * 2048
+        assert c.stats.prefetch_s >= 0.0
+        assert c.stats.bytes_in == 0
+        assert c.stats.transfer_s == 0.0
+        assert c.stats.misses == 0 and c.stats.hits == 0
+        # a real demand miss lands in the demand bucket only
+        c.get(("l1", 2))
+        assert c.stats.bytes_in == 2048
+        assert c.stats.misses == 1
+        assert c.stats.prefetch_bytes == 2 * 2048   # unchanged
+        # hinting a resident key counts a prefetch hit, no traffic
+        c.hint([("l1", 0)])
+        assert c.prefetch_hits == 1
+        assert c.stats.prefetch_bytes == 2 * 2048
 
 
 def make_shared(capacity_experts=4, expert_kb=1):

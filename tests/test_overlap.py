@@ -1,0 +1,238 @@
+"""Async overlapped expert streaming (DESIGN.md §12), end to end over
+the analytic stack: the overlap-aware token time, frontier re-ranking
+(a point dominated under the additive model becomes dominant), the
+deterministic simulator's sync/async A/B, and the control loops charging
+EXPOSED — not total — transfer time."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import HardwareModel, estimate_qos
+from repro.core.pareto import ParetoFrontier, QoSTarget
+from repro.core.planner import AdaptivePlanner
+from repro.serving.qos import QoSController, QoSControllerConfig
+from repro.serving.simulator import SimulatedEngine, run_scripted
+
+MIXTRAL = get_config("mixtral-8x7b")
+
+#: A100-class constants on a fast (NVLink-C2C-ish) host link with a slow
+#: bnb-style 4-bit matmul: the regime where the additive model produces
+#: genuinely DOMINATED configurations (fast link keeps transfer-heavy
+#: points competitive; the q4 compute penalty lets cheaper-byte points
+#: outrun more-quantized ones), so overlap can re-rank membership.
+OVERLAP_HW = HardwareModel(
+    peak_flops=312e12, hbm_bw=2.0e12, host_link_bw=100e9,
+    hbm_bytes=80e9, mbu=0.17,
+    q4_speedup_decode=0.3, q8_speedup_decode=0.9)
+
+
+def _key(p):
+    return (p.num_q_experts, p.resident_experts)
+
+
+@pytest.fixture(scope="module")
+def additive():
+    return ParetoFrontier(MIXTRAL, OVERLAP_HW)
+
+
+@pytest.fixture(scope="module")
+def overlapped(additive):
+    return additive.overlap_variant(1.0)
+
+
+class TestOverlapCostModel:
+    def test_zero_efficiency_is_bitwise_additive(self):
+        """overlap_efficiency=0 must reproduce the serial additive token
+        time BIT-FOR-BIT (the frontier golden fixture depends on it)."""
+        plan = AdaptivePlanner(MIXTRAL).plan(40e9, "throughput").plan
+        base = estimate_qos(MIXTRAL, plan, HardwareModel())
+        explicit = estimate_qos(MIXTRAL, plan,
+                                HardwareModel(overlap_efficiency=0.0))
+        assert base.tokens_per_s == explicit.tokens_per_s
+        assert base.t_exposed_ms == base.t_transfer_ms
+        # and the additive identity itself holds
+        t_token = (base.t_compute_ms + base.t_transfer_ms) / 1e3
+        assert base.tokens_per_s == pytest.approx(1.0 / t_token, rel=1e-12)
+
+    def test_full_overlap_hides_transfer_up_to_compute(self):
+        planner = AdaptivePlanner(MIXTRAL, hw=OVERLAP_HW)
+        plan = planner.plan(10e9, "throughput").plan   # offloading region
+        add = estimate_qos(MIXTRAL, plan, OVERLAP_HW)
+        ov = estimate_qos(
+            MIXTRAL, plan,
+            dataclasses.replace(OVERLAP_HW, overlap_efficiency=1.0))
+        assert add.t_transfer_ms > 0          # actually transfer-bound
+        assert ov.t_exposed_ms == pytest.approx(
+            max(0.0, ov.t_transfer_ms - ov.t_compute_ms))
+        assert ov.tokens_per_s > add.tokens_per_s
+        # quality/footprint axes are untouched by overlap
+        assert ov.device_bytes == add.device_bytes
+        assert ov.quality_proxy == add.quality_proxy
+
+    def test_planner_recalibrate_clears_frontiers(self):
+        planner = AdaptivePlanner(MIXTRAL, hw=OVERLAP_HW)
+        f0 = planner.frontier()
+        planner.recalibrate(
+            dataclasses.replace(OVERLAP_HW, overlap_efficiency=0.9))
+        f1 = planner.frontier()
+        assert f1 is not f0
+        assert f1.hw.overlap_efficiency == 0.9
+
+
+class TestOverlapFrontier:
+    def test_dominated_point_becomes_dominant(self, additive, overlapped):
+        """The acceptance criterion: a configuration DOMINATED under the
+        additive token time (its exposed transfer made it strictly worse
+        than some cheaper/faster point) enters the dominant set once
+        transfers hide under compute."""
+        dominant_add = {_key(p) for p in additive.points}
+        dominated_add = [p for p in additive.all_points
+                        if _key(p) not in dominant_add]
+        assert dominated_add, "hw regime must produce dominated points"
+        dominant_ov = {_key(p) for p in overlapped.points}
+        flipped = [p for p in dominated_add if _key(p) in dominant_ov]
+        assert flipped, ("no additive-dominated point became dominant "
+                        "under the overlap-aware model")
+        # the flip is explained by transfer hiding: the flipped point is
+        # transfer-bound, and its overlap estimate strictly improves
+        p = flipped[0]
+        assert p.qos.t_transfer_ms > 0
+        ov_p = next(q for q in overlapped.all_points if _key(q) == _key(p))
+        assert ov_p.qos.tokens_per_s > p.qos.tokens_per_s
+
+    def test_overlap_variant_zero_is_identity_ranking(self, additive):
+        same = additive.overlap_variant(0.0)
+        assert [_key(p) for p in same.points] == \
+            [_key(p) for p in additive.points]
+        assert [p.qos.tokens_per_s for p in same.points] == \
+            [p.qos.tokens_per_s for p in additive.points]
+
+    def test_select_prefers_newly_viable_point_under_tight_budget(
+            self, additive, overlapped):
+        """Overlap lets a smaller-footprint point meet a tokens/s floor
+        that the additive model needed more resident bytes for."""
+        floor = min(p.qos.tokens_per_s for p in additive.points
+                    if p.qos.t_transfer_ms > 0) * 1.5
+        target = QoSTarget(min_tokens_per_s=floor)
+        add_pick = additive.select(target)
+        ov_pick = overlapped.select(target)
+        assert ov_pick.qos.tokens_per_s >= floor
+        assert ov_pick.qos.device_bytes <= add_pick.qos.device_bytes
+
+
+def transfer_bound_point(frontier):
+    """A frontier point whose transfer exceeds its compute (the paper's
+    offloading region)."""
+    return next(p for p in frontier.points
+                if p.qos.t_transfer_ms > p.qos.t_compute_ms)
+
+
+def make_ab_engines(point, iterations=32):
+    """Identical scripted compute+transfer timings, overlap off vs on."""
+    out = {}
+    for mode in ("sync", "async"):
+        eng = SimulatedEngine(
+            batch=1,
+            throughput_fn=lambda p, i: 1e3 / p.qos.t_compute_ms,
+            transfer_fn=lambda p, i: p.qos.t_transfer_ms / 1e3,
+            overlap=(mode == "async"), overlap_efficiency=1.0)
+        eng.apply_frontier_point(point)
+        for _ in range(iterations):
+            eng.run_iteration()
+        out[mode] = eng
+    return out["sync"], out["async"]
+
+
+class TestSimulatedOverlapAB:
+    def test_async_strictly_faster_on_transfer_bound_config(self, additive):
+        """Acceptance criterion: with the simulator's scriptable timings
+        a transfer-bound config shows async tokens/s strictly greater
+        than sync, and transfer_exposed_s < transfer_s."""
+        point = transfer_bound_point(additive)
+        sync, async_ = make_ab_engines(point)
+        def tps(e):
+            m = e.metrics
+            return m["tokens_generated"] / (m["decode_s"]
+                                            + m["transfer_exposed_s"])
+        assert tps(async_) > tps(sync)
+        assert async_.metrics["transfer_exposed_s"] \
+            < async_.metrics["transfer_s"]
+        # serial staging exposes everything
+        assert sync.metrics["transfer_exposed_s"] == \
+            pytest.approx(sync.metrics["transfer_s"])
+        # both moved the same bytes — overlap hides time, not traffic
+        assert async_.metrics["transfer_s"] == \
+            pytest.approx(sync.metrics["transfer_s"])
+        # the virtual clock agrees: async wall-clock is strictly shorter
+        assert async_.clock.now() < sync.clock.now()
+
+    def test_fully_hidden_transfer_reaches_compute_bound_rate(self, additive):
+        point = next(p for p in additive.points
+                     if 0 < p.qos.t_transfer_ms <= p.qos.t_compute_ms)
+        _, async_ = make_ab_engines(point, iterations=8)
+        m = async_.metrics
+        assert m["transfer_exposed_s"] == 0.0
+        assert m["tokens_generated"] / m["decode_s"] == pytest.approx(
+            1e3 / point.qos.t_compute_ms)
+
+
+class TestControlLoopsUseExposedTime:
+    def test_controller_measures_exposed_not_total(self, additive):
+        """The same scripted timings read as ON-target through the async
+        pipeline and BELOW-target through serial staging — the
+        controller must charge only exposed transfer time. The point's
+        transfer hides completely (t_transfer <= t_compute), so the
+        async measurement is exactly the compute-bound rate."""
+        point = next(p for p in additive.points
+                     if 0 < p.qos.t_transfer_ms <= p.qos.t_compute_ms)
+        compute_tps = 1e3 / point.qos.t_compute_ms
+        # dwell > run length: measure only, never walk (a walk would
+        # switch the scripted point mid-run)
+        cfg = QoSControllerConfig(tolerance=0.05, min_dwell_iterations=100,
+                                  window_iterations=2)
+        target = QoSTarget(min_tokens_per_s=compute_tps * 0.95)
+        measured = {}
+        for mode in ("sync", "async"):
+            eng = SimulatedEngine(
+                batch=1,
+                throughput_fn=lambda p, i: 1e3 / p.qos.t_compute_ms,
+                transfer_fn=lambda p, i: p.qos.t_transfer_ms / 1e3,
+                overlap=(mode == "async"), overlap_efficiency=1.0)
+            ctl = QoSController(eng, additive, cfg)
+            ctl.target = target
+            ctl.point = point
+            eng.apply_frontier_point(point)
+            run_scripted(eng, ctl, 8)
+            measured[mode] = ctl.metrics["last_measured_tps"]
+        assert measured["async"] == pytest.approx(compute_tps, rel=1e-6)
+        assert measured["sync"] < measured["async"]
+
+    def test_arbiter_derate_follows_exposed_time(self, additive):
+        """MultiTenantEngine.step derives each tenant's derate from the
+        controller's exposed-time measurement: an overlap tenant with
+        fully hidden transfers derates toward compute-bound truth, not
+        toward the additive model's pessimism."""
+        from repro.serving.multi import MultiTenantEngine, TenantSpec
+        point = transfer_bound_point(additive)
+        mt = MultiTenantEngine(
+            200e9, controller_config=QoSControllerConfig(
+                min_dwell_iterations=4, window_iterations=2))
+        eng = SimulatedEngine(
+            batch=1,
+            throughput_fn=lambda p, i: 1e3 / p.qos.t_compute_ms,
+            transfer_fn=lambda p, i: p.qos.t_transfer_ms / 1e3,
+            overlap=True, overlap_efficiency=1.0)
+        # unconstrained target: the controller measures but never walks
+        # (a walk would change the scripted point mid-run)
+        t = mt.add_tenant(TenantSpec("a", QoSTarget()), eng, additive)
+        t.controller.adopt(t.spec.target, point)
+        for _ in range(8):
+            eng.run_iteration()
+            mt.step()
+        # transfer-bound + full overlap: per-token wall time collapses
+        # from (t_compute + t_transfer) to t_transfer alone
+        expected_measured = 1e3 / point.qos.t_transfer_ms
+        expected = expected_measured / point.qos.tokens_per_s
+        assert t.derate == pytest.approx(expected, rel=1e-6)
+        assert t.derate > 1.0      # overlap beats the additive estimate

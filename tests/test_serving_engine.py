@@ -1,19 +1,30 @@
 """Integration tests for the adaptive serving engine (the paper's Fig. 1
-system): plan -> serve -> replan with minimal downtime."""
+system): plan -> serve -> replan with minimal downtime, plus the async
+overlap pipeline (DESIGN.md §12) and the temporal-locality prefetch
+path."""
+import threading
+
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.models.model import build_model
+from repro.serving.api import EngineConfig
 from repro.serving.engine import AdaptiveServingEngine
 
 
 @pytest.fixture(scope="module")
-def engine():
+def smoke():
     cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engine(smoke):
+    cfg, params = smoke
     return AdaptiveServingEngine(cfg, params, max_batch=2, max_len=24)
 
 
@@ -83,3 +94,119 @@ class TestEngine:
         engine.step()
         assert engine.throughput_tokens_per_s() > 0
         assert engine.metrics["tokens_generated"] > 0
+        # serial staging: every transferred second was exposed
+        assert engine.metrics["transfer_exposed_s"] == pytest.approx(
+            engine.metrics["transfer_s"] + engine.metrics["prefetch_s"])
+        assert engine.metrics["transfer_overlapped_s"] == 0.0
+
+
+class TestTemporalLocalityPrefetch:
+    """The engine's gate-ahead path (DESIGN.md §2/§12): each iteration
+    hints the PREVIOUS iteration's demanded experts, re-staging anything
+    the LRU evicted since, so the follow-up demand hits."""
+
+    @pytest.fixture(scope="class")
+    def prefetch_engine(self, smoke):
+        cfg, params = smoke
+        # tiny swap (2 experts) -> heavy churn -> evicted prev-demanded
+        # keys exist for the hint path to re-stage
+        eng = AdaptiveServingEngine(
+            cfg, params, config=EngineConfig(
+                max_slots=2, max_len=24, prefetch=True,
+                swap_bytes=2 * cfg.expert_param_bytes(16)))
+        full = eng.planner.size_ne + \
+            eng.planner.num_experts_total * eng.planner.size_e16
+        with pytest.warns(DeprecationWarning):
+            eng.configure(full * 0.4, "quality", num_q_experts=0)
+        eng.submit(np.array([3, 1, 4, 1, 5]), max_new_tokens=10)
+        eng.step()
+        return eng
+
+    def test_prev_demanded_restaged_after_eviction(self, prefetch_engine):
+        st = prefetch_engine.expert_cache.stats
+        # the hint path actually re-staged evicted prev-demanded experts
+        assert st.prefetch_bytes > 0
+        assert st.evictions > 0
+        # and tracks the working set between iterations
+        assert prefetch_engine._prev_demanded
+
+    def test_speculative_traffic_split_in_metrics(self, prefetch_engine):
+        m = prefetch_engine.metrics
+        st = prefetch_engine.expert_cache.stats
+        assert m["prefetch_s"] == st.prefetch_s
+        assert m["transfer_s"] == st.transfer_s       # demand only
+        # measured miss rate counts DEMAND fetches only
+        assert m["expert_fetches"] <= m["expert_accesses"]
+        assert 0.0 <= m["miss_rate_measured"] <= 1.0
+        # sync staging: hint + demand transfers all block -> all exposed
+        assert m["transfer_exposed_s"] == pytest.approx(
+            st.transfer_s + st.prefetch_s)
+        assert "prefetch" in prefetch_engine.summary()
+
+    def test_hints_reset_on_replan(self, prefetch_engine, smoke):
+        cfg, _ = smoke
+        full = prefetch_engine.planner.size_ne + \
+            prefetch_engine.planner.num_experts_total * \
+            prefetch_engine.planner.size_e16
+        with pytest.warns(DeprecationWarning):
+            prefetch_engine.configure(full * 0.5, "quality",
+                                      num_q_experts=cfg.num_layers
+                                      * cfg.moe.num_experts)
+        assert prefetch_engine._prev_demanded == []
+        assert prefetch_engine._prev_layer_keys is None
+
+
+class TestOverlapPipeline:
+    """Async overlapped streaming through the REAL engine (DESIGN.md
+    §12): the per-layer pipeline must not change outputs, must account
+    exposed vs hidden transfer time, and close() must join workers."""
+
+    @pytest.fixture(scope="class")
+    def overlap_engine(self, smoke):
+        cfg, params = smoke
+        return AdaptiveServingEngine(
+            cfg, params,
+            config=EngineConfig(max_slots=2, max_len=24, overlap=True))
+
+    def test_pipeline_active_and_async_cache(self, overlap_engine):
+        assert overlap_engine._pipeline
+        assert overlap_engine.expert_cache.is_async
+        assert overlap_engine.hw.overlap_efficiency > 0
+
+    def test_generation_identical_to_sync_engine(self, engine,
+                                                 overlap_engine):
+        """The per-layer pipeline is the same primitive sequence as the
+        scanned step — greedy generations must MATCH the sync engine
+        under an identical partially-offloaded plan."""
+        prompt = np.array([3, 1, 4, 1, 5])
+        outs = []
+        for eng in (engine, overlap_engine):
+            eng.configure(_full_size(eng) * 0.4, "quality",
+                          num_q_experts=0)
+            rid = eng.submit(prompt, max_new_tokens=4)
+            eng.step()
+            outs.append(eng.done[rid].out_tokens)
+        assert outs[0] == outs[1]
+
+    def test_overlap_metrics_and_streaming(self, overlap_engine):
+        m = overlap_engine.metrics
+        assert m["expert_accesses"] > 0
+        assert m["transfer_exposed_s"] >= 0.0
+        assert m["transfer_overlapped_s"] >= 0.0
+        assert m["miss_rate_measured"] > 0     # partially offloaded plan
+        assert "exposed" in overlap_engine.summary()
+
+    def test_calibrate_overlap_updates_hw_and_frontier(self,
+                                                       overlap_engine):
+        f0 = overlap_engine.frontier
+        eff = overlap_engine.calibrate_overlap()
+        assert eff is not None and 0.0 <= eff <= 1.0
+        assert overlap_engine.hw.overlap_efficiency == eff
+        assert overlap_engine.frontier is not f0   # re-ranked lazily
+
+    def test_close_joins_transfer_workers(self, overlap_engine):
+        overlap_engine.close()
+        leaked = [t for t in threading.enumerate()
+                  if t.name.startswith("expert-xfer") and t.is_alive()]
+        assert not leaked
+        overlap_engine.close()                      # idempotent
