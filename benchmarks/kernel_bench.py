@@ -1,18 +1,32 @@
-"""Kernel benchmark — the fused dequant-matmul vs references.
+"""Kernel benchmark — the fused dequant-matmul vs references, and the
+grouped multi-expert kernel vs the per-expert loop (DESIGN.md §13).
 
-On this CPU container, Pallas runs in interpret mode (Python), so *wall
-clock* is only meaningful for the jnp paths; the kernel's TPU value is
+On this CPU container, Pallas runs in interpret mode (the kernel body
+traces to XLA), so *wall clock* is only meaningful for the jnp paths and
+per-launch dispatch overhead is compiled away; the kernels' TPU value is
 derived from the roofline: in the memory-bound decode regime, time ~
-weight bytes / HBM bw, and int4+scales reads ~3.7x fewer bytes than bf16.
+weight bytes / HBM bw, int4+scales reads ~3.7x fewer bytes than bf16,
+and the per-expert loop pays one kernel dispatch per resident expert per
+matmul where the grouped kernel pays one per ladder rung.
 
-Reported per shape:
+Reported per shape (``run``):
   * allclose check of the Pallas kernel (interpret) vs the jnp oracle;
   * CPU us/call of bf16 matmul vs fake-quant dequant+matmul (jnp);
   * analytic v5e decode-regime speedup = bf16 bytes / (packed+scales) bytes;
   * VMEM bytes of the default tiling (must fit with double buffering).
+
+Reported per arch (``run_grouped`` -> results/bench_grouped.json):
+  * bit-exactness of the grouped kernel vs the per-expert loop (measured,
+    interpret mode, reduced dims);
+  * CPU ms/call of both spellings (measured; dispatch-free, see above);
+  * analytic v5e decode FFN time looped vs grouped: compute from the
+    roofline + ``ffn_kernel_launches`` dispatches at C_LAUNCH_S each —
+    the term the grouped kernel collapses from E_resident to n_rungs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -21,7 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core.quantization import dequantize, quantize
+from repro.configs import get_config
+from repro.core.cost_model import HardwareModel, ffn_kernel_launches
+from repro.core.precision_plan import balanced_ladder_plan
+from repro.core.quantization import QTensor, dequantize, quantize
 from repro.kernels import ops
 from repro.kernels.ref import quantized_matmul_ref
 
@@ -31,6 +48,19 @@ SHAPES = [
     (128, 4096, 14336),
     (128, 14336, 4096),
 ]
+
+#: per-kernel dispatch overhead (host driver + XLA launch) charged to the
+#: analytic A/B. 20us is conservative for the Python-driven per-expert
+#: loop the paper's PyTorch/bnb baseline runs (per-op overhead alone is
+#: 10-50us); a TPU-side fused loop would be cheaper, the *ratio* of
+#: launches (E_resident vs n_rungs per layer) is the point (DESIGN.md §13).
+C_LAUNCH_S = 20e-6
+#: an expert FFN dispatches three matmul kernels (w_gate, w_up, w_down)
+MATMULS_PER_FFN = 3
+
+#: the A/B archs: the paper's 8-expert Mixtral and a 384-expert
+#: kimi-scale config where the launch term dominates the per-expert loop
+GROUPED_ARCHS = ("mixtral-8x7b", "kimi-k2-1t-a32b")
 
 
 def _timeit(fn, *args, reps: int = 5) -> float:
@@ -99,8 +129,115 @@ def run(quick: bool = False) -> List[Dict]:
     return rows
 
 
+def _looped_fn(num_experts: int, bits: int, group_size: int):
+    """The per-expert spelling the grouped kernel replaces: one
+    (jit-inlined) pallas_call per expert — E dispatches per bank."""
+    @jax.jit
+    def f(x, q, s):
+        outs = [ops.q_matmul(x[e], QTensor(q=q[e], scales=s[e], bits=bits,
+                                           group_size=group_size))
+                for e in range(num_experts)]
+        return jnp.stack(outs)
+    return f
+
+
+def _measure_ab(num_experts: int, capacity: int, k: int, n: int,
+                group_size: int, reps: int) -> Dict:
+    """Interpret-mode grouped-vs-looped A/B at reduced dims: bit-exact
+    parity (the real check) + CPU wall clock (dispatch-free, see module
+    docstring — the launch term only exists on real hardware)."""
+    kx, kw = jax.random.split(jax.random.key(0))
+    x = jax.random.normal(kx, (num_experts, capacity, k), jnp.bfloat16)
+    w = (jax.random.normal(kw, (num_experts, k, n), jnp.float32)
+         / np.sqrt(k)).astype(jnp.bfloat16)
+    qt = quantize(w, bits=4, group_size=group_size)
+
+    grouped = lambda a, qq, ss: ops.q_expert_matmul(
+        a, QTensor(q=qq, scales=ss, bits=4, group_size=group_size),
+        grouped=True)
+    looped = _looped_fn(num_experts, 4, group_size)
+
+    got_g = grouped(x, qt.q, qt.scales)
+    got_l = looped(x, qt.q, qt.scales)
+    bit_exact = bool(jnp.array_equal(
+        got_g.view(jnp.uint16), got_l.view(jnp.uint16)))
+
+    ms_g = _timeit(grouped, x, qt.q, qt.scales, reps=reps) / 1e3
+    ms_l = _timeit(looped, x, qt.q, qt.scales, reps=reps) / 1e3
+    return {
+        "measured_experts": num_experts,
+        "measured_shape": f"{num_experts}x{capacity}x{k}x{n}",
+        "bit_exact_vs_loop": bit_exact,
+        "cpu_interpret_ms_grouped": round(ms_g, 2),
+        "cpu_interpret_ms_looped": round(ms_l, 2),
+    }
+
+
+def _analytic_ab(cfg, hw: HardwareModel) -> Dict:
+    """v5e decode FFN time per token, looped vs grouped: memory-bound
+    expert reads (roofline) + one dispatch per matmul kernel. The grouped
+    kernel launches per ladder rung PRESENT per layer; the loop launches
+    per resident expert — the count the cost model's launch term charges
+    (``ffn_kernel_launches``, DESIGN.md §13)."""
+    e = cfg.moe
+    total = cfg.num_layers * e.num_experts
+    # all experts int4-resident: the paper's max-throughput operating
+    # point, and the worst case for the loop (every expert dispatches)
+    plan = balanced_ladder_plan(cfg.num_layers, e.num_experts, {4: total},
+                                ladder=(16, 4),
+                                group_size=cfg.mop.group_size)
+    per_active = cfg.expert_param_bytes(4) / hw.q4_speedup_decode * (16 / 4)
+    t_ffn = cfg.num_layers * e.top_k * per_active / (hw.hbm_bw * hw.mbu)
+    l_loop = ffn_kernel_launches(plan, grouped=False) * MATMULS_PER_FFN
+    l_grp = ffn_kernel_launches(plan, grouped=True) * MATMULS_PER_FFN
+    t_loop = t_ffn + l_loop * C_LAUNCH_S
+    t_grp = t_ffn + l_grp * C_LAUNCH_S
+    return {
+        "num_experts": e.num_experts, "top_k": e.top_k,
+        "num_layers": cfg.num_layers,
+        "launches_looped": l_loop, "launches_grouped": l_grp,
+        "c_launch_us": C_LAUNCH_S * 1e6,
+        "t_ffn_compute_ms": round(t_ffn * 1e3, 3),
+        "t_decode_ffn_looped_ms": round(t_loop * 1e3, 3),
+        "t_decode_ffn_grouped_ms": round(t_grp * 1e3, 3),
+        "grouped_decode_ffn_speedup": round(t_loop / t_grp, 2),
+    }
+
+
+def run_grouped(smoke: bool = False) -> List[Dict]:
+    """Grouped-vs-looped A/B grid over GROUPED_ARCHS; writes
+    results/bench_grouped.json. ``smoke`` caps the measured expert count
+    and reps so the CI step stays inside its timeout (the analytic
+    columns — the acceptance numbers — are scale-exact either way)."""
+    hw = HardwareModel()
+    rows: List[Dict] = []
+    for arch in GROUPED_ARCHS:
+        cfg = get_config(arch)
+        row: Dict = {"bench": "grouped", "arch": arch}
+        row.update(_analytic_ab(cfg, hw))
+        e_meas = min(cfg.moe.num_experts, 16 if smoke else 384)
+        row.update(_measure_ab(e_meas, capacity=8, k=128, n=128,
+                               group_size=64, reps=2 if smoke else 3))
+        rows.append(row)
+    common.RESULTS.mkdir(parents=True, exist_ok=True)
+    (common.RESULTS / "bench_grouped.json").write_text(
+        json.dumps(rows, indent=1))
+    return rows
+
+
 def main():
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid for CI: quick kernel shapes, capped "
+                         "measured expert counts")
+    ap.add_argument("--grouped-only", action="store_true",
+                    help="skip the per-shape kernel rows (just the "
+                         "grouped-vs-looped A/B)")
+    args = ap.parse_args()
+    if not args.grouped_only:
+        for r in run(quick=args.smoke):
+            print(r)
+    for r in run_grouped(smoke=args.smoke):
         print(r)
 
 

@@ -64,6 +64,15 @@ class HardwareModel:
     # (golden-fixture pinned). The engine calibrates a measured value via
     # AdaptiveServingEngine.calibrate_overlap().
     overlap_efficiency: float = 0.0
+    # Per-kernel dispatch overhead of the expert FFN (DESIGN.md §13).
+    # 0.0 (default) keeps the historical model bit-for-bit (golden-fixture
+    # pinned). With a calibrated value, grouped_ffn=True charges one
+    # launch per ladder rung PRESENT per layer (the grouped multi-expert
+    # kernel), grouped_ffn=False one per resident expert (the per-expert
+    # loop) — the term the grouped kernel collapses from E_resident to
+    # n_rungs.
+    kernel_launch_s: float = 0.0
+    grouped_ffn: bool = True
 
     def q_speedup_decode(self, bits: int) -> float:
         """Decode-regime matmul speedup of rung ``bits`` vs bf16."""
@@ -136,6 +145,39 @@ def quality_proxy(cfg: ModelConfig, plan: PrecisionPlan) -> float:
     return proxy
 
 
+def ffn_kernel_launches(plan: PrecisionPlan, grouped: bool = True) -> int:
+    """Expert-FFN kernel dispatches per decode token. Grouped (DESIGN.md
+    §13): one launch per ladder rung present in each layer's bank, so the
+    count is bounded by L x n_rungs regardless of expert count. Looped:
+    one per device-resident expert (the legacy vmap spelling)."""
+    if not grouped:
+        return int((plan.location == DEVICE).sum())
+    launches = 0
+    for b in plan.ladder:
+        launches += int((plan.bits == b).any(axis=1).sum())
+    return launches
+
+
+def kv_token_bytes(cfg: ModelConfig) -> int:
+    """KV bytes one cached token costs across the stack (k + v)."""
+    a = cfg.attention
+    itemsize = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    return cfg.num_layers * 2 * a.num_kv_heads * a.head_dim * itemsize
+
+
+def kv_bytes_bucketed(cfg: ModelConfig, slots: int, window: int) -> int:
+    """Slot-cache KV footprint: every slot holds its full window whether
+    used or not — the padding waste the paged cache eliminates."""
+    return slots * window * kv_token_bytes(cfg)
+
+
+def kv_bytes_paged(cfg: ModelConfig, pages: int, page_size: int) -> int:
+    """Paged KV footprint priced per page (DESIGN.md §13): ``pages``
+    mapped pages of ``page_size`` tokens (the reserved null page is
+    shared and free)."""
+    return pages * page_size * kv_token_bytes(cfg)
+
+
 def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
                  hw: HardwareModel = HardwareModel(),
                  batch_size: int = 1) -> QoSEstimate:
@@ -161,6 +203,13 @@ def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
     active_expert_bytes = cfg.num_layers * e.top_k * per_active
     weight_bytes = cfg.non_expert_bytes() + active_expert_bytes
     t_compute = weight_bytes / (hw.hbm_bw * hw.mbu)
+    if hw.kernel_launch_s > 0.0:
+        # dispatch overhead (DESIGN.md §13): n_rungs launches per layer
+        # under the grouped kernel vs one per resident expert looped.
+        # Gated on the default 0.0 so the historical model (and the
+        # frontier golden fixture) is untouched bit-for-bit.
+        t_compute += ffn_kernel_launches(plan, hw.grouped_ffn) \
+            * hw.kernel_launch_s
 
     t_transfer = miss_bytes / hw.host_link_bw
     # async overlap (DESIGN.md §12): only the transfer time the pipeline

@@ -162,17 +162,25 @@ def _combine_local(ybuf, dest, tok, w_sorted, t, d):
 # N-bank expert FFN (one bank per ladder rung, ascending-bits order)
 # --------------------------------------------------------------------------
 
-def _ffn_bf16(bank, xb, act):
-    """(E, C, d) x (E, d, f) -> (E, C, d)."""
-    up = jnp.einsum("ecd,edf->ecf", xb, bank["w_up"])
+def _ffn_bf16(bank, xb, act, use_kernel: bool = False):
+    """(E, C, d) x (E, d, f) -> (E, C, d).
+
+    ``use_kernel=True`` routes through the grouped bf16 Pallas kernel
+    (one launch for the whole f16 bank — DESIGN.md §13); numerics are
+    allclose to the einsum (f32 accumulation either way), not bitwise."""
+    if use_kernel:
+        from repro.kernels.ops import grouped_bf16_matmul
+        mm = grouped_bf16_matmul
+    else:
+        mm = functools.partial(jnp.einsum, "ecd,edf->ecf")
+    up = mm(xb, bank["w_up"])
     if act == "swiglu":
-        gate = jnp.einsum("ecd,edf->ecf", xb, bank["w_gate"])
-        h = jax.nn.silu(gate) * up
+        h = jax.nn.silu(mm(xb, bank["w_gate"])) * up
     elif act == "gelu":
         h = jax.nn.gelu(up, approximate=True)
     else:
         h = jnp.square(jax.nn.relu(up))
-    return jnp.einsum("ecf,efd->ecd", h, bank["w_down"])
+    return mm(h, bank["w_down"])
 
 
 def _ffn_q(bank, xb, act, use_kernel: bool):
@@ -195,7 +203,12 @@ def _ffn_q(bank, xb, act, use_kernel: bool):
 def _expert_ffn(banks, xb, act, use_kernel):
     """banks: {"q4"|"q8": {...QTensor...}|None, "f16": {...bf16...}|None}
     with expert storage in ascending-bits bank order along E (quantized
-    rungs first); ``xb`` is sliced per bank accordingly."""
+    rungs first); ``xb`` is sliced per bank accordingly.
+
+    With ``use_kernel`` each rung's whole bank is ONE grouped kernel
+    launch (expert-group grid axis, dequant in VMEM — DESIGN.md §13), so
+    the decode FFN dispatches n_rungs kernels regardless of expert count
+    instead of one per expert."""
     outs = []
     off = 0
     for key in bank_keys(banks):
@@ -207,7 +220,7 @@ def _expert_ffn(banks, xb, act, use_kernel):
         if _bank_bits(key) < 16:
             outs.append(_ffn_q(bank, sl, act, use_kernel))
         else:
-            outs.append(_ffn_bf16(bank, sl, act))
+            outs.append(_ffn_bf16(bank, sl, act, use_kernel))
         off += n
     return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
 

@@ -89,6 +89,20 @@ class QoSTarget:
             parts.append(f"p95<={self.max_p95_latency_s * 1e3:.0f}ms")
         return " ".join(parts) or "unconstrained"
 
+    def with_kv_reclaimed(self, reclaimed_bytes: float) -> "QoSTarget":
+        """The same target with KV savings credited to the expert-
+        residency budget (DESIGN.md §13): the paged cache prices KV per
+        mapped page, so HBM the slot cache would have stranded as bucket
+        padding widens ``mem_budget_bytes`` instead. No-op when no budget
+        is declared (unconstrained stays unconstrained) or nothing was
+        reclaimed."""
+        if not reclaimed_bytes or self.mem_budget_bytes is None \
+                or not math.isfinite(self.mem_budget_bytes):
+            return self
+        return dataclasses.replace(
+            self, mem_budget_bytes=self.mem_budget_bytes
+            + float(reclaimed_bytes))
+
 
 # eq=False: the embedded PrecisionPlan holds ndarrays, so generated
 # dataclass equality would be ambiguous — identity semantics are correct

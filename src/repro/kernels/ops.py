@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import QTensor
+from repro.kernels import grouped_matmul as _gk
 from repro.kernels import q4_matmul as _k
 
 # On the CPU container Pallas must run in interpret mode; flip to False on
@@ -31,6 +32,19 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, cfg)
 
 
+def _with_padded_m(call, x: jax.Array, *, block_m: int, m_axis: int):
+    """Centralized padded-M wrapper (decode batches are small and rarely
+    tile-aligned). Picks the effective M tile, zero-pads ``x`` along
+    ``m_axis`` to it, runs ``call(x_padded, block_m_eff)`` and slices the
+    result back to the true M. Shared by the per-expert and grouped paths
+    so both see identical tile choices (a parity requirement)."""
+    m = x.shape[m_axis]
+    block_m_eff = min(block_m, _round_up(m, 8))
+    xp = _pad_to(x, block_m_eff, m_axis)
+    out = call(xp, block_m_eff)
+    return jax.lax.slice_in_dim(out, 0, m, axis=m_axis)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "out_dtype", "interpret"))
 def q_matmul(x: jax.Array, qt: QTensor, *, block_m: int = 128,
@@ -44,19 +58,17 @@ def q_matmul(x: jax.Array, qt: QTensor, *, block_m: int = 128,
     d_model/d_ff are multiples of 256).
     """
     interpret = _DEFAULT_INTERPRET if interpret is None else interpret
-    m = x.shape[0]
     k, n = qt.shape[-2:]
-    block_m_eff = min(block_m, _round_up(m, 8))
     # shrink tiles to divisors (TP-sharded d_ff slices, e.g. 14336/16=896,
     # are multiples of 128 but not of 256)
     block_n = _largest_divisor(n, block_n, qt.group_size)
     block_k = _largest_divisor(k, block_k, qt.group_size)
-    xp = _pad_to(x, block_m_eff, 0)
-    out = _k.quantized_matmul(
-        xp, qt.q, qt.scales, bits=qt.bits, group_size=qt.group_size,
-        block_m=block_m_eff, block_n=block_n, block_k=block_k,
-        out_dtype=out_dtype, interpret=interpret)
-    return out[:m]
+    return _with_padded_m(
+        lambda xp, bm: _k.quantized_matmul(
+            xp, qt.q, qt.scales, bits=qt.bits, group_size=qt.group_size,
+            block_m=bm, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, interpret=interpret),
+        x, block_m=block_m, m_axis=0)
 
 
 def _largest_divisor(dim: int, cap: int, step: int) -> int:
@@ -73,16 +85,69 @@ def _largest_divisor(dim: int, cap: int, step: int) -> int:
 def q_expert_matmul(x: jax.Array, qt: QTensor, *, block_m: int = 128,
                     block_n: int = 256, block_k: int = 128,
                     out_dtype=jnp.bfloat16,
-                    interpret: Optional[bool] = None) -> jax.Array:
-    """Batched experts: (E, C, K) x Q(E, K, N) -> (E, C, N) via vmap
-    (vmap over pallas_call prepends a grid dimension)."""
+                    interpret: Optional[bool] = None,
+                    grouped: bool = True) -> jax.Array:
+    """Batched experts: (E, C, K) x Q(E, K, N) -> (E, C, N).
+
+    ``grouped=True`` (default) fuses the whole bank into ONE kernel launch
+    with the expert-group as the leading grid axis (DESIGN.md §13) —
+    decode FFN cost stops scaling with expert count. ``grouped=False``
+    keeps the legacy per-expert spelling (vmap over pallas_call); it is
+    bit-identical to the grouped path and retained as the A/B baseline for
+    ``benchmarks/kernel_bench.py``.
+    """
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    if grouped:
+        return grouped_q_matmul(
+            x, qt, block_m=block_m, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, interpret=interpret)
     fn = functools.partial(
         q_matmul, block_m=block_m, block_n=block_n, block_k=block_k,
-        out_dtype=out_dtype,
-        interpret=_DEFAULT_INTERPRET if interpret is None else interpret)
+        out_dtype=out_dtype, interpret=interpret)
     return jax.vmap(lambda xe, qe, se: fn(
         xe, QTensor(q=qe, scales=se, bits=qt.bits, group_size=qt.group_size))
     )(x, qt.q, qt.scales)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "out_dtype", "interpret"))
+def grouped_q_matmul(x: jax.Array, qt: QTensor, *, block_m: int = 128,
+                     block_n: int = 256, block_k: int = 128,
+                     out_dtype=jnp.bfloat16,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """One-launch grouped ``(E, C, K) x Q(E, K, N) -> (E, C, N)``. Tile
+    selection mirrors :func:`q_matmul` exactly so the grouped result is
+    bit-identical to the per-expert loop."""
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    k, n = qt.shape[-2:]
+    block_n = _largest_divisor(n, block_n, qt.group_size)
+    block_k = _largest_divisor(k, block_k, qt.group_size)
+    return _with_padded_m(
+        lambda xp, bm: _gk.grouped_quantized_matmul(
+            xp, qt.q, qt.scales, bits=qt.bits, group_size=qt.group_size,
+            block_m=bm, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, interpret=interpret),
+        x, block_m=block_m, m_axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "out_dtype", "interpret"))
+def grouped_bf16_matmul(x: jax.Array, w: jax.Array, *, block_m: int = 128,
+                        block_n: int = 256, block_k: int = 128,
+                        out_dtype=jnp.bfloat16,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """One-launch grouped bf16 ``(E, C, K) x (E, K, N) -> (E, C, N)`` —
+    the f16 bank's grouped path (no dequant; f32 VMEM accumulation, so
+    parity with the einsum reference is allclose, not bitwise)."""
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    _, k, n = w.shape
+    block_n = _largest_divisor(n, block_n, 8)
+    block_k = _largest_divisor(k, block_k, 8)
+    return _with_padded_m(
+        lambda xp, bm: _gk.grouped_bf16_matmul(
+            xp, w, block_m=bm, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, interpret=interpret),
+        x, block_m=block_m, m_axis=1)
 
 
 def _round_up(v: int, m: int) -> int:

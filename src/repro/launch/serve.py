@@ -166,7 +166,8 @@ def _serve_tenants(args, cfg, model, params0):
             print(f"[serve]   {name}: {len(tn.engine.done)} done, "
                   f"{tn.engine.metrics['tokens_generated']} tokens, "
                   f"p50 {lat['p50'] * 1e3:.0f} ms "
-                  f"p95 {lat['p95'] * 1e3:.0f} ms")
+                  f"p95 {lat['p95'] * 1e3:.0f} ms "
+                  f"kv_waste={tn.engine.kv_waste_fraction():.0%}")
     print("[serve] " + mt.summary().replace("\n", "\n[serve] "))
     mt.close()                  # joins the shared async transfer workers
 
@@ -298,6 +299,15 @@ def main():
             engine.run_iteration(temperature=args.temperature)
             controller.step()          # QoS loop between iterations
         print(f"[serve] {engine.summary()}")
+        # KV padding accounting (DESIGN.md §13): last-iteration snapshot
+        # of allocated vs used bytes + run-averaged padding waste — the
+        # column a --trace replay watches shrink when paged_kv is on.
+        m = engine.metrics
+        print(f"[serve]   kv[{'paged' if engine.paged else 'slots'}] "
+              f"alloc={m['kv_allocated_bytes'] / 2**20:.2f}MiB "
+              f"used={m['kv_used_bytes'] / 2**20:.2f}MiB "
+              f"cap={m['kv_capacity_bytes'] / 2**20:.2f}MiB "
+              f"waste={engine.kv_waste_fraction():.0%}")
         if controller.target is not None:
             print(f"[serve] {controller.summary()}")
     for rid in list(engine.done)[:2]:

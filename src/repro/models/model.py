@@ -128,6 +128,174 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The slot cache above allocates every slot its full ring window up front;
+# a short request strands (window - len) entries of HBM for its whole
+# lifetime. The paged cache keeps ONE pool of fixed-size pages plus a
+# host-side per-slot page table: slot ``b``'s ring buffer is the
+# concatenation of its mapped pages, chunk ``j`` of the ring living in
+# physical page ``table[b, j]``. Pages are mapped on demand as positions
+# advance and freed on retire, so allocated KV bytes track actual tokens
+# (per page), not slots x window.
+#
+# Page 0 is the reserved NULL page: all position tags -1, never allocated,
+# never written (scatters remap null entries to an out-of-range sentinel
+# and drop them). An unmapped chunk therefore gathers as an all-invalid
+# ring segment — masked to exactly 0 contribution by the attention's
+# position tags — which makes decode through the paged cache BIT-IDENTICAL
+# to the slot cache for the same stream (tested): the gathered ring is
+# sliced to exactly the window width, so every attention sees the same
+# operand tensors in the same order.
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVMeta:
+    """Static layout of a paged KV pool."""
+    window: int           # logical ring width per slot (== slot-cache W)
+    page_size: int        # tokens per page
+    chunks_per_slot: int  # ceil(window / page_size)
+    num_pages: int        # physical pages incl. the reserved null page 0
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int = 16,
+                     num_pages: Optional[int] = None,
+                     abstract: bool = False
+                     ) -> Tuple[Any, PagedKVMeta]:
+    """Paged decode cache: (pool, meta). ``num_pages=None`` sizes the pool
+    at worst case (every slot fully windowed) + the null page; a smaller
+    pool reclaims HBM for the frontier's residency axis (the engine caps
+    admission so allocation can never dead-end mid-flight)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"family {cfg.family} has no paged KV path")
+    window = min(max_len, cfg.attention.sliding_window or max_len)
+    chunks = -(-window // page_size)
+    if num_pages is None:
+        num_pages = batch * chunks + 1
+    if num_pages < chunks + 1:
+        raise ValueError(f"pool of {num_pages} pages cannot hold even one "
+                         f"full window ({chunks} pages)")
+    dt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.attention.num_kv_heads, cfg.attention.head_dim
+    n = cfg.num_layers
+    mk = (lambda s, d=dt: jax.ShapeDtypeStruct(s, d)) if abstract \
+        else (lambda s, d=dt: jnp.zeros(s, d) if d != jnp.int32
+              else jnp.full(s, -1, d))
+    pool = {"k": mk((n, num_pages, page_size, hkv, hd)),
+            "v": mk((n, num_pages, page_size, hkv, hd)),
+            "pos": mk((n, num_pages, page_size), jnp.int32)}
+    return pool, PagedKVMeta(window=window, page_size=page_size,
+                             chunks_per_slot=chunks, num_pages=num_pages)
+
+
+def _scatter_table(pt: jax.Array, num_pages: int) -> jax.Array:
+    """Unmapped chunks (null page 0) -> out-of-range sentinel so scatters
+    with mode="drop" never write the null page."""
+    return jnp.where(pt == 0, num_pages, pt)
+
+
+def _gather_paged(pool, pt, window: int):
+    """pool + page table (B, nc) -> the standard ring cache (L, B, W, ...)
+    the attention layers consume. The page view is sliced to exactly
+    ``window`` so attention operands (and thus logits) are bit-identical
+    to the slot cache's."""
+    nc = pt.shape[1]
+
+    def g(a):
+        x = a[:, pt]                           # (L, B, nc, ps, ...)
+        l, b, _, ps = x.shape[:4]
+        return x.reshape((l, b, nc * ps) + x.shape[4:])[:, :, :window]
+
+    return {"k": g(pool["k"]), "v": g(pool["v"]), "pos": g(pool["pos"])}
+
+
+def _scatter_paged(pool, pt, ring, window: int):
+    """Write a (possibly updated) ring cache back into its pages. Null
+    chunks are dropped (their ring segment is all-invalid by
+    construction), so the null page is never dirtied."""
+    nc = pt.shape[1]
+    ps = pool["pos"].shape[2]
+    spt = _scatter_table(pt, pool["pos"].shape[1])
+    pad = nc * ps - window
+    out = {}
+    for key in ("k", "v", "pos"):
+        r = ring[key]
+        if pad:
+            cfgp = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (r.ndim - 3)
+            r = jnp.pad(r, cfgp,
+                        constant_values=-1 if key == "pos" else 0)
+        l, b = r.shape[0], r.shape[1]
+        rr = r.reshape((l, b, nc, ps) + r.shape[3:])
+        out[key] = pool[key].at[:, spt].set(rr, mode="drop")
+    return out
+
+
+def _gather_paged_layer(pool, pt, window: int, layer):
+    """Single-layer gather for the per-layer decode pipeline; ``layer``
+    is a traced scalar."""
+    nc = pt.shape[1]
+
+    def g(a):
+        x = a[layer][pt]                       # (B, nc, ps, ...)
+        b, _, ps = x.shape[:3]
+        return x.reshape((b, nc * ps) + x.shape[3:])[:, :window]
+
+    return {"k": g(pool["k"]), "v": g(pool["v"]), "pos": g(pool["pos"])}
+
+
+def _scatter_paged_layer(pool, pt, ring, window: int, layer):
+    nc = pt.shape[1]
+    ps = pool["pos"].shape[2]
+    spt = _scatter_table(pt, pool["pos"].shape[1])
+    pad = nc * ps - window
+    out = {}
+    for key in ("k", "v", "pos"):
+        r = ring[key]
+        if pad:
+            cfgp = [(0, 0), (0, pad)] + [(0, 0)] * (r.ndim - 2)
+            r = jnp.pad(r, cfgp,
+                        constant_values=-1 if key == "pos" else 0)
+        b = r.shape[0]
+        rr = r.reshape((b, nc, ps) + r.shape[2:])
+        out[key] = pool[key].at[layer, spt].set(rr, mode="drop")
+    return out
+
+
+def _scatter_prefill_paged(pool, page_row, ring, window: int):
+    """Scatter one slot's freshly prefilled ring (L, W, ...) into its
+    mapped pages; ``page_row`` is the slot's (nc,) page-table row (null
+    chunks dropped — they hold no written entries)."""
+    nc = page_row.shape[0]
+    ps = pool["pos"].shape[2]
+    spt = _scatter_table(page_row, pool["pos"].shape[1])
+    pad = nc * ps - window
+    out = {}
+    for key in ("k", "v", "pos"):
+        r = ring[key]                          # (L, W, ...)
+        if pad:
+            cfgp = [(0, 0), (0, pad)] + [(0, 0)] * (r.ndim - 2)
+            r = jnp.pad(r, cfgp,
+                        constant_values=-1 if key == "pos" else 0)
+        l = r.shape[0]
+        rr = r.reshape((l, nc, ps) + r.shape[2:])
+        out[key] = pool[key].at[:, spt].set(rr, mode="drop")
+    return out
+
+
+def paged_reset_pages(pool, pages: jax.Array):
+    """Invalidate freed pages' position tags (tags only — k/v bytes are
+    dead once every tag is -1, same as ``reset_slot``). ``pages`` is a
+    fixed-size (chunks_per_slot,) id vector padded with 0 (the null page,
+    remapped to the drop sentinel)."""
+    spt = _scatter_table(pages, pool["pos"].shape[1])
+    ps = pool["pos"].shape[2]
+    fill = jnp.full((pool["pos"].shape[0], pages.shape[0], ps), -1,
+                    jnp.int32)
+    return dict(pool, pos=pool["pos"].at[:, spt].set(fill, mode="drop"))
+
+
+# ---------------------------------------------------------------------------
 # The Model bundle
 # ---------------------------------------------------------------------------
 
@@ -162,6 +330,23 @@ class Model:
     #   (x', cache with layer's KV row replaced, route_ids (B, top_k))
     decode_logits: Optional[Callable] = None
     # (params, x (B,1,d)) -> logits (B,V)
+    # Paged KV cache (DESIGN.md §13): same serving surface over a page
+    # pool + per-slot page table instead of fully-windowed slot rows.
+    # Decode through these hooks is bit-identical to the slot-cache path
+    # (the gathered page view IS the ring buffer — tested).
+    init_paged_cache: Optional[Callable] = None
+    # (batch, max_len, *, page_size, num_pages) -> (pool, PagedKVMeta)
+    paged_prefill_into_slot: Optional[Callable] = None
+    # (params, pool, page_row (nc,), tokens (1,S), positions (1,S),
+    #  last_idx, *, window) -> (logits (1,V), pool)
+    paged_decode_step_routed: Optional[Callable] = None
+    # (params, pool, page_table (B,nc), tokens, positions, *, window)
+    #   -> (logits, pool, route_ids)
+    paged_decode_layer_routed: Optional[Callable] = None
+    # (params, pool, page_table, x, positions, layer, *, window)
+    #   -> (x', pool, route_ids (B, top_k))
+    paged_reset_pages: Optional[Callable] = None
+    # (pool, pages (nc,)) -> pool with the pages' position tags cleared
 
 
 def _embed_inputs(params, cfg: ModelConfig, batch):
@@ -342,6 +527,65 @@ def build_model(cfg: ModelConfig, mesh=None, *,
         y = L.rms_norm(x, params["final_norm"]["scale"])
         return L.unembed(params["lm_head"]["table"], y)[:, 0]
 
+    # -- paged KV serving hooks (DESIGN.md §13) ------------------------
+    def paged_prefill_into_slot(params, pool, page_row, tokens, positions,
+                                last_idx, *, window):
+        """Paged spelling of ``prefill_into_slot``: same fresh sub-cache
+        forward (prefill attends over the in-context k/v, so the logits
+        are independent of the cache layout), then the written ring is
+        scattered chunk-wise into the slot's mapped pages."""
+        with act_ctx():
+            x = L.embed(params["embed"]["table"], tokens) \
+                * jnp.asarray(math.sqrt(cfg.d_model),
+                              params["embed"]["table"].dtype)
+            n, _, _, hkv, hd = pool["k"].shape
+            sub = {"k": jnp.zeros((n, 1, window, hkv, hd),
+                                  pool["k"].dtype),
+                   "v": jnp.zeros((n, 1, window, hkv, hd),
+                                  pool["v"].dtype),
+                   "pos": jnp.full((n, 1, window), -1, jnp.int32)}
+            y, new_sub, _ = fwd(params, cfg, x, positions, caches=sub,
+                                par=par, train=False, use_kernel=use_kernel)
+            y_last = jnp.take(y, last_idx, axis=1, mode="clip")[:, None]
+            y_last = L.rms_norm(y_last, params["final_norm"]["scale"])
+            logits = L.unembed(params["lm_head"]["table"], y_last)
+            ring = {key: new_sub[key][:, 0] for key in ("k", "v", "pos")}
+            return logits[:, 0], _scatter_prefill_paged(pool, page_row,
+                                                        ring, window)
+
+    def paged_decode_step_routed(params, pool, page_table, tokens,
+                                 positions, *, window):
+        """Paged ``decode_step_routed``: gather the page view into the
+        standard ring cache, run the identical decode step, scatter the
+        updated ring back. Bit-identical logits (tested)."""
+        ring = _gather_paged(pool, page_table, window)
+        logits, new_ring, route_ids = _decode_step(
+            params, ring, tokens, positions, True)
+        return logits, _scatter_paged(pool, page_table, new_ring,
+                                      window), route_ids
+
+    def paged_decode_layer_routed(params, pool, page_table, x, positions,
+                                  layer, *, window):
+        """Paged spelling of ``decode_layer_routed`` for the overlap
+        pipeline; one layer's page view gathered/scattered per call."""
+        with act_ctx():
+            p = jax.tree_util.tree_map(lambda v: v[layer],
+                                       params["layers"])
+            c = _gather_paged_layer(pool, page_table, window, layer)
+            pos2 = positions[:, None]
+            token_valid = pos2 >= 0
+            h, new_kv = L.attention(
+                p["attn"], L.rms_norm(x, p["attn_norm"]["scale"]),
+                cfg.attention, positions=pos2, cache=c)
+            x = L.constrain(x + h, "residual")
+            xn = L.rms_norm(x, p["ffn_norm"]["scale"])
+            h, _, ids = _ffn_or_moe(p, xn, cfg, par, False, use_kernel,
+                                    {}, token_valid=token_valid)
+            x = L.constrain(x + h, "residual")
+            merged = _scatter_paged_layer(pool, page_table, new_kv,
+                                          window, layer)
+            return x, merged, ids
+
     layered_api = slot_api and cfg.moe is not None
 
     return Model(
@@ -358,6 +602,15 @@ def build_model(cfg: ModelConfig, mesh=None, *,
         decode_embed=decode_embed if layered_api else None,
         decode_layer_routed=decode_layer_routed if layered_api else None,
         decode_logits=decode_logits if layered_api else None,
+        init_paged_cache=functools.partial(init_paged_cache, cfg)
+        if slot_api else None,
+        paged_prefill_into_slot=paged_prefill_into_slot if slot_api
+        else None,
+        paged_decode_step_routed=paged_decode_step_routed
+        if slot_api and cfg.moe is not None else None,
+        paged_decode_layer_routed=paged_decode_layer_routed
+        if layered_api else None,
+        paged_reset_pages=paged_reset_pages if slot_api else None,
     )
 
 

@@ -76,6 +76,21 @@ class EngineConfig:
         tuple, e.g. ``(16, 8, 4)``; DESIGN.md §11). ``None`` keeps the
         model config's ladder (binary ``(16, bits)`` by default, which
         reproduces the pre-ladder plans bit-identically).
+    KV cache (DESIGN.md §13):
+      * ``paged_kv`` — serve through the paged KV cache: fixed-size pages
+        + a per-slot page table instead of fully-windowed slot rows.
+        Decode is bit-identical to the slot cache (tested); allocated KV
+        bytes track actual tokens per page instead of slots x window.
+        ``False`` keeps the slot cache as the A/B baseline.
+      * ``page_size`` — tokens per KV page.
+      * ``kv_pool_pages`` — physical pool size (incl. the null page);
+        ``None`` = worst case (slots x window). A smaller pool reclaims
+        HBM; the engine derives an admission cap from it so allocation
+        never dead-ends mid-flight.
+      * ``kv_reserve`` — credit the HBM a sub-worst-case pool reclaims
+        (vs the bucketed slot cache) to ``QoSTarget.mem_budget_bytes``
+        when resolving targets on the frontier, feeding the savings back
+        into the expert-residency axis.
     Hardware:
       * ``hw`` — analytic hardware model; None measures the host link
         bandwidth once per process and uses defaults otherwise.
@@ -91,6 +106,10 @@ class EngineConfig:
     overlap_efficiency: Optional[float] = None
     ladder: Optional[Tuple[int, ...]] = None
     hw: Optional[HardwareModel] = None
+    paged_kv: bool = True
+    page_size: int = 16
+    kv_pool_pages: Optional[int] = None
+    kv_reserve: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

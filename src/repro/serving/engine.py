@@ -55,6 +55,7 @@ deprecated shim that builds a ``QoSTarget`` internally.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import threading
 import time
@@ -66,7 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cost_model import HardwareModel, expert_access_stats
+from repro.core.cost_model import (HardwareModel, expert_access_stats,
+                                   kv_bytes_bucketed, kv_token_bytes)
 from repro.core.expert_cache import (AsyncExpertCache, ExpertCache,
                                      PrefetchingExpertCache)
 from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
@@ -74,6 +76,7 @@ from repro.core.planner import AdaptivePlanner, PlanResult
 from repro.core.precision_plan import DEVICE
 from repro.models.model import Model, apply_precision_plan, build_model
 from repro.serving.api import EngineConfig, ServeRequest, ServeResult
+from repro.serving.paged_kv import PageAllocator
 from repro.serving.sampler import sample
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      RequestSLO, SamplingParams,
@@ -180,12 +183,43 @@ class AdaptiveServingEngine:
         if self.model.prefill_into_slot is None:
             raise ValueError(f"{cfg.arch_id}: family {cfg.family} has no "
                              "slot-cache decode path")
-        self.cache = self.model.init_cache(self.max_slots, self.max_len)
-        self.window = int(self.cache["k"].shape[2])
+        # KV cache: paged (fixed-size pages + per-slot page table,
+        # DESIGN.md §13) by default; the fully-windowed slot cache
+        # survives as the A/B baseline (paged_kv=False). Decode through
+        # the pages is bit-identical to the slot cache (tested).
+        self.paged = bool(config.paged_kv
+                          and self.model.paged_decode_step_routed
+                          is not None)
+        max_active = config.max_active_tokens
+        self._kv_token_bytes = kv_token_bytes(cfg)
+        if self.paged:
+            self.kv_pool, self.kv_meta = self.model.init_paged_cache(
+                self.max_slots, self.max_len,
+                page_size=config.page_size,
+                num_pages=config.kv_pool_pages)
+            self.window = self.kv_meta.window
+            self.kv_alloc = PageAllocator(
+                self.max_slots, self.kv_meta.chunks_per_slot,
+                self.kv_meta.num_pages, self.kv_meta.page_size)
+            self.cache = None
+            worst = self.max_slots * self.kv_meta.chunks_per_slot
+            if self.kv_meta.num_pages - 1 < worst:
+                # sub-worst-case pool: cap admitted tokens so ensure()
+                # can never dead-end mid-flight (per-slot ceil rounding
+                # costs at most one page each, hence the max_slots term)
+                derived = (self.kv_meta.num_pages - 1 - self.max_slots) \
+                    * self.kv_meta.page_size
+                max_active = derived if max_active is None \
+                    else min(max_active, derived)
+        else:
+            self.kv_pool = self.kv_meta = self.kv_alloc = None
+            self.cache = self.model.init_cache(self.max_slots,
+                                               self.max_len)
+            self.window = int(self.cache["k"].shape[2])
         self.scheduler = ContinuousScheduler(SchedulerConfig(
             max_slots=self.max_slots, max_len=self.max_len,
             max_prompt_len=self.window,
-            max_active_tokens=config.max_active_tokens,
+            max_active_tokens=max_active,
             max_queue=config.max_queue))
         # runtime expert streaming: host master store + device LRU swap.
         # A multi-tenant deployment passes a tenant-scoped VIEW of the
@@ -253,6 +287,18 @@ class AdaptiveServingEngine:
             "miss_rate": 0.0, "miss_rate_measured": 0.0,
             "expert_accesses": 0, "expert_fetches": 0,
             "iterations": 0,
+            # KV padding accounting (DESIGN.md §13): snapshot of the last
+            # iteration + per-iteration byte sums for run averages.
+            # "allocated" is what the cache layout holds (mapped pages
+            # for paged; slots x window always for the slot cache);
+            # "used" is the valid cached tokens — their gap is the
+            # padding waste the paged cache eliminates.
+            "kv_allocated_bytes": 0, "kv_used_bytes": 0,
+            "kv_alloc_byte_iters": 0.0, "kv_used_byte_iters": 0.0,
+            "kv_capacity_bytes": (
+                (self.kv_meta.num_pages - 1) * self.kv_meta.page_size
+                * self._kv_token_bytes if self.paged
+                else kv_bytes_bucketed(cfg, self.max_slots, self.window)),
         }
 
     # ------------------------------------------------------------------
@@ -304,10 +350,23 @@ class AdaptiveServingEngine:
         replan path. Raises
         :class:`~repro.core.pareto.InfeasibleTarget` when the hard
         constraints admit no configuration."""
+        if self.config.kv_reserve:
+            # paged KV reserve (DESIGN.md §13): HBM a sub-worst-case page
+            # pool reclaims vs the bucketed slot cache widens the expert
+            # residency budget the frontier resolves against
+            target = target.with_kv_reclaimed(self.kv_reclaimed_bytes())
         point = self.frontier.select(target)
         self._target = target
         self.apply_frontier_point(point)
         return point
+
+    def kv_reclaimed_bytes(self) -> int:
+        """HBM the paged pool reclaims vs the fully-windowed slot cache
+        (0 for the slot cache or a worst-case-sized pool)."""
+        if not self.paged:
+            return 0
+        bucketed = kv_bytes_bucketed(self.cfg, self.max_slots, self.window)
+        return max(0, bucketed - int(self.metrics["kv_capacity_bytes"]))
 
     def apply_frontier_point(self, point: FrontierPoint) -> PlanResult:
         """Apply one frontier point (the QoSController's walk step).
@@ -572,11 +631,18 @@ class AdaptiveServingEngine:
         st = cache.stats
         embed = self._jit("decode_embed", m.decode_embed)
         # the cache argument is DONATED: each per-layer call rebinds
-        # self.cache, so XLA aliases the .at[layer].set update in place
-        # instead of copying the whole multi-layer KV cache L times per
-        # token (nothing else holds the old buffer)
-        layer_fn = self._jit("decode_layer", m.decode_layer_routed,
-                             donate=(1,))
+        # self.cache (or the paged pool), so XLA aliases the per-layer
+        # update in place instead of copying the whole multi-layer KV
+        # cache L times per token (nothing else holds the old buffer)
+        if self.paged:
+            layer_fn = self._jit(
+                "decode_layer_paged", functools.partial(
+                    m.paged_decode_layer_routed, window=self.window),
+                donate=(1,))
+            pt_dev = jnp.asarray(self.kv_alloc.table)
+        else:
+            layer_fn = self._jit("decode_layer", m.decode_layer_routed,
+                                 donate=(1,))
         finish = self._jit("decode_logits", m.decode_logits)
         pos_j = jnp.asarray(pos)
         n_layers = self.cfg.num_layers
@@ -589,8 +655,12 @@ class AdaptiveServingEngine:
             cache.prefetch(predicted[0])
         new_layer_keys: List[List[Tuple[int, int]]] = []
         for li in range(n_layers):
-            x, self.cache, ids = layer_fn(params, self.cache, x, pos_j,
-                                          jnp.int32(li))
+            if self.paged:
+                x, self.kv_pool, ids = layer_fn(
+                    params, self.kv_pool, pt_dev, x, pos_j, jnp.int32(li))
+            else:
+                x, self.cache, ids = layer_fn(params, self.cache, x,
+                                              pos_j, jnp.int32(li))
             if predicted is not None and li + 1 < n_layers:
                 # lookahead: stage layer li+1's predicted demand while
                 # layer li's compute is still in flight
@@ -631,16 +701,33 @@ class AdaptiveServingEngine:
         retired (max_new_tokens == 1 — the prefill logit is the whole
         generation), else None."""
         s = len(req.prompt)
-        sb = _bucket(s, hi=self.window)
+        if self.paged:
+            # page-sized compile buckets replace the power-of-two ones
+            # (DESIGN.md §13): pad waste per prefill is < one page
+            ps = self.kv_meta.page_size
+            sb = min(-(-s // ps) * ps, self.window)
+            sb = max(sb, s)           # window may not be a page multiple
+            self.kv_alloc.ensure_prefix(slot, min(s, self.window))
+            fn = self._jit(("prefill_slot_paged", sb), functools.partial(
+                self.model.paged_prefill_into_slot, window=self.window))
+        else:
+            sb = _bucket(s, hi=self.window)
+            fn = self._jit(("prefill_slot", sb),
+                           self.model.prefill_into_slot)
         toks = np.zeros((1, sb), np.int32)
         pos = np.full((1, sb), -1, np.int32)
         toks[0, :s] = req.prompt
         pos[0, :s] = np.arange(s)
-        fn = self._jit(("prefill_slot", sb), self.model.prefill_into_slot)
         t0 = time.perf_counter()
-        logits, self.cache = fn(self._serve_params, self.cache,
-                                jnp.asarray(toks), jnp.asarray(pos),
-                                jnp.int32(slot), jnp.int32(s - 1))
+        if self.paged:
+            logits, self.kv_pool = fn(
+                self._serve_params, self.kv_pool,
+                jnp.asarray(self.kv_alloc.table[slot]),
+                jnp.asarray(toks), jnp.asarray(pos), jnp.int32(s - 1))
+        else:
+            logits, self.cache = fn(self._serve_params, self.cache,
+                                    jnp.asarray(toks), jnp.asarray(pos),
+                                    jnp.int32(slot), jnp.int32(s - 1))
         jax.block_until_ready(logits)
         self.metrics["prefill_s"] += time.perf_counter() - t0
         self._key, sub = jax.random.split(self._key)
@@ -655,10 +742,46 @@ class AdaptiveServingEngine:
         st.last_token = tok
         if req.done():                      # max_new_tokens == 1
             self.scheduler.retire(slot, now=now)
-            self.cache = self._jit("reset_slot", self.model.reset_slot)(
-                self.cache, jnp.int32(slot))
+            self._release_slot_kv(slot)
             return req.rid
         return None
+
+    def _release_slot_kv(self, slot: int):
+        """Retire a slot's KV: paged -> free its pages (tags invalidated
+        on device before reuse); slot cache -> invalidate the row."""
+        if self.paged:
+            freed = self.kv_alloc.free_slot(slot)
+            buf = np.zeros(self.kv_meta.chunks_per_slot, np.int32)
+            buf[:len(freed)] = freed
+            self.kv_pool = self._jit(
+                "paged_reset", self.model.paged_reset_pages)(
+                    self.kv_pool, jnp.asarray(buf))
+        else:
+            self.cache = self._jit("reset_slot", self.model.reset_slot)(
+                self.cache, jnp.int32(slot))
+
+    def _update_kv_metrics(self, active):
+        """Per-iteration KV padding accounting (DESIGN.md §13)."""
+        tb = self._kv_token_bytes
+        used = sum(min(st.position + 1, self.window)
+                   for _, st in active) * tb
+        if self.paged:
+            alloc = self.kv_alloc.pages_in_use \
+                * self.kv_meta.page_size * tb
+        else:
+            alloc = self.max_slots * self.window * tb
+        self.metrics["kv_used_bytes"] = used
+        self.metrics["kv_allocated_bytes"] = alloc
+        self.metrics["kv_used_byte_iters"] += used
+        self.metrics["kv_alloc_byte_iters"] += alloc
+
+    def kv_waste_fraction(self) -> float:
+        """Run-averaged fraction of allocated KV bytes never holding a
+        valid token (bucket padding waste; ~0 under the paged cache)."""
+        alloc = self.metrics["kv_alloc_byte_iters"]
+        if alloc <= 0:
+            return 0.0
+        return 1.0 - self.metrics["kv_used_byte_iters"] / alloc
 
     def run_iteration(self, *, admit: bool = True,
                       temperature: float = 0.0) -> List[int]:
@@ -682,12 +805,27 @@ class AdaptiveServingEngine:
         for i, st in active:
             toks[i, 0] = st.last_token
             pos[i] = st.position
+        if self.paged:
+            # map the chunk each active slot's ring write lands in BEFORE
+            # the jitted step (host-side page table, device-side pool)
+            for i, st in active:
+                self.kv_alloc.ensure_index(i, st.position % self.window)
         route_ids = None
         if self._pipeline:
             # overlap mode: decode through the per-layer lookahead
             # pipeline; expert streaming happens inside (DESIGN.md §12)
             logits = self._decode_pipelined(toks, pos,
                                             [i for i, _ in active])
+        elif self.paged:
+            decode = self._jit("decode_paged", functools.partial(
+                self.model.paged_decode_step_routed, window=self.window))
+            t0 = time.perf_counter()
+            logits, self.kv_pool, route_ids = decode(
+                self._serve_params, self.kv_pool,
+                jnp.asarray(self.kv_alloc.table), jnp.asarray(toks),
+                jnp.asarray(pos))
+            jax.block_until_ready(logits)
+            self.metrics["decode_s"] += time.perf_counter() - t0
         else:
             decode = self._jit("decode", self.model.decode_step_routed)
             t0 = time.perf_counter()
@@ -696,6 +834,7 @@ class AdaptiveServingEngine:
                 jnp.asarray(pos))
             jax.block_until_ready(logits)
             self.metrics["decode_s"] += time.perf_counter() - t0
+        self._update_kv_metrics(active)
         self.metrics["iterations"] += 1
         self._key, sub = jax.random.split(self._key)
         if any(st.req.sampling is not None for _, st in active):
@@ -737,9 +876,7 @@ class AdaptiveServingEngine:
             st.last_token = int(new_toks[i])
             if st.req.done():
                 self.scheduler.retire(i, now=now)
-                self.cache = self._jit(
-                    "reset_slot", self.model.reset_slot)(
-                        self.cache, jnp.int32(i))
+                self._release_slot_kv(i)
                 retired.append(st.req.rid)
         return retired
 
@@ -828,7 +965,8 @@ class AdaptiveServingEngine:
                   "transfer_s", "transfer_s_est", "stage_s",
                   "prefetch_s", "transfer_exposed_s",
                   "transfer_overlapped_s",
-                  "expert_accesses", "expert_fetches", "iterations"):
+                  "expert_accesses", "expert_fetches", "iterations",
+                  "kv_alloc_byte_iters", "kv_used_byte_iters"):
             self.metrics[k] = 0 if isinstance(self.metrics[k], int) else 0.0
         self.expert_cache.stats.reset()
 
@@ -851,12 +989,19 @@ class AdaptiveServingEngine:
             knobs = "E[" + ",".join(
                 f"{b}b={int((p.plan.bits == b).sum())}"
                 for b in rungs) + f"]/{p.plan.bits.size}"
+        # KV padding accounting (DESIGN.md §13): run-averaged allocated
+        # vs used bytes; waste is the padding the paged cache eliminates
+        it = max(m["iterations"], 1)
+        kv = (f" kv[{'paged' if self.paged else 'slots'}"
+              f" alloc={m['kv_alloc_byte_iters'] / it / 2**20:.2f}MiB"
+              f" used={m['kv_used_byte_iters'] / it / 2**20:.2f}MiB"
+              f" waste={self.kv_waste_fraction():.0%}]")
         return (f"plan[{p.preference} {knobs}"
                 f" res={p.plan.resident_fraction():.0%}]"
                 f" gen={m['tokens_generated']}tok"
                 f" decode={m['decode_s']:.2f}s"
                 f" +transfer={m['transfer_s']:.3f}s"
                 f" (est {m['transfer_s_est']:.3f}s)"
-                + overlap +
+                + overlap + kv +
                 f" -> {self.throughput_tokens_per_s():.2f} tok/s"
                 f" p50={lat['p50']*1e3:.0f}ms p95={lat['p95']*1e3:.0f}ms")

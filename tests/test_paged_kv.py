@@ -1,0 +1,197 @@
+"""Paged KV cache (DESIGN.md §13): allocator bookkeeping, bit-identical
+decode vs the bucketed slot cache (including slot retire/rejoin
+mid-flight), padding-waste accounting, and the kv_reserve feedback into
+the frontier's residency budget."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.cost_model import (kv_bytes_bucketed, kv_bytes_paged,
+                                   kv_token_bytes)
+from repro.core.pareto import QoSTarget
+from repro.models.model import build_model, init_paged_cache
+from repro.serving.api import EngineConfig, RequestSLO, ServeRequest
+from repro.serving.engine import AdaptiveServingEngine
+from repro.serving.paged_kv import PageAllocator
+
+
+class TestPageAllocator:
+    def make(self, slots=2, chunks=4, pages=9, ps=4):
+        return PageAllocator(slots, chunks, pages, ps)
+
+    def test_null_page_never_handed_out(self):
+        al = self.make()
+        got = {al.ensure(s, c) for s in range(2) for c in range(4)}
+        assert 0 not in got and len(got) == 8
+        assert al.free_pages == 0 and al.pages_in_use == 8
+
+    def test_ensure_idempotent(self):
+        al = self.make()
+        p = al.ensure(0, 2)
+        assert al.ensure(0, 2) == p and al.pages_in_use == 1
+
+    def test_ensure_prefix_rounds_to_pages(self):
+        al = self.make()
+        assert len(al.ensure_prefix(0, 5)) == 2      # ceil(5/4) chunks
+        assert len(al.ensure_prefix(1, 4)) == 1
+        assert al.pages_in_use == 3
+
+    def test_ensure_index_maps_ring_write(self):
+        al = self.make()
+        p = al.ensure_index(0, 7)                    # chunk 1
+        assert al.table[0, 1] == p and al.table[0, 0] == 0
+
+    def test_free_slot_recycles(self):
+        al = self.make()
+        pages = al.ensure_prefix(0, 16)
+        freed = al.free_slot(0)
+        assert sorted(freed) == sorted(pages)
+        assert al.pages_in_use == 0
+        assert not al.table[0].any()
+        # freed pages are reusable by another slot
+        assert set(al.ensure_prefix(1, 16)) <= set(range(1, 9))
+
+    def test_exhaustion_raises(self):
+        al = PageAllocator(2, 4, num_pages=3, page_size=4)
+        al.ensure(0, 0)
+        al.ensure(0, 1)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            al.ensure(0, 2)
+
+
+class TestKvCostModel:
+    def test_bucketed_vs_paged_pricing(self):
+        cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+        tb = kv_token_bytes(cfg)
+        assert tb == cfg.num_layers * 2 * \
+            cfg.attention.num_kv_heads * cfg.attention.head_dim * 2
+        assert kv_bytes_bucketed(cfg, 4, 32) == 4 * 32 * tb
+        assert kv_bytes_paged(cfg, 6, 8) == 6 * 8 * tb
+
+    def test_with_kv_reclaimed(self):
+        t = QoSTarget(mem_budget_bytes=1000.0)
+        assert t.with_kv_reclaimed(0) is t
+        assert t.with_kv_reclaimed(256).mem_budget_bytes == 1256.0
+        unbounded = QoSTarget(mem_budget_bytes=None)
+        assert unbounded.with_kv_reclaimed(256).mem_budget_bytes is None
+
+    def test_paged_pool_init_shapes(self):
+        cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+        pool, meta = init_paged_cache(cfg, 2, 24, page_size=4,
+                                      abstract=True)
+        assert meta.page_size == 4
+        assert meta.window == min(24, cfg.attention.sliding_window or 24)
+        assert meta.num_pages == 2 * meta.chunks_per_slot + 1
+        assert pool["k"].shape == (
+            cfg.num_layers, meta.num_pages, 4,
+            cfg.attention.num_kv_heads, cfg.attention.head_dim)
+        with pytest.raises(ValueError):
+            init_paged_cache(cfg, 2, 24, page_size=4, num_pages=2)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, params
+
+
+def _full_size(engine):
+    return engine.planner.size_ne + \
+        engine.planner.num_experts_total * engine.planner.size_e16
+
+
+def _run_stream(cfg, params, econf, n_req=3, max_new=6):
+    """Serve a deterministic request stream (3 requests over 2 slots, so
+    one slot retires and is rejoined mid-flight) and return the per-rid
+    token lists."""
+    engine = AdaptiveServingEngine(cfg, params, config=econf)
+    engine.configure(_full_size(engine) * 1.1, "throughput")
+    rng = np.random.default_rng(0)
+    rids = [engine.submit_request(ServeRequest(
+        prompt=rng.integers(1, cfg.vocab_size, 5 + 2 * i),
+        max_new_tokens=max_new, slo=RequestSLO()))
+        for i in range(n_req)]
+    while engine.has_work():
+        engine.run_iteration(temperature=0.0)
+    toks = {rid: list(engine.done[rid].out_tokens) for rid in rids}
+    engine.close()
+    return toks, engine
+
+
+class TestPagedEngineEquivalence:
+    def test_decode_bit_identical_to_slot_cache(self, smoke):
+        """Greedy decode through pages == through the bucketed slot cache
+        for the same stream, including retire/rejoin (3 reqs, 2 slots)."""
+        cfg, params = smoke
+        base = dict(max_slots=2, max_len=24)
+        paged, ep = _run_stream(cfg, params, EngineConfig(
+            **base, paged_kv=True, page_size=4))
+        slots, es = _run_stream(cfg, params, EngineConfig(
+            **base, paged_kv=False))
+        assert paged == slots
+        assert ep.paged and not es.paged
+
+    def test_overlap_pipeline_equivalence(self, smoke):
+        """The per-layer lookahead pipeline (DESIGN.md §12) through pages
+        == through slot rows."""
+        cfg, params = smoke
+        base = dict(max_slots=2, max_len=24, overlap=True)
+        paged, ep = _run_stream(cfg, params, EngineConfig(
+            **base, paged_kv=True, page_size=4))
+        slots, _ = _run_stream(cfg, params, EngineConfig(
+            **base, paged_kv=False))
+        assert paged == slots
+        ep.close()
+
+    def test_waste_accounting(self, smoke):
+        """Paged allocation tracks actual tokens (waste < slot cache's
+        bucket padding) and both spellings expose the kv column."""
+        cfg, params = smoke
+        base = dict(max_slots=2, max_len=24)
+        _, ep = _run_stream(cfg, params, EngineConfig(
+            **base, paged_kv=True, page_size=4))
+        _, es = _run_stream(cfg, params, EngineConfig(
+            **base, paged_kv=False))
+        assert 0.0 <= ep.kv_waste_fraction() < es.kv_waste_fraction()
+        assert "kv[paged" in ep.summary()
+        assert "kv[slots" in es.summary()
+        assert ep.metrics["kv_capacity_bytes"] <= \
+            es.metrics["kv_capacity_bytes"]
+
+    def test_sub_worst_case_pool_admission_cap(self, smoke):
+        """A pool smaller than worst case derives an admission cap and
+        never exhausts mid-flight; outputs stay bit-identical."""
+        cfg, params = smoke
+        # window=24, page_size=4 -> 6 chunks/slot; worst case 2*6+1=13
+        # pages. 8 pages (7 usable) < worst case -> cap kicks in.
+        paged, ep = _run_stream(cfg, params, EngineConfig(
+            max_slots=2, max_len=24, paged_kv=True, page_size=4,
+            kv_pool_pages=8))
+        slots, _ = _run_stream(cfg, params, EngineConfig(
+            max_slots=2, max_len=24, paged_kv=False))
+        assert paged == slots
+        assert ep.scheduler.cfg.max_active_tokens is not None
+        assert ep.kv_reclaimed_bytes() > 0
+
+    def test_kv_reserve_widens_residency_budget(self, smoke):
+        """kv_reserve credits the reclaimed HBM to the frontier's memory
+        budget: the selected plan can afford at least as many resident
+        experts as without the credit."""
+        cfg, params = smoke
+        mk = lambda reserve: AdaptiveServingEngine(
+            cfg, params, config=EngineConfig(
+                max_slots=2, max_len=24, paged_kv=True, page_size=4,
+                kv_pool_pages=8, kv_reserve=reserve))
+        ea, eb = mk(False), mk(True)
+        assert ea.kv_reclaimed_bytes() == eb.kv_reclaimed_bytes() > 0
+        budget = _full_size(ea) * 0.7
+        target = QoSTarget(min_tokens_per_s=float("inf"),
+                           mem_budget_bytes=budget)
+        pa = ea.apply_target(target)
+        pb = eb.apply_target(target)
+        assert pb.plan.resident_fraction() >= pa.plan.resident_fraction()
+        ea.close()
+        eb.close()
