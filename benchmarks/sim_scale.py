@@ -1,0 +1,86 @@
+"""Control-plane wall-clock scaling bench (DESIGN.md §14.6).
+
+Measures how many tenant-virtual-seconds of control-plane simulation one
+real second buys as the population grows — the number that justifies the
+"million-tenant" framing: the tick loop is vectorized over the tenant
+population, so the cost per tick is O(tenants) numpy work plus O(replicas)
+python, and the tenants x virtual-seconds / wall-second product should
+GROW with population (bigger vectors amortize the per-tick overhead).
+
+Appends a ``scaling`` section to ``results/sim_control_plane.json``
+(creating the file by running the reference scenario first if needed).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.sim_scale [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.serving.control_plane import ControlPlane, get_scenario
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" \
+    / "sim_control_plane.json"
+
+
+def bench_population(tenants: int, horizon_s: float) -> dict:
+    scn = dataclasses.replace(
+        get_scenario("diurnal-1k"), name=f"scale-{tenants}",
+        tenants=tenants, horizon_s=horizon_s,
+        budget_shocks=tuple((t, v) for t, v in
+                            get_scenario("diurnal-1k").budget_shocks
+                            if t < horizon_s))
+    plane = ControlPlane(scn)
+    t0 = time.perf_counter()
+    plane.run()
+    wall = time.perf_counter() - t0
+    t = plane.report()["totals"]
+    return {
+        "tenants": tenants,
+        "virtual_s": horizon_s,
+        "ticks": int(round(horizon_s / scn.tick_s)),
+        "wall_s": round(wall, 3),
+        "speedup_x": round(horizon_s / max(wall, 1e-9), 1),
+        "tenant_virtual_s_per_wall_s": round(
+            tenants * horizon_s / max(wall, 1e-9), 1),
+        "goodput_tps": t["goodput_tps"],
+        "violation_rate": t["violation_rate"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short horizon (CI smoke)")
+    args = ap.parse_args(argv)
+
+    horizon = 5000.0 if args.quick else 50_000.0
+    pops = [100, 1000] if args.quick else [100, 1000, 10_000]
+    rows = [bench_population(n, horizon) for n in pops]
+    for r in rows:
+        print(f"tenants={r['tenants']:>6d} horizon={r['virtual_s']:.0f}s "
+              f"wall={r['wall_s']:.2f}s speedup={r['speedup_x']}x "
+              f"tenant-virt-s/s={r['tenant_virtual_s_per_wall_s']:.0f}")
+
+    report = json.loads(RESULTS.read_text()) if RESULTS.exists() else {}
+    report["scaling"] = {"horizon_s": horizon, "rows": rows}
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(report, sort_keys=True, indent=1) + "\n")
+    print(f"wrote scaling section to {RESULTS}")
+
+    # the vectorized claim: throughput must grow with population
+    per = [r["tenant_virtual_s_per_wall_s"] for r in rows]
+    if per[-1] <= per[0]:
+        print("FAIL: tenant-virtual-seconds/wall-second did not grow "
+              f"with population ({per})")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -76,6 +76,7 @@ from repro.core.planner import AdaptivePlanner, PlanResult
 from repro.core.precision_plan import DEVICE
 from repro.models.model import Model, apply_precision_plan, build_model
 from repro.serving.api import EngineConfig, ServeRequest, ServeResult
+from repro.serving.metrics import base_metrics
 from repro.serving.paged_kv import PageAllocator
 from repro.serving.sampler import sample
 from repro.serving.scheduler import (ContinuousScheduler, Request,
@@ -277,29 +278,19 @@ class AdaptiveServingEngine:
         # host-store insert is per-key-unique (one in-flight future per
         # key) but the stage_s accumulation needs the lock
         self._stage_lock = threading.Lock()
-        self.metrics: Dict[str, Any] = {
-            "tokens_generated": 0, "decode_s": 0.0, "prefill_s": 0.0,
-            "transfer_s": 0.0, "transfer_s_est": 0.0, "stage_s": 0.0,
-            "prefetch_s": 0.0,
-            "transfer_exposed_s": 0.0, "transfer_overlapped_s": 0.0,
-            "reconfig_s": 0.0, "reconfigs": 0,
-            "drains": 0, "drain_s": 0.0,
-            "miss_rate": 0.0, "miss_rate_measured": 0.0,
-            "expert_accesses": 0, "expert_fetches": 0,
-            "iterations": 0,
-            # KV padding accounting (DESIGN.md §13): snapshot of the last
-            # iteration + per-iteration byte sums for run averages.
-            # "allocated" is what the cache layout holds (mapped pages
-            # for paged; slots x window always for the slot cache);
-            # "used" is the valid cached tokens — their gap is the
-            # padding waste the paged cache eliminates.
-            "kv_allocated_bytes": 0, "kv_used_bytes": 0,
-            "kv_alloc_byte_iters": 0.0, "kv_used_byte_iters": 0.0,
-            "kv_capacity_bytes": (
-                (self.kv_meta.num_pages - 1) * self.kv_meta.page_size
-                * self._kv_token_bytes if self.paged
-                else kv_bytes_bucketed(cfg, self.max_slots, self.window)),
-        }
+        # the shared sim/real metric schema (repro.serving.metrics,
+        # DESIGN.md §14.2) — controllers see the same dict shape against
+        # the deterministic SimulatedEngine. KV notes (DESIGN.md §13):
+        # "kv_allocated_bytes" is what the cache layout holds (mapped
+        # pages for paged; slots x window always for the slot cache),
+        # "kv_used_bytes" the valid cached tokens — their gap is the
+        # padding waste the paged cache eliminates; the *_byte_iters
+        # sums give run averages.
+        self.metrics: Dict[str, Any] = base_metrics()
+        self.metrics["kv_capacity_bytes"] = (
+            (self.kv_meta.num_pages - 1) * self.kv_meta.page_size
+            * self._kv_token_bytes if self.paged
+            else kv_bytes_bucketed(cfg, self.max_slots, self.window))
 
     # ------------------------------------------------------------------
     # Compatibility surface

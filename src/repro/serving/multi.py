@@ -56,7 +56,7 @@ from repro.serving.qos import QoSController, QoSControllerConfig
 
 __all__ = [
     "TenantSpec", "ReplanReport", "ResourceArbiter", "MultiTenantEngine",
-    "GlobalBudgetInfeasible",
+    "GlobalBudgetInfeasible", "UtilityPolicy", "FloorSaturationUtility",
 ]
 
 
@@ -122,20 +122,64 @@ class _Tenant:
         return self.controller.point
 
 
+class UtilityPolicy:
+    """Pluggable per-tenant utility model for the water-filling arbiter
+    (DESIGN.md §14.4): ``build`` returns the scalar utility function the
+    arbiter maximizes per marginal byte, given the tenant's feasible
+    points, its target and its observed derate. Swapping the policy
+    changes WHAT bytes buy (SLO floors, latency, fairness experiments)
+    without touching the water-filling mechanics."""
+
+    def build(self, feas: Sequence[FrontierPoint], target: QoSTarget,
+              derate: float) -> Callable[[FrontierPoint], float]:
+        raise NotImplementedError
+
+
+class FloorSaturationUtility(UtilityPolicy):
+    """The default §10.2 utility: ``floor_weight * saturation(tokens/s)
+    - (quality_proxy - 1)`` where saturation is ``min(eff_tps / floor,
+    1)`` for a finite tokens/s floor, the normalized ``tps / tps_max``
+    for the ``inf`` ("as fast as possible") floor, and ``1`` when no
+    floor (or a degenerate ``<= 0`` floor) is declared. ``floor_weight``
+    makes meeting declared floors dominate quality polish — bytes first
+    buy SLO feasibility, then quality."""
+
+    def __init__(self, floor_weight: float = 1000.0):
+        self.floor_weight = floor_weight
+
+    def build(self, feas: Sequence[FrontierPoint], target: QoSTarget,
+              derate: float) -> Callable[[FrontierPoint], float]:
+        tps_max = max(p.qos.tokens_per_s for p in feas)
+        floor = target.min_tokens_per_s
+
+        def u(p: FrontierPoint) -> float:
+            if floor is None or floor <= 0:
+                sat = 1.0
+            elif math.isinf(floor):
+                sat = p.qos.tokens_per_s / max(tps_max, 1e-12)
+            else:
+                sat = min(p.qos.tokens_per_s * derate / floor, 1.0)
+            return self.floor_weight * sat - (p.qos.quality_proxy - 1.0)
+
+        return u
+
+
 class ResourceArbiter:
     """Joint frontier-point selection by water-filling marginal utility
     per byte (DESIGN.md §10.2).
 
-    Per-tenant utility of a point (tokens/s derated by the observed
-    model error): ``floor_weight * saturation(tokens_per_s) -
-    (quality_proxy - 1)`` where saturation is ``min(eff_tps / floor, 1)``
-    for a finite tokens/s floor, the normalized ``tps / tps_max`` for the
-    ``inf`` ("as fast as possible") floor, and ``1`` when no floor is
-    declared. ``floor_weight`` makes meeting declared floors dominate
-    quality polish — bytes first buy SLO feasibility, then quality."""
+    The utility of a point is delegated to a pluggable
+    :class:`UtilityPolicy` (default :class:`FloorSaturationUtility`,
+    weighting declared SLO floors above quality polish); the arbiter
+    itself owns only the water-filling: every tenant starts at its
+    cheapest feasible point and the globally best upgrade per marginal
+    byte is applied until the budget is exhausted."""
 
-    def __init__(self, floor_weight: float = 1000.0):
+    def __init__(self, floor_weight: float = 1000.0, *,
+                 utility: Optional[UtilityPolicy] = None):
         self.floor_weight = floor_weight
+        self.utility = utility if utility is not None \
+            else FloorSaturationUtility(floor_weight)
 
     # -- per-tenant upgrade chain -------------------------------------------
     def chain(self, frontier: ParetoFrontier, target: QoSTarget,
@@ -147,18 +191,7 @@ class ResourceArbiter:
         if not feas:
             raise InfeasibleTarget(
                 f"no frontier point satisfies [{target.describe()}]")
-        tps_max = max(p.qos.tokens_per_s for p in feas)
-        floor = target.min_tokens_per_s
-
-        def u(p: FrontierPoint) -> float:
-            if floor is None:
-                sat = 1.0
-            elif math.isinf(floor):
-                sat = p.qos.tokens_per_s / max(tps_max, 1e-12)
-            else:
-                sat = min(p.qos.tokens_per_s * derate / floor, 1.0)
-            return self.floor_weight * sat - (p.qos.quality_proxy - 1.0)
-
+        u = self.utility.build(feas, target, derate)
         feas.sort(key=lambda p: (p.qos.device_bytes, -u(p),
                                  p.num_q_experts, p.resident_experts))
         chain: List[FrontierPoint] = []

@@ -44,7 +44,8 @@ from typing import Callable, Dict, Optional
 
 from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
 
-__all__ = ["QoSController", "QoSControllerConfig"]
+__all__ = ["QoSController", "QoSControllerConfig", "WalkPolicy",
+           "BandedWalkPolicy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,12 +64,69 @@ class QoSControllerConfig:
     p95_window_requests: int = 16
 
 
+class WalkPolicy:
+    """Pluggable decision strategy for the QoS control loop (DESIGN.md
+    §14.4): given the controller (target, active point, frontier,
+    config, measured-p95 access) and the windowed measured throughput,
+    return the frontier point to move to — or None to hold. The
+    controller owns everything around the decision (measurement windows,
+    hysteresis dwell, the replan plumbing); the policy owns only the
+    judgement, so control-plane experiments can swap it per scenario
+    without forking the loop."""
+
+    def decide(self, ctl: "QoSController",
+               measured: float) -> Optional[FrontierPoint]:
+        raise NotImplementedError
+
+
+class BandedWalkPolicy(WalkPolicy):
+    """The default §9 policy: tolerance-banded walks to the adjacent
+    frontier point — faster on a throughput shortfall or a p95 breach,
+    back toward quality when the measured headroom (derated by the
+    observed model error) predicts the slower point still meets the
+    target."""
+
+    def decide(self, ctl: "QoSController",
+               measured: float) -> Optional[FrontierPoint]:
+        tgt = ctl.target.min_tokens_per_s
+        tol = ctl.config.tolerance
+        slower, faster = ctl.frontier.neighbors(ctl.point, ctl.target)
+        # p95 latency ceiling: only the runtime can see it; treat a
+        # violation like a throughput shortfall (walk faster).
+        if ctl.target.max_p95_latency_s is not None and faster is not None:
+            p95 = ctl._measured_p95()
+            if p95 is not None and p95 > ctl.target.max_p95_latency_s:
+                ctl._violation()
+                return faster
+        if tgt is None:
+            return None
+        if measured < tgt * (1 - tol):
+            # an infinite target is "as fast as possible" (best effort),
+            # not an SLO that can be violated
+            if math.isfinite(tgt):
+                ctl._violation()
+            # already at the fast end: best effort, keep serving
+            return faster
+        if measured > tgt * (1 + tol) and slower is not None:
+            # headroom: walk back toward quality, but only when (a) the
+            # slower point does not DEGRADE quality (adjacent-in-tps
+            # points are not always adjacent-in-quality) and (b) it is
+            # PREDICTED to still meet the target after derating the
+            # analytic estimate by the observed model error.
+            derate = measured / max(ctl.point.qos.tokens_per_s, 1e-12)
+            if slower.qos.quality_proxy <= ctl.point.qos.quality_proxy \
+                    and slower.qos.tokens_per_s * derate >= tgt:
+                return slower
+        return None
+
+
 class QoSController:
     """Feedback loop from measured QoS to frontier walks (DESIGN.md §9)."""
 
     def __init__(self, engine, frontier: Optional[ParetoFrontier] = None,
                  config: QoSControllerConfig = QoSControllerConfig(),
-                 on_violation: Optional[Callable[[], None]] = None):
+                 on_violation: Optional[Callable[[], None]] = None,
+                 policy: Optional[WalkPolicy] = None):
         self.engine = engine
         self.frontier = frontier if frontier is not None \
             else engine.frontier
@@ -76,6 +134,8 @@ class QoSController:
         #: fired whenever a target violation is recorded — the
         #: multi-tenant arbiter's re-arbitration trigger (DESIGN.md §10).
         self.on_violation = on_violation
+        #: the pluggable decision strategy (DESIGN.md §14.4)
+        self.policy = policy if policy is not None else BandedWalkPolicy()
         self.target: Optional[QoSTarget] = None
         self.point: Optional[FrontierPoint] = None
         self._win_iter = 0
@@ -140,41 +200,11 @@ class QoSController:
         return self._decide(measured)
 
     def _decide(self, measured: float) -> bool:
-        tgt = self.target.min_tokens_per_s
-        tol = self.config.tolerance
-        slower, faster = self.frontier.neighbors(self.point, self.target)
-        # p95 latency ceiling: only the runtime can see it; treat a
-        # violation like a throughput shortfall (walk faster).
-        if self.target.max_p95_latency_s is not None and faster is not None:
-            p95 = self._measured_p95()
-            if p95 is not None and p95 > self.target.max_p95_latency_s:
-                self._violation()
-                self._apply(faster)
-                return True
-        if tgt is None:
+        point = self.policy.decide(self, measured)
+        if point is None or point is self.point:
             return False
-        if measured < tgt * (1 - tol):
-            # an infinite target is "as fast as possible" (best effort),
-            # not an SLO that can be violated
-            if math.isfinite(tgt):
-                self._violation()
-            if faster is None:
-                return False               # already at the fast end: best
-                                           # effort, keep serving
-            self._apply(faster)
-            return True
-        if measured > tgt * (1 + tol) and slower is not None:
-            # headroom: walk back toward quality, but only when (a) the
-            # slower point does not DEGRADE quality (adjacent-in-tps
-            # points are not always adjacent-in-quality) and (b) it is
-            # PREDICTED to still meet the target after derating the
-            # analytic estimate by the observed model error.
-            derate = measured / max(self.point.qos.tokens_per_s, 1e-12)
-            if slower.qos.quality_proxy <= self.point.qos.quality_proxy \
-                    and slower.qos.tokens_per_s * derate >= tgt:
-                self._apply(slower)
-                return True
-        return False
+        self._apply(point)
+        return True
 
     # -- internals ---------------------------------------------------------
     def _violation(self):

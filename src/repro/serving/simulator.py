@@ -29,30 +29,87 @@ multi-tenant mode of ``benchmarks/fig3_throughput.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import heapq
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.pareto import FrontierPoint
+from repro.serving.metrics import base_metrics
 
 __all__ = ["VirtualClock", "SimulatedEngine", "run_scripted", "budget_shock"]
 
 
 class VirtualClock:
-    """Deterministic simulated time (seconds). Engines sharing one clock
-    advance it cooperatively; tests read/advance it explicitly."""
+    """Deterministic simulated time (seconds) plus an event heap.
+
+    Engines sharing one clock advance it cooperatively; tests and the
+    control plane (DESIGN.md §14) read/advance it explicitly. Time is
+    guarded monotone: a negative ``advance`` delta, an ``advance_to``
+    into the past, and NaN deltas all raise instead of silently
+    rewinding — a rewound clock would corrupt every accumulated
+    ``*_s`` metric downstream.
+
+    The event heap is the trace layer's scheduling surface:
+    ``schedule_at(t, event)`` enqueues, ``peek()`` inspects the next due
+    time, and ``pop_due()`` drains (deterministically: FIFO among equal
+    timestamps) everything scheduled at or before *now*. Events are
+    opaque payloads — callables by convention, fired by the caller, so
+    the clock stays replay-neutral.
+    """
 
     def __init__(self, start: float = 0.0):
         self._t = float(start)
+        self._heap: List[Tuple[float, int, Any]] = []
+        self._seq = 0
 
     def now(self) -> float:
         return self._t
 
     def advance(self, dt: float) -> float:
-        if dt < 0:
+        if not (dt >= 0):        # rejects negatives AND NaN
             raise ValueError(f"time only moves forward (dt={dt})")
         self._t += dt
         return self._t
+
+    def advance_to(self, t: float) -> float:
+        """Jump to an absolute time >= now (monotonicity guard)."""
+        t = float(t)
+        if math.isnan(t) or t < self._t:
+            raise ValueError(
+                f"time only moves forward (now={self._t}, target={t})")
+        self._t = t
+        return self._t
+
+    # -- event heap ---------------------------------------------------------
+    def schedule_at(self, t: float, event: Any) -> int:
+        """Enqueue ``event`` to come due at absolute time ``t`` (>= now);
+        returns a sequence id (also the FIFO tie-break among events
+        scheduled at the same instant)."""
+        t = float(t)
+        if math.isnan(t) or t < self._t:
+            raise ValueError(
+                f"cannot schedule into the past (now={self._t}, t={t})")
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, event))
+        return self._seq
+
+    def peek(self) -> Optional[float]:
+        """Due time of the earliest scheduled event (None when empty)."""
+        return self._heap[0][0] if self._heap else None
+
+    def pop_due(self, until: Optional[float] = None) -> List[Any]:
+        """Remove and return every event scheduled at or before ``until``
+        (default: now), in (time, insertion) order."""
+        limit = self._t if until is None else min(float(until), self._t)
+        out: List[Any] = []
+        while self._heap and self._heap[0][0] <= limit:
+            out.append(heapq.heappop(self._heap)[2])
+        return out
+
+    def pending(self) -> int:
+        return len(self._heap)
 
 
 ThroughputFn = Callable[[FrontierPoint, int], float]
@@ -111,11 +168,10 @@ class SimulatedEngine:
         self.replans = 0
         #: full replan history, oldest first (assertable trace)
         self.applied: List[FrontierPoint] = []
-        self.metrics: Dict[str, float] = {
-            "iterations": 0, "tokens_generated": 0,
-            "decode_s": 0.0, "transfer_s": 0.0,
-            "transfer_exposed_s": 0.0,
-        }
+        # the FULL shared schema (DESIGN.md §14.2): controllers written
+        # against the real engine's dict shape see the same keys here —
+        # sim-irrelevant ones simply stay zero.
+        self.metrics: Dict[str, float] = base_metrics()
         self._latencies: List[float] = []
 
     # -- engine interface ---------------------------------------------------
@@ -164,6 +220,7 @@ class SimulatedEngine:
         self.metrics["decode_s"] += dt
         self.metrics["transfer_s"] += transfer
         self.metrics["transfer_exposed_s"] += exposed
+        self.metrics["transfer_overlapped_s"] += transfer - exposed
         self.clock.advance(dt + exposed)
         if self._latency_fn is not None:
             self._latencies.append(float(self._latency_fn(self.point, it)))

@@ -1,0 +1,392 @@
+"""Trace-driven control plane (DESIGN.md §14): determinism,
+no-starvation under preemption, autoscaler hysteresis, the
+one-arbitration-per-budget-shock invariant at 1000-tenant scale, the
+golden scenario report, and the pluggable policy seams.
+
+Regenerate the golden fixture after an INTENTIONAL behaviour change:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/test_control_plane.py -k golden -q
+"""
+import dataclasses
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pareto import ParetoFrontier, QoSTarget
+from repro.serving.control_plane import (ControlPlane, DEFAULT_SLO_CLASSES,
+                                         MMPPArrivals, ReplicaAutoscaler,
+                                         Scenario, build_population,
+                                         get_scenario, make_arrival_model,
+                                         run_scenario, trace_events)
+from repro.serving.multi import (FloorSaturationUtility, ResourceArbiter,
+                                 TenantSpec, UtilityPolicy)
+from repro.serving.qos import (BandedWalkPolicy, QoSController,
+                               QoSControllerConfig, WalkPolicy)
+from repro.serving.simulator import SimulatedEngine
+
+GIB = 2**30
+FIXTURES = Path(__file__).parent / "fixtures"
+GOLDEN = FIXTURES / "sim_control_plane_golden.json"
+
+MIXTRAL = get_config("mixtral-8x7b")
+
+
+@pytest.fixture(scope="module")
+def frontier():
+    return ParetoFrontier(MIXTRAL)
+
+
+@pytest.fixture(scope="module")
+def golden_plane(frontier):
+    return run_scenario(get_scenario("golden-32"), frontier=frontier)
+
+
+# ---------------------------------------------------------------------------
+# trace layer
+# ---------------------------------------------------------------------------
+class TestTraces:
+    def test_population_replays_identically(self):
+        scn = get_scenario("golden-32")
+        p1 = build_population(scn, 3, np.random.default_rng(scn.seed))
+        p2 = build_population(scn, 3, np.random.default_rng(scn.seed))
+        for f in ("join_t", "leave_t", "base_rate", "cls", "phase"):
+            np.testing.assert_array_equal(getattr(p1, f), getattr(p2, f))
+        assert trace_events(p1, scn) == trace_events(p2, scn)
+
+    def test_trace_events_sorted_and_complete(self):
+        scn = get_scenario("golden-32")
+        pop = build_population(scn, 3, np.random.default_rng(scn.seed))
+        evs = trace_events(pop, scn)
+        assert all(evs[i].t <= evs[i + 1].t for i in range(len(evs) - 1))
+        kinds = [e.kind for e in evs]
+        assert kinds.count("budget") == len(scn.budget_shocks)
+        n_churn = int(round(scn.churn_fraction * scn.tenants))
+        assert kinds.count("join") == n_churn // 2
+        assert kinds.count("leave") == n_churn - n_churn // 2
+
+    def test_class_mix_exact(self):
+        scn = get_scenario("diurnal-1k")
+        pop = build_population(scn, 3, np.random.default_rng(0))
+        for c, (_, frac) in enumerate(scn.class_mix):
+            assert int((pop.cls == c).sum()) == int(round(frac * scn.tenants))
+
+    def test_arrivals_churn_independent_stream(self):
+        """Arrivals draw over the FULL population each tick, so the rng
+        stream position — and thus every other tenant's sample — is
+        identical whether or not some tenant is active."""
+        scn = get_scenario("steady-64")
+        pop = build_population(scn, 3, np.random.default_rng(7))
+        model = make_arrival_model(scn, pop)
+        act_all = np.ones(pop.n, dtype=bool)
+        act_some = act_all.copy()
+        act_some[::3] = False
+        r1, r2 = np.random.default_rng(1), np.random.default_rng(1)
+        model.reset(pop.n, r1)
+        c1 = model.counts(0.0, scn.tick_s, pop.base_rate, act_all, r1)
+        model.reset(pop.n, r2)
+        c2 = model.counts(0.0, scn.tick_s, pop.base_rate, act_some, r2)
+        np.testing.assert_array_equal(c1[act_some], c2[act_some])
+        assert (c2[~act_some] == 0).all()
+
+    def test_mmpp_requires_reset(self):
+        m = MMPPArrivals(6.0, 0.04, 0.25)
+        with pytest.raises(RuntimeError, match="reset"):
+            m.mean_rate(0.0, np.ones(4))
+
+    def test_diurnal_mean_rate_swings(self):
+        scn = get_scenario("diurnal-1k")
+        pop = build_population(scn, 3, np.random.default_rng(0))
+        model = make_arrival_model(scn, pop)
+        rates = [model.mean_rate(t, pop.base_rate).sum()
+                 for t in np.linspace(0, scn.diurnal_period_s, 40)]
+        assert max(rates) > 1.3 * min(rates)
+
+    def test_smoke_variant_truncates(self):
+        scn = get_scenario("diurnal-1k")
+        s = scn.smoke()
+        assert s.horizon_s == scn.smoke_horizon_s
+        assert all(t < s.horizon_s for t, _ in s.budget_shocks)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+class TestDeterminism:
+    def test_byte_identical_reports(self, frontier):
+        scn = get_scenario("golden-32").smoke()
+        b1 = run_scenario(scn, frontier=frontier).report_bytes()
+        b2 = run_scenario(scn, frontier=frontier).report_bytes()
+        assert b1 == b2
+
+    def test_seed_changes_report(self, frontier):
+        scn = get_scenario("golden-32").smoke()
+        b1 = run_scenario(scn, frontier=frontier).report_bytes()
+        b2 = run_scenario(dataclasses.replace(scn, seed=1),
+                          frontier=frontier).report_bytes()
+        assert b1 != b2
+
+    def test_run_is_single_shot(self, frontier):
+        plane = ControlPlane(get_scenario("golden-32").smoke(),
+                             frontier=frontier)
+        plane.run()
+        with pytest.raises(RuntimeError, match="single-shot"):
+            plane.run()
+
+    def test_golden_fixture(self, golden_plane):
+        body = golden_plane.report_bytes()
+        if os.environ.get("REGEN_GOLDEN"):
+            GOLDEN.write_bytes(body)
+        assert GOLDEN.exists(), "run with REGEN_GOLDEN=1 to create"
+        assert body == GOLDEN.read_bytes(), (
+            "golden-32 report drifted; regenerate the fixture with "
+            "REGEN_GOLDEN=1 if the change is intentional")
+
+
+# ---------------------------------------------------------------------------
+# the reference scenario exercises the whole control surface
+# ---------------------------------------------------------------------------
+class TestGoldenScenario:
+    def test_accounting_closes(self, golden_plane):
+        led = golden_plane.ledger
+        backlog = float(golden_plane.queue.sum())
+        assert float(led.arrived.sum()) == pytest.approx(
+            float(led.served.sum()) + float(led.dropped.sum()) + backlog)
+
+    def test_preemption_and_autoscaling_happened(self, golden_plane):
+        t = golden_plane.report()["totals"]
+        assert t["preemptions"] >= 1
+        assert t["scale_ups"] + t["scale_downs"] >= 1
+        assert t["replans"] >= 1
+
+    def test_violation_under_ceiling(self, golden_plane):
+        t = golden_plane.report()["totals"]
+        assert t["violation_rate"] <= golden_plane.scn.violation_ceiling
+
+    def test_budget_respected_at_end(self, golden_plane):
+        t = golden_plane.report()["totals"]
+        assert t["used_bytes_final"] <= golden_plane.budget_bytes
+
+    def test_replan_reports_flow_through_diff_path(self, golden_plane):
+        assert golden_plane.reports, "no ReplanReports recorded"
+        for rep in golden_plane.reports:
+            assert rep.tenant.startswith("replica-")
+            assert rep.migrated_bytes >= 0
+            assert rep.downtime_s >= 0.0
+
+    def test_event_log_capped(self, golden_plane):
+        t = golden_plane.report()["totals"]
+        assert t["events_recorded"] <= golden_plane.scn.max_recorded_events
+        assert t["events_recorded"] + t["events_dropped"] >= \
+            t["arbitrations"]
+
+
+# ---------------------------------------------------------------------------
+# no starvation: aging forces admission, weighted-fair service
+# guarantees progress once admitted
+# ---------------------------------------------------------------------------
+class TestNoStarvation:
+    def test_max_unserved_span_bounded_by_aging(self, golden_plane):
+        scn = golden_plane.scn
+        led = golden_plane.ledger
+        aging = np.array([c.aging_s for c in DEFAULT_SLO_CLASSES])
+        bound = aging[golden_plane.cls] + 2 * scn.tick_s
+        assert (led.max_unserved_span_s <= bound + 1e-6).all(), (
+            "some tenant starved past its aging window: spans="
+            f"{led.max_unserved_span_s.max()}")
+
+    def test_preempted_tenants_made_progress(self, golden_plane):
+        led = golden_plane.ledger
+        pre = led.preemptions > 0
+        assert pre.any()
+        assert (led.served[pre] > 0).all()
+
+    def test_aging_forces_admission_and_bounds_spans(self, frontier):
+        """A fleet pinned far below demand: normal admission fails for
+        most tenants, so ONLY the aging path can give them service — and
+        it must, within aging_s + two ticks, despite the preemption
+        churn it causes."""
+        from repro.serving.control_plane import SLOClass
+        classes = tuple(
+            SLOClass(n, p, f, cap, aging_s=120.0, weight=w)
+            for (n, p, f, cap, w) in [("gold", 2, 4.0, 2400.0, 4.0),
+                                      ("silver", 1, 1.0, 1200.0, 2.0),
+                                      ("bronze", 0, 0.25, 600.0, 1.0)])
+        scn = Scenario(
+            name="starve", tenants=24, horizon_s=2000.0, tick_s=20.0,
+            rate_range_tps=(0.8, 1.2), slots_per_replica=2,
+            budget_bytes=7.0 * GIB, min_replicas=2, max_replicas=2,
+            util_band=(0.01, 0.999),
+        )
+        plane = ControlPlane(scn, classes=classes, frontier=frontier)
+        plane.run()
+        t = plane.report()["totals"]
+        assert t["forced_admissions"] >= 1
+        assert (plane.ledger.max_unserved_span_s
+                <= 120.0 + 2 * scn.tick_s + 1e-6).all()
+        # every tenant got SOME service despite 6x overcommit
+        assert (plane.ledger.served[plane.active
+                                    | (plane.pop.join_t <= 0)] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+class TestAutoscaler:
+    def test_steady_trace_never_oscillates(self, frontier):
+        plane = run_scenario(get_scenario("steady-64"), frontier=frontier)
+        t = plane.report()["totals"]
+        assert t["scale_ups"] == 0 and t["scale_downs"] == 0
+        assert t["preemptions"] == 0
+
+    def test_patience_required(self):
+        a = ReplicaAutoscaler(band=(0.4, 0.85), patience_ticks=3,
+                              cooldown_s=0.0)
+        assert a.step(0.0, 0.95, 2) == 0
+        assert a.step(1.0, 0.95, 2) == 0
+        assert a.step(2.0, 0.95, 2) == 1      # third consecutive breach
+        # streak resets after the action
+        assert a.step(3.0, 0.95, 3) == 0
+
+    def test_dip_resets_streak(self):
+        a = ReplicaAutoscaler(patience_ticks=3, cooldown_s=0.0)
+        a.step(0.0, 0.9, 2)
+        a.step(1.0, 0.9, 2)
+        a.step(2.0, 0.5, 2)                   # back in band
+        assert a.step(3.0, 0.9, 2) == 0       # streak restarted
+
+    def test_cooldown_blocks_consecutive_actions(self):
+        a = ReplicaAutoscaler(patience_ticks=1, cooldown_s=100.0)
+        assert a.step(0.0, 0.95, 2) == 1
+        assert a.step(50.0, 0.95, 3) == 0     # cooling down
+        assert a.step(150.0, 0.95, 3) == 1
+
+    def test_scale_down_projection_guard(self):
+        a = ReplicaAutoscaler(band=(0.4, 0.85), patience_ticks=1,
+                              cooldown_s=0.0)
+        # util 0.35 < lo, but 0.35 * 3/2 = 0.525 fits under hi: allowed
+        assert a.step(0.0, 0.35, 3) == -1
+        # util 0.39 < lo but projected 0.39 * 2/1 = 0.78 is within
+        # margin of hi (0.85 * 0.95 = 0.8075): allowed
+        assert a.step(1.0, 0.39, 2) == -1
+        # projected 0.42 * 2/1 = 0.84 > 0.8075: vetoed
+        assert a.step(2.0, 0.42, 2) == 0
+
+    def test_bounds_and_feasibility_respected(self):
+        a = ReplicaAutoscaler(patience_ticks=1, cooldown_s=0.0,
+                              min_replicas=2, max_replicas=4)
+        assert a.step(0.0, 0.95, 4) == 0            # at max
+        assert a.step(1.0, 0.95, 3, can_add=False) == 0
+        assert a.step(2.0, 0.05, 2) == 0            # at min
+        assert a.step(3.0, 0.05, 3, can_remove=False) == 0
+
+    def test_bad_band_rejected(self):
+        with pytest.raises(ValueError, match="band"):
+            ReplicaAutoscaler(band=(0.9, 0.5))
+
+
+# ---------------------------------------------------------------------------
+# exactly one re-arbitration per budget shock, at 1000-tenant scale
+# ---------------------------------------------------------------------------
+class TestArbitrationTriggers:
+    def test_one_arbitration_per_shock_1k(self, frontier):
+        scn = Scenario(
+            name="shock-1k", tenants=1000, horizon_s=2500.0, tick_s=25.0,
+            arrival="poisson", rate_range_tps=(0.05, 0.15),
+            budget_bytes=400.0 * GIB, slots_per_replica=24,
+            min_replicas=2, max_replicas=2,
+            budget_shocks=((1000.0, 0.9), (2000.0, 1.0)),
+            util_band=(0.005, 0.999),
+        )
+        plane = run_scenario(scn, frontier=frontier)
+        t = plane.report()["totals"]
+        assert t["preemptions"] == 0
+        assert t["scale_ups"] == 0 and t["scale_downs"] == 0
+        # initial + one per shock, nothing else
+        assert t["arbitrations"] == 1 + len(scn.budget_shocks)
+
+    def test_infeasible_budget_raises(self, frontier):
+        from repro.serving.multi import GlobalBudgetInfeasible
+        scn = Scenario(name="tiny", tenants=4, horizon_s=100.0,
+                       tick_s=10.0, budget_bytes=1.0 * GIB,
+                       min_replicas=2)
+        with pytest.raises(GlobalBudgetInfeasible):
+            run_scenario(scn, frontier=frontier)
+
+    def test_deep_shock_retires_replicas(self, frontier):
+        """A shock below the fleet's cheapest joint footprint forcibly
+        retires replicas down to feasibility, still with ONE
+        re-arbitration charged to the shock itself."""
+        cheapest = min(p.qos.device_bytes for p in frontier.points)
+        scn = Scenario(
+            name="crunch", tenants=32, horizon_s=600.0, tick_s=20.0,
+            rate_range_tps=(0.05, 0.15), slots_per_replica=4,
+            budget_bytes=8.0 * cheapest, min_replicas=2, max_replicas=4,
+            budget_shocks=((300.0, 0.3),),   # fits 2 of 4 replicas
+            util_band=(0.005, 0.999),
+        )
+        plane = ControlPlane(scn, frontier=frontier)
+        for _ in range(2):
+            plane._add_replica(0.0)          # start with 4 replicas
+        plane.run()
+        t = plane.report()["totals"]
+        assert t["replicas_final"] == 2
+        assert t["scale_downs"] >= 2
+        assert t["arbitrations"] == 1 + 1    # initial + the shock
+
+
+# ---------------------------------------------------------------------------
+# pluggable policy seams (DESIGN.md §14.4)
+# ---------------------------------------------------------------------------
+class TestPolicyPlugins:
+    def test_custom_walk_policy_drives_controller(self, frontier):
+        class Pin(WalkPolicy):
+            """Always returns the fastest point, whatever is measured."""
+            def decide(self, ctl, measured):
+                return max(ctl.frontier.points,
+                           key=lambda p: p.qos.tokens_per_s)
+
+        from repro.serving.simulator import run_scripted
+        eng = SimulatedEngine(model_error=0.5)
+        ctl = QoSController(eng, frontier, policy=Pin())
+        ctl.set_target(QoSTarget(min_tokens_per_s=1.0))
+        run_scripted(eng, ctl, 40)
+        fastest = max(frontier.points, key=lambda p: p.qos.tokens_per_s)
+        assert ctl.point is fastest
+
+    def test_default_policy_is_banded_walk(self, frontier):
+        eng = SimulatedEngine()
+        ctl = QoSController(eng, frontier)
+        assert isinstance(ctl.policy, BandedWalkPolicy)
+
+    def test_custom_utility_changes_arbitration(self, frontier):
+        class CheapestWins(UtilityPolicy):
+            """Negative-footprint utility: the water-fill gains nothing
+            from upgrades, so everyone stays at their cheapest point."""
+            def build(self, feas, target, derate):
+                return lambda p: -float(p.qos.device_bytes)
+
+        specs = [(TenantSpec(f"t{i}", QoSTarget(min_tokens_per_s=20.0)),
+                  frontier, 1.0) for i in range(3)]
+        sel_default, used_default = ResourceArbiter().arbitrate(
+            specs, 200.0 * GIB)
+        sel_cheap, used_cheap = ResourceArbiter(
+            utility=CheapestWins()).arbitrate(specs, 200.0 * GIB)
+        cheapest = min(p.qos.device_bytes for p in frontier.points)
+        assert used_cheap == pytest.approx(3 * cheapest)
+        assert used_default > used_cheap    # default water-fills upward
+
+    def test_floor_saturation_handles_zero_floor(self, frontier):
+        u = FloorSaturationUtility().build(
+            frontier.points, QoSTarget(min_tokens_per_s=0.0), 1.0)
+        assert all(np.isfinite(u(p)) for p in frontier.points)
+
+    def test_scenario_floor_weight_reaches_arbiter(self, frontier):
+        scn = dataclasses.replace(get_scenario("steady-64"),
+                                  floor_weight=123.0)
+        plane = ControlPlane(scn, frontier=frontier)
+        assert plane.arbiter.floor_weight == 123.0

@@ -1,0 +1,110 @@
+"""VirtualClock guards + event heap, and the sim/real engine metric-key
+parity contract (DESIGN.md §14.2).
+
+The control plane schedules its replayable trace on the clock's event
+heap and charges every accumulated ``*_s`` metric off clock deltas, so
+monotonicity violations must raise instead of silently rewinding; and
+controllers written against the real engine's ``metrics`` dict must see
+the same key set on the simulated one (the set drifted twice before the
+shared schema in ``repro.serving.metrics`` pinned it).
+"""
+import math
+
+import pytest
+
+from repro.serving.metrics import ENGINE_METRIC_SCHEMA, base_metrics
+from repro.serving.simulator import SimulatedEngine, VirtualClock
+
+
+class TestVirtualClock:
+    def test_advance_and_now(self):
+        c = VirtualClock()
+        assert c.now() == 0.0
+        assert c.advance(2.5) == 2.5
+        assert c.now() == 2.5
+
+    def test_negative_advance_raises(self):
+        c = VirtualClock(10.0)
+        with pytest.raises(ValueError, match="forward"):
+            c.advance(-1e-9)
+        assert c.now() == 10.0
+
+    def test_nan_advance_raises(self):
+        c = VirtualClock()
+        with pytest.raises(ValueError):
+            c.advance(math.nan)
+
+    def test_advance_to_backwards_raises(self):
+        c = VirtualClock(5.0)
+        with pytest.raises(ValueError, match="forward"):
+            c.advance_to(4.999)
+        assert c.advance_to(5.0) == 5.0   # no-op jump is legal
+        with pytest.raises(ValueError):
+            c.advance_to(math.nan)
+
+    def test_schedule_into_past_raises(self):
+        c = VirtualClock(100.0)
+        with pytest.raises(ValueError, match="past"):
+            c.schedule_at(99.0, "late")
+
+    def test_heap_orders_by_time_then_insertion(self):
+        c = VirtualClock()
+        c.schedule_at(30.0, "c")
+        c.schedule_at(10.0, "a1")
+        c.schedule_at(10.0, "a2")    # same instant: FIFO
+        c.schedule_at(20.0, "b")
+        assert c.peek() == 10.0
+        assert c.pending() == 4
+        c.advance_to(20.0)
+        assert c.pop_due() == ["a1", "a2", "b"]
+        assert c.pending() == 1
+        assert c.pop_due() == []     # nothing else due yet
+        c.advance_to(50.0)
+        assert c.pop_due() == ["c"]
+        assert c.peek() is None
+
+    def test_pop_due_until_clamped_to_now(self):
+        c = VirtualClock()
+        c.schedule_at(10.0, "x")
+        # an `until` beyond now must not release future events
+        assert c.pop_due(until=99.0) == []
+        c.advance_to(10.0)
+        assert c.pop_due(until=5.0) == []
+        assert c.pop_due(until=10.0) == ["x"]
+
+
+class TestMetricParity:
+    def test_simulated_engine_has_full_schema(self):
+        eng = SimulatedEngine()
+        assert set(eng.metrics) == set(ENGINE_METRIC_SCHEMA)
+
+    def test_base_metrics_returns_fresh_typed_zeros(self):
+        a, b = base_metrics(), base_metrics()
+        assert a == b and a is not b
+        for k, v in a.items():
+            assert v == 0
+            assert type(v) is type(ENGINE_METRIC_SCHEMA[k])
+
+    def test_parity_keys_cover_transfer_and_kv_accounting(self):
+        # the two historic drift points: PR 5 transfer split, PR 6 kv
+        for k in ("transfer_exposed_s", "transfer_overlapped_s",
+                  "kv_allocated_bytes", "kv_used_bytes",
+                  "kv_alloc_byte_iters", "kv_used_byte_iters",
+                  "kv_capacity_bytes"):
+            assert k in ENGINE_METRIC_SCHEMA
+
+    def test_real_engine_matches_schema(self):
+        jax = pytest.importorskip("jax")
+        from repro.configs import get_config, reduce_for_smoke
+        from repro.models.model import build_model
+        from repro.serving.engine import AdaptiveServingEngine
+        cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        eng = AdaptiveServingEngine(cfg, params, max_batch=2, max_len=24)
+        # construction-time key set IS the contract (keys added lazily
+        # after a reconfig — last_migrated_* — are excluded, see
+        # repro/serving/metrics.py)
+        assert set(eng.metrics) == set(ENGINE_METRIC_SCHEMA)
+        for k, v in ENGINE_METRIC_SCHEMA.items():
+            assert type(eng.metrics[k]) is type(v), k
