@@ -133,11 +133,20 @@ def device_bytes(cfg: ModelConfig, plan: PrecisionPlan) -> int:
     return total
 
 
-def quality_proxy(cfg: ModelConfig, plan: PrecisionPlan) -> float:
+def quality_proxy(cfg: ModelConfig, plan: PrecisionPlan,
+                  profile=None) -> float:
     """Monotone perplexity-ratio proxy, calibrated on the paper's Table 1
     (all experts 4-bit ~= +7% ppl, 2.62->2.80 WikiText2; int8 ~= +2%);
     linear per rung in the rung's expert fraction (Fig. 2 is ~linear with
-    noise), summed over the ladder's quantized rungs ascending."""
+    noise), summed over the ladder's quantized rungs ascending.
+
+    With a calibrated :class:`~repro.core.sensitivity.SensitivityProfile`
+    the flat per-rung price becomes the traffic-weighted per-expert sum
+    ``1 + sum freq[l,e] * sens[l,e,bits]`` (DESIGN.md §15). A ``None`` or
+    *uniform* profile executes the historical code path verbatim — the
+    frontier golden fixture pins this bit-for-bit."""
+    if profile is not None and not profile.is_uniform():
+        return 1.0 + profile.quality_cost(plan)
     proxy = 1.0
     for b in quantized_rungs(plan.ladder):
         frac = float((plan.bits == b).mean())
@@ -180,7 +189,7 @@ def kv_bytes_paged(cfg: ModelConfig, pages: int, page_size: int) -> int:
 
 def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
                  hw: HardwareModel = HardwareModel(),
-                 batch_size: int = 1) -> QoSEstimate:
+                 batch_size: int = 1, profile=None) -> QoSEstimate:
     """Decode-regime tokens/s for one replica under the plan."""
     e = cfg.moe
     assert e is not None, "QoS planner applies to MoE archs (DESIGN.md §5)"
@@ -224,7 +233,7 @@ def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
         t_exposed_ms=t_exposed * 1e3,
         hit_rate=hit,
         device_bytes=device_bytes(cfg, plan),
-        quality_proxy=quality_proxy(cfg, plan),
+        quality_proxy=quality_proxy(cfg, plan, profile),
     )
 
 

@@ -60,6 +60,21 @@ class capture_routing:
         _TRACE.ids = None
 
 
+class capture_moe_inputs:
+    """Collect each MoE layer's router inputs from eager forwards: one
+    ``(x (T,d) f32, probs (T,E) f32)`` pair per layer, in layer order.
+    The sensitivity calibration pass (core/sensitivity.py, DESIGN.md
+    §15) replays the captured tokens through each expert's FFN at every
+    ladder rung to measure activation-weighted quantization error."""
+
+    def __enter__(self):
+        _TRACE.moe = []
+        return _TRACE.moe
+
+    def __exit__(self, *exc):
+        _TRACE.moe = None
+
+
 def route(router_w: jax.Array, x: jax.Array, moe: MoEConfig, *,
           train: bool) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
     """x: (T, d) -> (weights (T,k) f32, ids (T,k) i32, aux losses)."""
@@ -69,6 +84,10 @@ def route(router_w: jax.Array, x: jax.Array, moe: MoEConfig, *,
     trace = getattr(_TRACE, "ids", None)
     if trace is not None and not isinstance(ids, jax.core.Tracer):
         trace.append(np.asarray(ids))
+    moe_trace = getattr(_TRACE, "moe", None)
+    if moe_trace is not None and not isinstance(probs, jax.core.Tracer):
+        moe_trace.append((np.asarray(x, np.float32),
+                          np.asarray(probs, np.float32)))
     weights = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
     aux: Dict[str, jax.Array] = {}
     if train:

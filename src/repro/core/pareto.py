@@ -196,7 +196,8 @@ class ParetoFrontier:
                  hw: HardwareModel = HardwareModel(), *,
                  batch_size: int = 1, seed: int = 0,
                  residency_step: Optional[int] = None,
-                 max_enum_points: int = 8192):
+                 max_enum_points: int = 8192,
+                 profile=None):
         if cfg.moe is None:
             raise ValueError(f"{cfg.arch_id}: the MoP frontier needs routed "
                              "experts (DESIGN.md §5)")
@@ -206,6 +207,11 @@ class ParetoFrontier:
         self.seed = seed
         self.residency_step = residency_step
         self.max_enum_points = max_enum_points
+        #: optional SensitivityProfile (DESIGN.md §15): re-prices every
+        #: enumerated plan's quality_proxy with the traffic-weighted
+        #: per-expert objective, re-ranking the dominant set. None (or a
+        #: uniform profile) keeps the legacy flat pricing bit-for-bit.
+        self.profile = profile
         self.ladder = validate_ladder(cfg.mop.precision_ladder)
         layers = cfg.num_layers
         e = cfg.moe.num_experts
@@ -226,7 +232,8 @@ class ParetoFrontier:
                     layers, e, counts, ladder=self.ladder,
                     group_size=cfg.mop.group_size,
                     seed=seed, resident_experts=r)
-                qos = cost_model.estimate_qos(cfg, plan, hw, batch_size)
+                qos = cost_model.estimate_qos(cfg, plan, hw, batch_size,
+                                              profile)
                 per_rung = tuple(total - nq if b >= 16 else counts[b]
                                  for b in self.ladder)
                 pts.append(FrontierPoint(num_q_experts=nq,
@@ -307,7 +314,19 @@ class ParetoFrontier:
         return ParetoFrontier(self.cfg, hw, batch_size=self.batch_size,
                               seed=self.seed,
                               residency_step=self.residency_step,
-                              max_enum_points=self.max_enum_points)
+                              max_enum_points=self.max_enum_points,
+                              profile=self.profile)
+
+    def profile_variant(self, profile) -> "ParetoFrontier":
+        """Re-enumerate and re-rank under a (new) sensitivity profile
+        (DESIGN.md §15): identical axes/plans, only the quality pricing
+        changes. ``profile=None`` (or a uniform profile) returns a
+        frontier bit-identical to the legacy flat-cost ranking."""
+        return ParetoFrontier(self.cfg, self.hw,
+                              batch_size=self.batch_size, seed=self.seed,
+                              residency_step=self.residency_step,
+                              max_enum_points=self.max_enum_points,
+                              profile=profile)
 
     # -- queries -----------------------------------------------------------
     def feasible(self, target: QoSTarget) -> List[FrontierPoint]:

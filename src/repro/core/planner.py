@@ -70,7 +70,7 @@ class AdaptivePlanner:
 
     def __init__(self, cfg: ModelConfig,
                  hw: cost_model.HardwareModel = cost_model.HardwareModel(),
-                 seed: int = 0):
+                 seed: int = 0, profile=None):
         if cfg.moe is None:
             raise ValueError(
                 f"{cfg.arch_id}: MoP planning needs routed experts "
@@ -78,6 +78,9 @@ class AdaptivePlanner:
         self.cfg = cfg
         self.hw = hw
         self.seed = seed
+        #: optional SensitivityProfile (DESIGN.md §15): data-driven
+        #: quality pricing for plan()/frontier(). None = legacy flat cost.
+        self.profile = profile
         self.ladder = validate_ladder(cfg.mop.precision_ladder)
         self.current: Optional[PlanResult] = None
         self._frontiers: dict = {}   # batch_size -> ParetoFrontier
@@ -148,7 +151,8 @@ class AdaptivePlanner:
             self.cfg.num_layers, self.cfg.moe.num_experts, counts,
             ladder=self.ladder, group_size=self.cfg.mop.group_size,
             seed=self.seed, resident_experts=resident)
-        qos = cost_model.estimate_qos(self.cfg, plan, self.hw, batch_size)
+        qos = cost_model.estimate_qos(self.cfg, plan, self.hw, batch_size,
+                                      self.profile)
         if qos.device_bytes > mem_budget_bytes * 1.001:
             raise RuntimeError(
                 f"planner bug: footprint {qos.device_bytes} > budget")
@@ -220,6 +224,14 @@ class AdaptivePlanner:
         self.hw = hw
         self._frontiers.clear()
 
+    def set_profile(self, profile) -> None:
+        """Swap the sensitivity profile (DESIGN.md §15) — e.g. after an
+        offline calibration pass or when the dynamic controller folds in
+        fresh traffic stats — and drop cached frontiers so future
+        rankings price quality per expert. The active plan is kept."""
+        self.profile = profile
+        self._frontiers.clear()
+
     def frontier(self, batch_size: int = 1) -> "ParetoFrontier":
         """The ParetoFrontier for this planner's (cfg, hw, seed) — built
         once per batch size and cached (DESIGN.md §9). Frontier plans are
@@ -227,7 +239,8 @@ class AdaptivePlanner:
         if batch_size not in self._frontiers:
             from repro.core.pareto import ParetoFrontier
             self._frontiers[batch_size] = ParetoFrontier(
-                self.cfg, self.hw, batch_size=batch_size, seed=self.seed)
+                self.cfg, self.hw, batch_size=batch_size, seed=self.seed,
+                profile=self.profile)
         return self._frontiers[batch_size]
 
     def sweep(self, mem_budget_bytes: float, batch_size: int = 1,

@@ -22,6 +22,19 @@ the per-layer lookahead pipeline, and throughput charges only the
 EXPOSED transfer time; ``off`` (default) keeps the paper's serial
 staging so the two modes A/B against each other.
 
+``--calibrate`` runs the offline sensitivity pass (DESIGN.md §15) and
+writes a byte-deterministic per-(layer, expert) profile — same seed,
+same bytes — then exits:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --calibrate --calibrate-out results/sensitivity_profile.json
+
+    # serve with data-driven quality pricing + online rung swaps that
+    # chase the measured routing histogram (hysteresis-guarded):
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --profile results/sensitivity_profile.json --dynamic-precision \
+        --max-ppl-x 1.05 --requests 8
+
 The imperative spelling (``--preference throughput|quality --num-q N``)
 is kept as a deprecated compatibility path over ``engine.configure``.
 
@@ -64,7 +77,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
+from repro.core.dynamic_precision import DynamicPrecisionController
 from repro.core.expert_cache import AsyncExpertCache, ExpertCache
+from repro.core.sensitivity import SensitivityProfile, calibrate_sensitivity
 from repro.ft.checkpoint import CheckpointManager
 from repro.models.model import build_model
 from repro.serving.api import (EngineConfig, MultiTenantEngine, QoSTarget,
@@ -103,7 +118,7 @@ def _tenant_target(t: dict, full16: float) -> QoSTarget:
         mem_budget_bytes=cap * full16 if cap else None)
 
 
-def _serve_tenants(args, cfg, model, params0):
+def _serve_tenants(args, cfg, model, params0, profile=None):
     """--tenants mode: N engines, one budget, one arbiter (DESIGN.md §10)."""
     spec = json.loads(Path(args.tenants).read_text())
     total = cfg.num_layers * cfg.moe.num_experts
@@ -130,9 +145,18 @@ def _serve_tenants(args, cfg, model, params0):
             EngineConfig(max_slots=2, max_len=16 + args.max_new_tokens,
                          overlap=overlap),
             expert_cache=shared.scoped(t["name"]))
+        if profile is not None:
+            engine.planner.set_profile(profile)
+        dyn = None
+        if args.dynamic_precision:
+            # per-tenant controller: each engine's own routing histogram
+            # drives its swaps; reports fan into the arbiter's ledger
+            dyn = DynamicPrecisionController(
+                engine, profile if profile is not None
+                else SensitivityProfile.uniform(cfg))
         mt.add_tenant(TenantSpec(t["name"], _tenant_target(t, full16),
                                  weight=float(t.get("weight", 1.0))),
-                      engine)
+                      engine, dynamic=dyn)
     rng = np.random.default_rng(0)
     for phase, frac in enumerate(fracs):
         reports0 = len(mt.reports)
@@ -168,6 +192,13 @@ def _serve_tenants(args, cfg, model, params0):
                   f"p50 {lat['p50'] * 1e3:.0f} ms "
                   f"p95 {lat['p95'] * 1e3:.0f} ms "
                   f"kv_waste={tn.engine.kv_waste_fraction():.0%}")
+    if args.dynamic_precision:
+        for name, tn in mt.tenants.items():
+            dm = tn.dynamic.metrics
+            print(f"[serve]   {name}: dynamic precision "
+                  f"{dm['swaps']:.0f} swaps "
+                  f"({dm['rung_promotions']:.0f}p/"
+                  f"{dm['rung_demotions']:.0f}d)")
     print("[serve] " + mt.summary().replace("\n", "\n[serve] "))
     mt.close()                  # joins the shared async transfer workers
 
@@ -194,6 +225,27 @@ def main():
                          "'16,8,4' (DESIGN.md §11); default = the arch's "
                          "binary ladder (16,<bits>) reproducing boolean "
                          "plans bit-identically")
+    # -- sensitivity calibration + dynamic precision (DESIGN.md §15) ----
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the offline sensitivity calibration pass "
+                         "(activation-weighted per-expert quantization "
+                         "error), write the profile and exit; "
+                         "byte-deterministic per --calibrate-seed")
+    ap.add_argument("--calibrate-out",
+                    default="results/sensitivity_profile.json",
+                    help="where --calibrate writes the profile")
+    ap.add_argument("--calibrate-seed", type=int, default=0,
+                    help="seed for the calibration batch (same seed => "
+                         "byte-identical profile)")
+    ap.add_argument("--profile", default=None,
+                    help="serve with a calibrated sensitivity profile: "
+                         "the frontier prices quality per (layer, "
+                         "expert) instead of the flat rung table")
+    ap.add_argument("--dynamic-precision", action="store_true",
+                    help="online controller (DESIGN.md §15): folds the "
+                         "measured routing histogram into the profile "
+                         "and issues hysteresis-guarded byte-neutral "
+                         "rung swaps between decode iterations")
     # -- deprecated imperative knobs ------------------------------------
     ap.add_argument("--preference", default=None,
                     choices=("throughput", "quality"),
@@ -241,8 +293,26 @@ def main():
     else:
         params = model.init(jax.random.key(0))
 
+    if args.calibrate:
+        prof = calibrate_sensitivity(cfg, params,
+                                     seed=args.calibrate_seed)
+        out = Path(args.calibrate_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        prof.save(out)
+        print(f"[serve] sensitivity profile -> {out} "
+              f"(seed {args.calibrate_seed}, "
+              f"{prof.shape[0]}x{prof.shape[1]} experts, "
+              f"rungs {sorted(prof.sens)})")
+        return
+
+    profile = None
+    if args.profile:
+        profile = SensitivityProfile.load(args.profile)
+        print(f"[serve] sensitivity profile {args.profile} "
+              f"({'uniform' if profile.is_uniform() else 'calibrated'})")
+
     if args.tenants:
-        _serve_tenants(args, cfg, model, params)
+        _serve_tenants(args, cfg, model, params, profile)
         return
 
     engine = build_engine(cfg, params, EngineConfig(
@@ -251,7 +321,16 @@ def main():
     if args.overlap == "on":
         print("[serve] async overlapped expert streaming ON "
               "(DESIGN.md §12)")
-    controller = QoSController(engine)
+    if profile is not None:
+        engine.planner.set_profile(profile)
+    dynamic = None
+    if args.dynamic_precision:
+        dynamic = DynamicPrecisionController(
+            engine, profile if profile is not None
+            else SensitivityProfile.uniform(cfg))
+        print("[serve] dynamic precision ON (DESIGN.md §15): "
+              "hysteresis-guarded rung swaps chase measured hotness")
+    controller = QoSController(engine, dynamic=dynamic)
     full = engine.planner.size_ne + \
         engine.planner.num_experts_total * engine.planner.size_e16
     budget = args.budget_gb * 1e9 if args.budget_gb else full * 0.6
@@ -310,6 +389,13 @@ def main():
               f"waste={engine.kv_waste_fraction():.0%}")
         if controller.target is not None:
             print(f"[serve] {controller.summary()}")
+    if dynamic is not None:
+        dm = dynamic.metrics
+        print(f"[serve] dynamic precision: {dm['swaps']:.0f} swaps "
+              f"({dm['rung_promotions']:.0f} promotions / "
+              f"{dm['rung_demotions']:.0f} demotions) over "
+              f"{dm['steps']:.0f} steps, measured quality cost "
+              f"{dynamic.quality_cost_measured():.5f}")
     for rid in list(engine.done)[:2]:
         r = engine.result(rid)
         print(f"  {r.summary()} tokens={r.tokens[:12]}...")

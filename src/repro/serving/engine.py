@@ -67,13 +67,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cost_model import (HardwareModel, expert_access_stats,
-                                   kv_bytes_bucketed, kv_token_bytes)
+from repro.core.cost_model import (HardwareModel, estimate_qos,
+                                   expert_access_stats, kv_bytes_bucketed,
+                                   kv_token_bytes)
 from repro.core.expert_cache import (AsyncExpertCache, ExpertCache,
                                      PrefetchingExpertCache)
 from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
 from repro.core.planner import AdaptivePlanner, PlanResult
-from repro.core.precision_plan import DEVICE
+from repro.core.precision_plan import DEVICE, PrecisionPlan
 from repro.models.model import Model, apply_precision_plan, build_model
 from repro.serving.api import EngineConfig, ServeRequest, ServeResult
 from repro.serving.metrics import base_metrics
@@ -263,6 +264,15 @@ class AdaptiveServingEngine:
         #: pipelined mode's per-layer prediction: the previous
         #: iteration's demanded (non-resident) keys, layer-indexed
         self._prev_layer_keys: Optional[List[List[Tuple[int, int]]]] = None
+        #: accumulated routed-access histogram [L, E] over TRUE expert
+        #: ids (bank slots mapped back through the plan's expert order) —
+        #: the dynamic precision controller's traffic signal (DESIGN.md
+        #: §15). Deliberately NOT reset by ``_reconfigure``: the
+        #: histogram must survive (placement-only) replans; callers
+        #: window it via ``reset_route_counts()`` / their own snapshots.
+        self.route_counts: np.ndarray = np.zeros(
+            (cfg.num_layers, cfg.moe.num_experts if cfg.moe else 0),
+            np.int64)
         self._host_store: Dict[Tuple[int, int], Any] = {}
         self._resident: set = set()
         self._miss_bytes_per_tok = 0.0
@@ -423,10 +433,12 @@ class AdaptiveServingEngine:
             mem_budget_bytes, preference, num_q_experts,
             batch_size=self.max_slots, counts=counts)
         plan = result.plan
+        prev_plan = self._plan_result.plan \
+            if self._plan_result is not None else None
         sig = plan.bank_sizes()
-        rebuild = (self._plan_result is None
-                   or self._plan_result.plan.bank_sizes() != sig
-                   or self._plan_result.plan.seed != plan.seed)
+        rebuild = (prev_plan is None
+                   or prev_plan.bank_sizes() != sig
+                   or prev_plan.seed != plan.seed)
         drain_s = 0.0
         if rebuild:
             if self.scheduler.num_active:
@@ -454,11 +466,28 @@ class AdaptiveServingEngine:
         newly_resident = {
             (li, ei) for li, ei in np.argwhere(plan.location == DEVICE)}
         if not rebuild:
+            # Same bank shapes does NOT imply the same bits ASSIGNMENT:
+            # an earlier apply_bits_update may have swapped rungs between
+            # experts, while the planner's fresh plan carries the
+            # canonical assignment for these counts. Banks and staged
+            # host blobs must follow the new assignment or stale-rung
+            # weights get served (shapes unchanged, so no recompile).
+            rung_changed = set()
+            if (prev_plan.bits != plan.bits).any():
+                self._serve_params = apply_precision_plan(
+                    self.params_train, self.cfg, plan)
+                rung_changed = {
+                    (int(l), int(e)) for l, e in
+                    np.argwhere(prev_plan.bits != plan.bits)}
+                for k in list(self._host_store):
+                    if (k[0], k[1]) in rung_changed:
+                        del self._host_store[k]
             # placement-only: swap entries that moved on-device are now
-            # HBM-resident — drop them from the swap cache
+            # HBM-resident — drop them from the swap cache, along with
+            # any entry staged at a rung the new plan no longer assigns
             self.expert_cache.invalidate(
                 [k for k in self.expert_cache.resident_keys()
-                 if k[:2] in newly_resident])
+                 if k[:2] in newly_resident or k[:2] in rung_changed])
         self._resident = newly_resident
         self._prev_demanded = []     # stale-plan hints must not re-stage
         self._prev_layer_keys = None
@@ -479,6 +508,98 @@ class AdaptiveServingEngine:
                 self.metrics.get("migrated_bytes_total", 0) \
                 + delta["traffic_bytes"]
         return result
+
+    # ------------------------------------------------------------------
+    # Dynamic precision (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    @property
+    def current_plan(self) -> Optional[PrecisionPlan]:
+        """The active precision plan (None before the first replan)."""
+        return self._plan_result.plan if self._plan_result is not None \
+            else None
+
+    def reset_route_counts(self) -> None:
+        """Zero the accumulated routing histogram (callers that window
+        it — like the dynamic controller — snapshot instead)."""
+        self.route_counts[...] = 0
+
+    def apply_bits_update(self, new_bits: np.ndarray) -> Dict[str, Any]:
+        """In-place rung flips (DESIGN.md §15): same expert locations,
+        same per-layer rung counts, only the bits[L, E] ASSIGNMENT
+        changes. This is the :class:`DynamicPrecisionController`'s apply
+        path — diff-only, no planner replan, no drain, no recompile:
+
+        * bank shapes are unchanged (per-layer rung counts preserved by
+          contract), so the jitted step functions stay specialized and
+          only the serve-layout banks + router permutation rebuild;
+        * flipped experts resident in the swap cache are re-staged at
+          their new rung through ``ExpertCache.update()``, which charges
+          exactly the byte delta (byte-conservation is tested).
+
+        Returns a report dict: flipped/promotions/demotions counts, the
+        summed cache byte delta, and the number of re-staged entries.
+        """
+        assert self._plan_result is not None, "no active plan"
+        old_plan = self._plan_result.plan
+        new_bits = np.asarray(new_bits, old_plan.bits.dtype)
+        if new_bits.shape != old_plan.bits.shape:
+            raise ValueError(f"bits shape {new_bits.shape} != "
+                             f"{old_plan.bits.shape}")
+        for b in np.unique(new_bits).tolist():
+            if int(b) not in old_plan.ladder:
+                raise ValueError(f"rung {b} not on ladder "
+                                 f"{old_plan.ladder}")
+        for li in range(new_bits.shape[0]):
+            for b in old_plan.ladder:
+                if int((new_bits[li] == b).sum()) \
+                        != int((old_plan.bits[li] == b).sum()):
+                    raise ValueError(
+                        "apply_bits_update must preserve per-layer rung "
+                        f"counts (layer {li}, rung {b}): a count change "
+                        "is a bank split — use apply_frontier_point")
+        flipped = new_bits != old_plan.bits
+        promotions = int((new_bits > old_plan.bits).sum())
+        demotions = int((new_bits < old_plan.bits).sum())
+        report: Dict[str, Any] = {
+            "flipped": int(flipped.sum()), "promotions": promotions,
+            "demotions": demotions, "cache_bytes_delta": 0,
+            "restaged": 0,
+        }
+        if not report["flipped"]:
+            return report
+        t0 = time.perf_counter()
+        # async staging barrier: in-flight transfers carry OLD-rung blobs
+        self.expert_cache.drain()
+        new_plan = dataclasses.replace(old_plan, bits=new_bits)
+        # same bank shapes -> the jitted step functions stay valid; only
+        # the bank contents and the router permutation change
+        self._serve_params = apply_precision_plan(
+            self.params_train, self.cfg, new_plan)
+        self._plan_result = dataclasses.replace(
+            self._plan_result, plan=new_plan,
+            qos=estimate_qos(self.cfg, new_plan, self.planner.hw,
+                             self.max_slots, self.planner.profile))
+        # keep the planner's replan diffing anchored on the live plan
+        self.planner.current = self._plan_result
+        self._order = new_plan.expert_order()
+        flipped_keys = {(int(l), int(e)) for l, e in np.argwhere(flipped)}
+        for k in list(self._host_store):
+            if (k[0], k[1]) in flipped_keys:
+                del self._host_store[k]     # re-quantize at the new rung
+        for key in list(self.expert_cache.resident_keys()):
+            if (key[0], key[1]) in flipped_keys:
+                report["cache_bytes_delta"] += \
+                    self.expert_cache.update(key, self._fetch_expert(key))
+                report["restaged"] += 1
+        hit, self._miss_bytes_per_tok = expert_access_stats(self.cfg,
+                                                            new_plan)
+        self.metrics["miss_rate"] = 1.0 - hit
+        self.metrics["reconfig_s"] += time.perf_counter() - t0
+        self.metrics["bits_updates"] = \
+            self.metrics.get("bits_updates", 0) + 1
+        self.metrics["rung_flips"] = \
+            self.metrics.get("rung_flips", 0) + report["flipped"]
+        return report
 
     # ------------------------------------------------------------------
     # Request lifecycle
@@ -567,7 +688,9 @@ class AdaptiveServingEngine:
         for li in range(route_ids.shape[0]):
             for b in rows:
                 for slot_id in route_ids[li, b]:
-                    demanded.add((li, int(order[li, int(slot_id)])))
+                    ei = int(order[li, int(slot_id)])
+                    demanded.add((li, ei))
+                    self.route_counts[li, ei] += 1
         misses0 = st.misses
         for key in sorted(demanded):
             self.metrics["expert_accesses"] += 1
@@ -658,6 +781,8 @@ class AdaptiveServingEngine:
                 cache.prefetch(predicted[li + 1])
             ids_np = np.asarray(ids)       # blocks on layer li's compute
             order = self._order[li]
+            np.add.at(self.route_counts[li],
+                      order[ids_np[rows].astype(np.int64).ravel()], 1)
             demanded = sorted({(li, int(order[int(s)]))
                                for b in rows for s in ids_np[b]})
             self.metrics["expert_accesses"] += len(demanded)

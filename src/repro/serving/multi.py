@@ -116,6 +116,8 @@ class _Tenant:
         self.allocated_bytes = 0.0
         self.pending_violation = False
         self.reports: List[ReplanReport] = []
+        #: optional DynamicPrecisionController (DESIGN.md §15)
+        self.dynamic = None
 
     @property
     def point(self) -> Optional[FrontierPoint]:
@@ -296,12 +298,18 @@ class MultiTenantEngine:
         return dict(self._tenants)
 
     def add_tenant(self, spec: TenantSpec, engine,
-                   frontier: Optional[ParetoFrontier] = None) -> _Tenant:
+                   frontier: Optional[ParetoFrontier] = None,
+                   dynamic=None) -> _Tenant:
         """Register a tenant. ``frontier`` defaults to ``engine.frontier``
         (real engines build one lazily; simulated engines need it passed).
         If the engine already streams through a scoped view of THIS
         shared cache it is reused, otherwise a namespace is opened for
-        the tenant."""
+        the tenant. ``dynamic`` (a
+        :class:`~repro.core.dynamic_precision.DynamicPrecisionController`,
+        DESIGN.md §15) rides the tenant's QoSController: its byte-neutral
+        rung swaps step with the per-tenant control loop and its
+        placement-only :class:`ReplanReport`\\ s land in the shared
+        ``reports`` trace."""
         if spec.name in self._tenants:
             raise ValueError(f"tenant {spec.name!r} already hosted")
         if frontier is None:
@@ -313,10 +321,25 @@ class MultiTenantEngine:
                 spec.name, getattr(engine, "_fetch_expert", None))
         controller = QoSController(
             engine, frontier, self.controller_config,
-            on_violation=lambda name=spec.name: self._note_violation(name))
+            on_violation=lambda name=spec.name: self._note_violation(name),
+            dynamic=dynamic)
         t = _Tenant(spec, engine, frontier, controller, view)
+        if dynamic is not None:
+            dynamic.tenant = spec.name
+            dynamic.on_report = lambda rr, name=spec.name: \
+                self._note_dynamic_report(name, rr)
+        t.dynamic = dynamic
         self._tenants[spec.name] = t
         return t
+
+    def _note_dynamic_report(self, name: str, report: ReplanReport):
+        """Fold a dynamic-precision swap report into the shared replan
+        trace — placement-only by construction (byte-neutral swaps)."""
+        t = self._tenants[name]
+        t.reports.append(report)
+        self.reports.append(report)
+        self.metrics["migrated_experts"] += report.migrated_experts
+        self.metrics["migrated_bytes"] += report.migrated_bytes
 
     def _note_violation(self, name: str):
         self._tenants[name].pending_violation = True

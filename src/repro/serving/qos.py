@@ -126,7 +126,8 @@ class QoSController:
     def __init__(self, engine, frontier: Optional[ParetoFrontier] = None,
                  config: QoSControllerConfig = QoSControllerConfig(),
                  on_violation: Optional[Callable[[], None]] = None,
-                 policy: Optional[WalkPolicy] = None):
+                 policy: Optional[WalkPolicy] = None,
+                 dynamic=None):
         self.engine = engine
         self.frontier = frontier if frontier is not None \
             else engine.frontier
@@ -136,6 +137,13 @@ class QoSController:
         self.on_violation = on_violation
         #: the pluggable decision strategy (DESIGN.md §14.4)
         self.policy = policy if policy is not None else BandedWalkPolicy()
+        #: optional DynamicPrecisionController (DESIGN.md §15): stepped
+        #: inside every ``step()`` so hotness-driven rung swaps ride the
+        #: same between-iterations cadence as the frontier walks; its
+        #: promotions/demotions land in THIS controller's
+        #: ``rung_promotions``/``rung_demotions`` via the metrics sink
+        #: (bound below, after the metrics dict exists).
+        self.dynamic = dynamic
         self.target: Optional[QoSTarget] = None
         self.point: Optional[FrontierPoint] = None
         self._win_iter = 0
@@ -151,6 +159,8 @@ class QoSController:
             # can now trade precision, not only counts/residency.
             "rung_promotions": 0, "rung_demotions": 0,
         }
+        if self.dynamic is not None and self.dynamic.sink is None:
+            self.dynamic.sink = self.metrics
 
     # -- target management -------------------------------------------------
     def set_target(self, target: QoSTarget) -> FrontierPoint:
@@ -177,6 +187,12 @@ class QoSController:
         True iff a replan was applied."""
         if self.target is None or self.point is None:
             return False
+        if self.dynamic is not None:
+            # hotness-driven rung swaps (DESIGN.md §15) are in-place and
+            # byte-neutral, so they ride every step OUTSIDE the frontier
+            # walk's hysteresis (the dynamic controller has its own
+            # EMA/margin/dwell guards)
+            self.dynamic.step()
         # feasibility violation (e.g. the active point predates a budget
         # drop): fix immediately, bypassing hysteresis — but only once,
         # select() lands on a feasible point.

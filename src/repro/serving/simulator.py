@@ -38,7 +38,8 @@ import numpy as np
 from repro.core.pareto import FrontierPoint
 from repro.serving.metrics import base_metrics
 
-__all__ = ["VirtualClock", "SimulatedEngine", "run_scripted", "budget_shock"]
+__all__ = ["VirtualClock", "SimulatedEngine", "run_scripted",
+           "budget_shock", "zipf_route_fn"]
 
 
 class VirtualClock:
@@ -115,6 +116,36 @@ class VirtualClock:
 ThroughputFn = Callable[[FrontierPoint, int], float]
 LatencyFn = Callable[[FrontierPoint, int], float]
 TransferFn = Callable[[FrontierPoint, int], float]
+#: scripted per-iteration routed-access counts [L, E] (DESIGN.md §15)
+RouteFn = Callable[[FrontierPoint, int], np.ndarray]
+
+
+def zipf_route_fn(num_layers: int, num_experts: int, *,
+                  alpha: float = 1.2, tokens_per_iter: int = 64,
+                  top_k: int = 2, seed: int = 0,
+                  hot_rotation: int = 0) -> RouteFn:
+    """Deterministic Zipf-skewed routing schedule: iteration ``it``
+    draws ``tokens_per_iter * top_k`` accesses per layer from a Zipf
+    law over expert ranks (expert 0 hottest), rng seeded ``seed + it``
+    so the whole trace replays bit-identically. ``hot_rotation > 0``
+    rotates the hot set by ``num_experts // 2`` every that many
+    iterations — the alternating-hotness adversary the hysteresis test
+    throws at the dynamic controller."""
+    ranks = np.arange(1, num_experts + 1, dtype=np.float64)
+    p = ranks ** -float(alpha)
+    p /= p.sum()
+
+    def fn(point: FrontierPoint, it: int) -> np.ndarray:
+        rng = np.random.default_rng(seed + it)
+        probs = p
+        if hot_rotation and (it // hot_rotation) % 2:
+            probs = np.roll(p, num_experts // 2)
+        counts = np.stack([
+            rng.multinomial(tokens_per_iter * top_k, probs)
+            for _ in range(num_layers)])
+        return counts.astype(np.int64)
+
+    return fn
 
 
 class SimulatedEngine:
@@ -152,6 +183,7 @@ class SimulatedEngine:
                  throughput_fn: Optional[ThroughputFn] = None,
                  latency_fn: Optional[LatencyFn] = None,
                  transfer_fn: Optional[TransferFn] = None,
+                 route_fn: Optional[RouteFn] = None,
                  overlap: bool = False,
                  overlap_efficiency: float = 1.0,
                  clock: Optional[VirtualClock] = None,
@@ -162,6 +194,7 @@ class SimulatedEngine:
         self._throughput_fn = throughput_fn
         self._latency_fn = latency_fn
         self._transfer_fn = transfer_fn
+        self._route_fn = route_fn
         self.overlap = overlap
         self.overlap_efficiency = overlap_efficiency
         self.point: Optional[FrontierPoint] = None
@@ -173,12 +206,20 @@ class SimulatedEngine:
         # sim-irrelevant ones simply stay zero.
         self.metrics: Dict[str, float] = base_metrics()
         self._latencies: List[float] = []
+        #: accumulated routed-access histogram [L, E] — fed by
+        #: ``route_fn`` each iteration; like the real engine's, it
+        #: SURVIVES ``apply_frontier_point`` (same plan shape), the
+        #: regression the dynamic controller depends on (DESIGN.md §15).
+        self.route_counts: Optional[np.ndarray] = None
 
     # -- engine interface ---------------------------------------------------
     def apply_frontier_point(self, point: FrontierPoint):
         self.point = point
         self.replans += 1
         self.applied.append(point)
+        shape = point.plan.bits.shape
+        if self.route_counts is None or self.route_counts.shape != shape:
+            self.route_counts = np.zeros(shape, np.int64)
 
     def measured_tps(self) -> float:
         """The tokens/s the NEXT iteration will run at (the COMPUTE-only
@@ -222,8 +263,54 @@ class SimulatedEngine:
         self.metrics["transfer_exposed_s"] += exposed
         self.metrics["transfer_overlapped_s"] += transfer - exposed
         self.clock.advance(dt + exposed)
+        if self._route_fn is not None:
+            self.route_counts += np.asarray(
+                self._route_fn(self.point, it), np.int64)
         if self._latency_fn is not None:
             self._latencies.append(float(self._latency_fn(self.point, it)))
+
+    # -- dynamic precision (DESIGN.md §15) ----------------------------------
+    @property
+    def current_plan(self):
+        """The active point's precision plan (None before the first
+        ``apply_frontier_point``) — possibly bits-updated in place."""
+        return self.point.plan if self.point is not None else None
+
+    def reset_route_counts(self) -> None:
+        if self.route_counts is not None:
+            self.route_counts[...] = 0
+
+    def apply_bits_update(self, new_bits: np.ndarray) -> Dict[str, Any]:
+        """The real engine's in-place rung-flip path, simulated: swaps
+        the active point's plan for a bits-replaced copy under the same
+        contract (locations and per-layer rung counts preserved). The
+        sim has no expert cache, so ``cache_bytes_delta`` is 0 here;
+        byte-conservation of the real re-staging path is tested against
+        the real ``ExpertCache`` in tests/test_dynamic_precision.py."""
+        assert self.point is not None, "no frontier point applied"
+        import dataclasses as _dc
+
+        old_plan = self.point.plan
+        new_bits = np.asarray(new_bits, old_plan.bits.dtype)
+        if new_bits.shape != old_plan.bits.shape:
+            raise ValueError(f"bits shape {new_bits.shape} != "
+                             f"{old_plan.bits.shape}")
+        for li in range(new_bits.shape[0]):
+            for b in old_plan.ladder:
+                if int((new_bits[li] == b).sum()) \
+                        != int((old_plan.bits[li] == b).sum()):
+                    raise ValueError(
+                        "apply_bits_update must preserve per-layer rung "
+                        f"counts (layer {li}, rung {b})")
+        flipped = new_bits != old_plan.bits
+        new_plan = _dc.replace(old_plan, bits=new_bits)
+        self.point = _dc.replace(self.point, plan=new_plan)
+        self.metrics["bits_updates"] = \
+            self.metrics.get("bits_updates", 0) + 1
+        return {"flipped": int(flipped.sum()),
+                "promotions": int((new_bits > old_plan.bits).sum()),
+                "demotions": int((new_bits < old_plan.bits).sum()),
+                "cache_bytes_delta": 0, "restaged": 0}
 
     def latency_percentiles(self, qs: Sequence[int] = (50, 95),
                             last_n: Optional[int] = None

@@ -1,0 +1,87 @@
+"""Shared deterministic routing-trace builders + assertions (DESIGN.md
+§15 test harness).
+
+Promoted from the ad-hoc assertions in ``test_routing_capture.py`` so
+the sensitivity/dynamic-precision suites, the overlap A/B harness and
+the capture tests all validate routed traces the same way, and build
+synthetic route streams from one seeded generator.
+"""
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["routed_trace", "route_histogram", "zipf_probs",
+           "assert_valid_route_trace", "make_route_fn"]
+
+
+def zipf_probs(num_experts: int, alpha: float = 1.2,
+               rotate: int = 0) -> np.ndarray:
+    """Zipf-law expert probabilities (expert ``rotate`` hottest, then
+    descending by rank)."""
+    ranks = np.arange(1, num_experts + 1, dtype=np.float64)
+    p = ranks ** -float(alpha)
+    p /= p.sum()
+    return np.roll(p, rotate)
+
+
+def routed_trace(tokens: int, num_experts: int, top_k: int, *,
+                 alpha: float = 0.0, seed: int = 0,
+                 rotate: int = 0) -> np.ndarray:
+    """Deterministic synthetic route stream: ``(tokens, top_k)`` int32
+    expert ids, DISTINCT per row (like ``top_k`` of a real router).
+    ``alpha=0`` is uniform routing; larger alpha skews Zipf-style toward
+    low expert indices (``rotate`` shifts the hot set)."""
+    if top_k > num_experts:
+        raise ValueError(f"top_k {top_k} > num_experts {num_experts}")
+    rng = np.random.default_rng(seed)
+    p = zipf_probs(num_experts, alpha, rotate) if alpha > 0 \
+        else np.full(num_experts, 1.0 / num_experts)
+    ids = np.stack([
+        rng.choice(num_experts, size=top_k, replace=False, p=p)
+        for _ in range(tokens)])
+    return ids.astype(np.int32)
+
+
+def route_histogram(traces: Sequence[np.ndarray],
+                    num_experts: int) -> np.ndarray:
+    """Per-layer access histogram ``[L, E]`` from per-layer ``(T, k)``
+    traces (the shape ``capture_routing`` collects)."""
+    out = np.zeros((len(traces), num_experts), np.int64)
+    for li, ids in enumerate(traces):
+        np.add.at(out[li], np.asarray(ids, np.int64).ravel(), 1)
+    return out
+
+
+def make_route_fn(num_layers: int, num_experts: int, top_k: int, *,
+                  alpha: float = 1.2, tokens_per_iter: int = 32,
+                  seed: int = 0, rotate_every: int = 0):
+    """A ``SimulatedEngine`` ``route_fn`` built from :func:`routed_trace`
+    — per-iteration ``[L, E]`` count arrays, deterministic per seed.
+    ``rotate_every > 0`` flips the hot set by half the expert grid every
+    that many iterations (the hysteresis adversary)."""
+    def fn(point, it: int) -> np.ndarray:
+        rotate = (num_experts // 2) \
+            if rotate_every and (it // rotate_every) % 2 else 0
+        traces = [routed_trace(tokens_per_iter, num_experts, top_k,
+                               alpha=alpha, seed=seed + 1000 * li + it,
+                               rotate=rotate)
+                  for li in range(num_layers)]
+        return route_histogram(traces, num_experts)
+
+    return fn
+
+
+def assert_valid_route_trace(ids: np.ndarray, *, tokens: int,
+                             top_k: int, num_experts: int,
+                             dtype: Optional[type] = np.int32) -> None:
+    """The routed-trace contract (promoted from test_routing_capture):
+    shape ``(tokens, top_k)``, int32, ids in ``[0, num_experts)`` and
+    DISTINCT within each token's top-k."""
+    ids = np.asarray(ids)
+    assert ids.shape == (tokens, top_k), ids.shape
+    if dtype is not None:
+        assert ids.dtype == dtype, ids.dtype
+    assert (ids >= 0).all() and (ids < num_experts).all()
+    for row in ids:
+        assert len(set(int(v) for v in row)) == top_k, \
+            f"top-k ids must be distinct per token: {row}"

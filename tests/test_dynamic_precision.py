@@ -1,0 +1,367 @@
+"""Online hotness-driven dynamic precision (DESIGN.md §15): the
+controller folds measured routing into the sensitivity profile and
+issues hysteresis-guarded byte-neutral rung swaps.
+
+Covers the ISSUE's acceptance criteria: under Zipf traffic the
+controller lands hot experts on higher rungs AND reaches strictly lower
+measured quality cost than the static balanced plan at the SAME byte
+budget; alternating hotness does not flip-flap; cache byte accounting
+is conserved through ``ExpertCache.update()``; a uniform profile keeps
+the frontier bit-identical; and the routing histogram survives
+placement-only replans (the ``_prev_demanded``-reset regression).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import cost_model
+from repro.core.cost_model import HardwareModel
+from repro.core.dynamic_precision import (DynamicPrecisionConfig,
+                                          DynamicPrecisionController)
+from repro.core.pareto import ParetoFrontier
+from repro.core.precision_plan import HOST
+from repro.core.sensitivity import SensitivityProfile
+from repro.serving.simulator import SimulatedEngine, zipf_route_fn
+
+MIXTRAL = get_config("mixtral-8x7b")
+#: the dynamic-control tests run on the reduced config: with few layers
+#: a single hot/cold rung swap is a meaningful fraction of the plan's
+#: quality cost, so the hysteresis margin plays at realistic scale.
+SMOKE = reduce_for_smoke(get_config("mixtral-8x7b"))
+
+
+@pytest.fixture(scope="module")
+def frontier():
+    return ParetoFrontier(MIXTRAL, HardwareModel())
+
+
+@pytest.fixture(scope="module")
+def smoke_frontier():
+    return ParetoFrontier(SMOKE, HardwareModel())
+
+
+def mixed_point(frontier):
+    """A frontier point with BOTH rungs present and full residency: rung
+    swaps are then pure quality moves (no byte or placement effects)."""
+    pts = [p for p in frontier.all_points
+           if 0 < p.num_q_experts < p.plan.bits.size
+           and p.plan.resident_fraction() == 1.0]
+    assert pts, "frontier must enumerate mixed-rung fully-resident points"
+    return pts[len(pts) // 2]
+
+
+def run_dynamic(point, route_fn, iterations, config=DynamicPrecisionConfig()):
+    eng = SimulatedEngine(batch=4, route_fn=route_fn)
+    eng.apply_frontier_point(point)
+    ctl = DynamicPrecisionController(
+        eng, SensitivityProfile.uniform(SMOKE), config)
+    swaps_per_step = []
+    for _ in range(iterations):
+        eng.run_iteration()
+        before = ctl.metrics["swaps"]
+        ctl.step()
+        swaps_per_step.append(int(ctl.metrics["swaps"] - before))
+    return eng, ctl, swaps_per_step
+
+
+class TestZipfHotness:
+    """Acceptance criterion: Zipf traffic => hot experts on higher
+    rungs and strictly lower measured quality cost, equal bytes."""
+
+    def test_hot_experts_promoted_and_quality_cost_drops(self, smoke_frontier):
+        point = mixed_point(smoke_frontier)
+        L, E = point.plan.bits.shape
+        eng, ctl, _ = run_dynamic(
+            point, zipf_route_fn(L, E, seed=3), iterations=40)
+        static, final = point.plan, eng.current_plan
+        assert ctl.metrics["swaps"] > 0
+        assert ctl.metrics["rung_promotions"] > 0
+        assert ctl.metrics["rung_demotions"] > 0
+        # Zipf rank order: low indices are the hot experts
+        hot, cold = final.bits[:, :E // 2], final.bits[:, E // 2:]
+        assert hot.mean() > cold.mean()
+        assert hot.mean() > static.bits[:, :E // 2].mean()
+        # strictly lower measured quality cost under the SAME
+        # traffic-folded profile the controller descends...
+        assert ctl.profile.quality_cost(final) \
+            < ctl.profile.quality_cost(static)
+        # ...at the exact same byte budget (swaps are byte-neutral)
+        assert cost_model.device_bytes(SMOKE, final) \
+            == cost_model.device_bytes(SMOKE, static)
+        np.testing.assert_array_equal(final.location, static.location)
+        # per-layer rung counts preserved (bank shapes intact)
+        for li in range(L):
+            for b in static.ladder:
+                assert (final.bits[li] == b).sum() \
+                    == (static.bits[li] == b).sum()
+
+    def test_placement_only_replan_reports_emitted(self, smoke_frontier):
+        point = mixed_point(smoke_frontier)
+        L, E = point.plan.bits.shape
+        _, ctl, _ = run_dynamic(
+            point, zipf_route_fn(L, E, seed=3), iterations=40)
+        assert ctl.reports
+        for rr in ctl.reports:
+            assert rr.placement_only
+            assert rr.tenant == "default"
+        assert len(ctl.reports) == ctl.metrics["updates"]
+
+    def test_route_counts_survive_placement_only_replan_sim(
+            self, smoke_frontier):
+        """Regression: the accumulated routing histogram must NOT reset
+        on a placement-only replan (same plan shape)."""
+        point = mixed_point(smoke_frontier)
+        L, E = point.plan.bits.shape
+        eng = SimulatedEngine(batch=4, route_fn=zipf_route_fn(L, E, seed=0))
+        eng.apply_frontier_point(point)
+        for _ in range(3):
+            eng.run_iteration()
+        counts = eng.route_counts.copy()
+        assert counts.sum() > 0
+        eng.apply_frontier_point(point)        # placement-only replan
+        np.testing.assert_array_equal(eng.route_counts, counts)
+        eng.run_iteration()                    # and keeps accumulating
+        assert eng.route_counts.sum() > counts.sum()
+
+
+class TestHysteresis:
+    """Alternating hotness must not make the controller flip-flap."""
+
+    def test_alternating_hotness_does_not_flip_flap(self, smoke_frontier):
+        """Hotness flipping EVERY iteration is pure noise to the EMA: a
+        naive controller would chase it forever (one flip per dwell
+        window, ~iterations/min_dwell_steps flips per expert); the
+        guards must instead pin the plan still after a short transient."""
+        point = mixed_point(smoke_frontier)
+        L, E = point.plan.bits.shape
+        iters = 40
+        eng = SimulatedEngine(
+            batch=4, route_fn=zipf_route_fn(L, E, seed=3, hot_rotation=1))
+        eng.apply_frontier_point(point)
+        ctl = DynamicPrecisionController(
+            eng, SensitivityProfile.uniform(SMOKE))
+        flips = np.zeros((L, E), np.int64)
+        swaps_per_step = []
+        prev = point.plan.bits.copy()
+        for _ in range(iters):
+            eng.run_iteration()
+            before = ctl.metrics["swaps"]
+            ctl.step()
+            swaps_per_step.append(int(ctl.metrics["swaps"] - before))
+            cur = eng.current_plan.bits
+            flips += cur != prev
+            prev = cur.copy()
+        # no sustained oscillation: an unguarded chaser would flip hot
+        # experts once per dwell window (= iters / min_dwell_steps times)
+        assert flips.max() <= 2
+        # and the second half is completely still
+        assert sum(swaps_per_step[iters // 2:]) == 0
+
+    def test_margin_guard_blocks_marginal_swaps(self, smoke_frontier):
+        """An (effectively) infinite margin freezes the plan entirely —
+        the hysteresis knob is load-bearing, not decorative."""
+        point = mixed_point(smoke_frontier)
+        L, E = point.plan.bits.shape
+        eng, ctl, _ = run_dynamic(
+            point, zipf_route_fn(L, E, seed=3), iterations=20,
+            config=DynamicPrecisionConfig(margin=1e9))
+        assert ctl.metrics["swaps"] == 0
+        np.testing.assert_array_equal(eng.current_plan.bits,
+                                      point.plan.bits)
+
+    def test_empty_window_is_noop(self, smoke_frontier):
+        point = mixed_point(smoke_frontier)
+        eng = SimulatedEngine(batch=4)     # no route_fn: no traffic
+        eng.apply_frontier_point(point)
+        ctl = DynamicPrecisionController(
+            eng, SensitivityProfile.uniform(SMOKE))
+        eng.run_iteration()
+        ctl.step()
+        assert ctl.metrics["swaps"] == 0
+        assert ctl.measured_freq() is None
+        np.testing.assert_array_equal(eng.current_plan.bits,
+                                      point.plan.bits)
+
+
+class TestFrontierBitCompat:
+    def test_uniform_profile_frontier_bit_identical(self, frontier):
+        """The golden guarantee: a uniform profile prices exactly like
+        the legacy flat table — records() (float.hex serialization) must
+        be BYTE-identical to the profile-free frontier."""
+        prof = SensitivityProfile.uniform(MIXTRAL)
+        with_prof = ParetoFrontier(MIXTRAL, HardwareModel(), profile=prof)
+        assert with_prof.records() == frontier.records()
+
+
+# ---------------------------------------------------------------------------
+# Real-engine integration: byte conservation + histogram persistence
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    import jax
+    from repro.models.model import build_model
+    from repro.serving.engine import AdaptiveServingEngine
+    cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+    params = build_model(cfg).init(jax.random.key(0))
+    return AdaptiveServingEngine(cfg, params, max_batch=2, max_len=24)
+
+
+def offloaded_mixed_pair(plan):
+    """(li, e_lo, e_hi): two same-layer HOST experts at different rungs
+    — the byte-neutral swap pair that exercises the cache restage path."""
+    L = plan.bits.shape[0]
+    for li in range(L):
+        host = np.flatnonzero(plan.location[li] == HOST)
+        rungs = {int(plan.bits[li, e]) for e in host}
+        if len(rungs) < 2:
+            continue
+        lo, hi = min(rungs), max(rungs)
+        e_lo = next(int(e) for e in host if plan.bits[li, e] == lo)
+        e_hi = next(int(e) for e in host if plan.bits[li, e] == hi)
+        return li, e_lo, e_hi
+    return None
+
+
+@pytest.fixture()
+def mixed_offload_engine(engine, smoke_frontier):
+    """The engine on a partial-residency frontier plan that has a
+    mixed-rung offloaded pair — the cache-restage swap scenario."""
+    point = pair = None
+    for p in smoke_frontier.all_points:
+        if p.plan.resident_fraction() >= 1.0:
+            continue
+        pair = offloaded_mixed_pair(p.plan)
+        if pair is not None:
+            point = p
+            break
+    assert pair is not None, "frontier has no mixed-rung HOST pair"
+    engine.apply_frontier_point(point)
+    return engine, pair, point
+
+
+class TestByteConservation:
+    def test_swap_conserves_cache_and_plan_bytes(self, mixed_offload_engine):
+        """Sum of ``ExpertCache.update()`` deltas == plan byte diff == 0
+        for a rung swap, with both flipped entries actually re-staged."""
+        engine, (li, e_lo, e_hi), _ = mixed_offload_engine
+        old_plan = engine.current_plan
+        # stage both swap candidates into the cache (demand-fetch path)
+        engine.expert_cache.get((li, e_lo))
+        engine.expert_cache.get((li, e_hi))
+        used0 = engine.expert_cache.used_bytes
+        new_bits = old_plan.bits.copy()
+        new_bits[li, e_lo], new_bits[li, e_hi] = \
+            old_plan.bits[li, e_hi], old_plan.bits[li, e_lo]
+        report = engine.apply_bits_update(new_bits)
+        assert report["flipped"] == 2
+        assert report["promotions"] == 1 and report["demotions"] == 1
+        assert report["restaged"] == 2
+        # byte conservation: the summed update deltas are the cache's
+        # own accounting change, and a swap nets to exactly zero
+        assert report["cache_bytes_delta"] == \
+            engine.expert_cache.used_bytes - used0
+        assert report["cache_bytes_delta"] == 0
+        new_plan = engine.current_plan
+        assert cost_model.device_bytes(engine.cfg, new_plan) \
+            == cost_model.device_bytes(engine.cfg, old_plan)
+        np.testing.assert_array_equal(new_plan.location, old_plan.location)
+
+    def test_single_cached_restage_charges_exact_delta(
+            self, mixed_offload_engine):
+        """With only ONE side of the swap cached, the reported byte
+        delta is that entry's rung-size change — nonzero, and exactly
+        the cache accounting movement (conservation at entry grain)."""
+        engine, (li, e_lo, e_hi), _ = mixed_offload_engine
+        old_plan = engine.current_plan
+        engine.expert_cache.invalidate()
+        engine.expert_cache.get((li, e_lo))   # low-rung side only
+        used0 = engine.expert_cache.used_bytes
+        new_bits = old_plan.bits.copy()
+        new_bits[li, e_lo], new_bits[li, e_hi] = \
+            old_plan.bits[li, e_hi], old_plan.bits[li, e_lo]
+        report = engine.apply_bits_update(new_bits)
+        assert report["restaged"] == 1
+        # e_lo was promoted to the bigger rung: the delta is positive
+        assert report["cache_bytes_delta"] > 0
+        assert report["cache_bytes_delta"] == \
+            engine.expert_cache.used_bytes - used0
+
+    def test_replan_after_swap_drops_stale_rung_blobs(
+            self, mixed_offload_engine):
+        """Regression: a placement-only replan (same bank sizes) after a
+        rung swap reverts to the planner's canonical bits assignment —
+        cache entries staged at the swapped rung must be invalidated,
+        not served stale."""
+        engine, (li, e_lo, e_hi), point = mixed_offload_engine
+        old_plan = engine.current_plan
+        engine.expert_cache.invalidate()
+        engine.expert_cache.get((li, e_lo))
+        new_bits = old_plan.bits.copy()
+        new_bits[li, e_lo], new_bits[li, e_hi] = \
+            old_plan.bits[li, e_hi], old_plan.bits[li, e_lo]
+        engine.apply_bits_update(new_bits)
+        # back to the canonical assignment: (li, e_lo) flips rung again,
+        # so its freshly restaged entry is stale under the new plan
+        engine.apply_frontier_point(point)
+        assert (li, e_lo) not in engine.expert_cache.resident_keys()
+        # a re-fetch stages it at the plan's (restored) rung size
+        engine.expert_cache.get((li, e_lo))
+        rung = int(engine.current_plan.bits[li, e_lo])
+        assert rung == int(old_plan.bits[li, e_lo])
+        assert engine.expert_cache.used_bytes \
+            <= engine.planner.expert_bytes(rung) * 1.5
+
+    def test_rejects_rung_count_changes(self, mixed_offload_engine):
+        """A bits update that changes per-layer rung counts is a bank
+        split, not a swap — must be refused (that path is
+        apply_frontier_point)."""
+        engine, (li, e_lo, e_hi), _ = mixed_offload_engine
+        old_plan = engine.current_plan
+        bad = old_plan.bits.copy()
+        bad[li, e_lo] = old_plan.bits[li, e_hi]   # promote w/o demoting
+        with pytest.raises(ValueError, match="rung counts"):
+            engine.apply_bits_update(bad)
+
+    def test_generation_still_works_after_swap(self, mixed_offload_engine):
+        engine, (li, e_lo, e_hi), _ = mixed_offload_engine
+        old_plan = engine.current_plan
+        new_bits = old_plan.bits.copy()
+        new_bits[li, e_lo], new_bits[li, e_hi] = \
+            old_plan.bits[li, e_hi], old_plan.bits[li, e_lo]
+        engine.apply_bits_update(new_bits)
+        rid = engine.submit(np.array([5, 6, 7]), max_new_tokens=3)
+        engine.step()
+        out = engine.done[rid].out_tokens
+        assert len(out) == 3
+        assert all(0 <= t < engine.cfg.vocab_size for t in out)
+
+
+class TestRouteCountsSurviveReplan:
+    def test_histogram_survives_placement_only_replan(
+            self, engine, smoke_frontier):
+        """The satellite regression: ``_prev_demanded`` IS reset on a
+        replan but the routing histogram must NOT be — the dynamic
+        controller's traffic window spans placement-only replans."""
+        # two frontier points with IDENTICAL rung counts, different
+        # residency: moving between them is a placement-only replan
+        by_q = {}
+        for p in smoke_frontier.all_points:
+            by_q.setdefault(p.num_q_experts, []).append(p)
+        pts = next(v for q, v in sorted(by_q.items())
+                   if q > 0 and len({p.resident_experts for p in v}) > 1)
+        pts = sorted(pts, key=lambda p: p.resident_experts)
+        a, b = pts[0], pts[-1]
+        engine.apply_frontier_point(a)
+        engine.reset_route_counts()
+        rid = engine.submit(np.array([1, 2, 3, 4]), max_new_tokens=3)
+        engine.step()
+        counts = engine.route_counts.copy()
+        assert counts.sum() > 0
+        engine.apply_frontier_point(b)         # placement-only replan
+        np.testing.assert_array_equal(engine.route_counts, counts)
+        # and the histogram keeps growing afterwards
+        rid = engine.submit(np.array([9, 8, 7]), max_new_tokens=2)
+        engine.step()
+        assert engine.route_counts.sum() > counts.sum()
+        assert len(engine.done[rid].out_tokens) == 2

@@ -5,8 +5,10 @@ deterministic simulator's sync/async A/B, and the control loops charging
 EXPOSED — not total — transfer time."""
 import dataclasses
 
+import numpy as np
 import pytest
 
+from helpers import make_route_fn
 from repro.configs import get_config
 from repro.core.cost_model import HardwareModel, estimate_qos
 from repro.core.pareto import ParetoFrontier, QoSTarget
@@ -129,13 +131,20 @@ def transfer_bound_point(frontier):
 
 
 def make_ab_engines(point, iterations=32):
-    """Identical scripted compute+transfer timings, overlap off vs on."""
+    """Identical scripted compute+transfer timings, overlap off vs on.
+    Both engines replay the SAME deterministic routed trace (the shared
+    tests/helpers.py builder), so the A/B also pins that overlap moves
+    time, not traffic."""
+    num_layers, num_experts = point.plan.bits.shape
     out = {}
     for mode in ("sync", "async"):
         eng = SimulatedEngine(
             batch=1,
             throughput_fn=lambda p, i: 1e3 / p.qos.t_compute_ms,
             transfer_fn=lambda p, i: p.qos.t_transfer_ms / 1e3,
+            route_fn=make_route_fn(num_layers, num_experts,
+                                   MIXTRAL.moe.top_k, alpha=1.2,
+                                   tokens_per_iter=4, seed=11),
             overlap=(mode == "async"), overlap_efficiency=1.0)
         eng.apply_frontier_point(point)
         for _ in range(iterations):
@@ -166,6 +175,11 @@ class TestSimulatedOverlapAB:
             pytest.approx(sync.metrics["transfer_s"])
         # the virtual clock agrees: async wall-clock is strictly shorter
         assert async_.clock.now() < sync.clock.now()
+        # same deterministic routed trace on both sides: overlap hides
+        # transfer time, it never changes WHICH experts were accessed
+        assert sync.route_counts.sum() > 0
+        np.testing.assert_array_equal(sync.route_counts,
+                                      async_.route_counts)
 
     def test_fully_hidden_transfer_reaches_compute_bound_rate(self, additive):
         point = next(p for p in additive.points

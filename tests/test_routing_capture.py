@@ -1,10 +1,11 @@
-"""capture_routing hook + cache_sim plumbing."""
+"""capture_routing / capture_moe_inputs hooks + cache_sim plumbing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from helpers import assert_valid_route_trace, route_histogram, routed_trace
 from repro.configs.base import MoEConfig
-from repro.core.mixed_moe import capture_routing, route
+from repro.core.mixed_moe import capture_moe_inputs, capture_routing, route
 
 
 class TestCaptureRouting:
@@ -16,9 +17,9 @@ class TestCaptureRouting:
             route(w, x, moe, train=False)
             route(w, x, moe, train=False)
         assert len(ids) == 2
-        assert ids[0].shape == (6, 2)
-        assert ids[0].dtype == np.int32
-        assert (ids[0] >= 0).all() and (ids[0] < 4).all()
+        for trace in ids:
+            assert_valid_route_trace(trace, tokens=6, top_k=2,
+                                     num_experts=4)
 
     def test_no_capture_outside_context(self):
         moe = MoEConfig(num_experts=4, top_k=1, d_ff_expert=8)
@@ -35,3 +36,54 @@ class TestCaptureRouting:
         with capture_routing() as ids:
             f(w, x)
         assert ids == []
+
+
+class TestCaptureMoEInputs:
+    """The calibration hook (DESIGN.md §15): per-layer (x, probs)."""
+
+    def test_eager_capture_shapes(self):
+        moe = MoEConfig(num_experts=4, top_k=2, d_ff_expert=8)
+        w = jax.random.normal(jax.random.key(0), (16, 4), jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (6, 16), jnp.float32)
+        with capture_moe_inputs() as cap:
+            route(w, x, moe, train=False)
+        assert len(cap) == 1
+        xs, probs = cap[0]
+        assert xs.shape == (6, 16) and xs.dtype == np.float32
+        assert probs.shape == (6, 4) and probs.dtype == np.float32
+        np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+
+    def test_jitted_not_captured_and_no_leak(self):
+        moe = MoEConfig(num_experts=4, top_k=1, d_ff_expert=8)
+        w = jnp.zeros((16, 4))
+        x = jnp.ones((2, 16))
+        f = jax.jit(lambda w, x: route(w, x, moe, train=False)[1])
+        with capture_moe_inputs() as cap:
+            f(w, x)
+        assert cap == []
+        route(w, x, moe, train=False)   # outside: must not capture
+        assert cap == []
+
+
+class TestRoutedTraceBuilder:
+    """The shared synthetic-stream builder validates its own contract."""
+
+    def test_trace_is_deterministic_and_valid(self):
+        a = routed_trace(32, 8, 2, alpha=1.2, seed=7)
+        b = routed_trace(32, 8, 2, alpha=1.2, seed=7)
+        np.testing.assert_array_equal(a, b)
+        assert_valid_route_trace(a, tokens=32, top_k=2, num_experts=8)
+
+    def test_skew_concentrates_on_hot_experts(self):
+        uniform = routed_trace(512, 8, 2, alpha=0.0, seed=0)
+        skewed = routed_trace(512, 8, 2, alpha=2.0, seed=0)
+        h_u = route_histogram([uniform], 8)[0]
+        h_s = route_histogram([skewed], 8)[0]
+        assert h_s[:2].sum() > h_u[:2].sum()
+        assert h_s[0] == h_s.max()
+
+    def test_histogram_counts_every_access(self):
+        traces = [routed_trace(16, 4, 2, seed=li) for li in range(3)]
+        h = route_histogram(traces, 4)
+        assert h.shape == (3, 4)
+        assert h.sum() == 3 * 16 * 2

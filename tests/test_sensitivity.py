@@ -1,0 +1,159 @@
+"""Offline sensitivity calibration (DESIGN.md §15): determinism,
+monotonicity over the ladder, planted-outlier ranking, serialization,
+and the uniform-profile compat guarantee against the cost model."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import cost_model
+from repro.core.planner import AdaptivePlanner
+from repro.core.precision_plan import balanced_ladder_plan
+from repro.core.sensitivity import SensitivityProfile, calibrate_sensitivity
+from repro.models.model import build_model
+
+LADDER3 = (16, 8, 4)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+    params = build_model(cfg).init(jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def profile(smoke):
+    cfg, params = smoke
+    return calibrate_sensitivity(cfg, params, seed=0)
+
+
+class TestCalibrationDeterminism:
+    def test_same_seed_byte_identical(self, smoke, profile):
+        cfg, params = smoke
+        again = calibrate_sensitivity(cfg, params, seed=0)
+        assert again.to_json_bytes() == profile.to_json_bytes()
+
+    def test_different_seed_differs(self, smoke, profile):
+        cfg, params = smoke
+        other = calibrate_sensitivity(cfg, params, seed=1)
+        assert other.to_json_bytes() != profile.to_json_bytes()
+
+    def test_save_load_roundtrip_bytes(self, profile, tmp_path):
+        path = tmp_path / "profile.json"
+        profile.save(path)
+        back = SensitivityProfile.load(path)
+        assert back.to_json_bytes() == profile.to_json_bytes()
+        assert back.ladder == profile.ladder
+        np.testing.assert_array_equal(back.freq, profile.freq)
+
+
+class TestMonotonicity:
+    def test_sens_decreases_with_bits_every_expert(self, smoke):
+        """4-bit error >= 8-bit error >= 16-bit == 0, per expert. The
+        raw (unanchored) scores carry the property directly; 16-bit is
+        0 by construction (not stored)."""
+        cfg, params = smoke
+        raw = calibrate_sensitivity(cfg, params, seed=0, ladder=LADDER3,
+                                    anchor=False)
+        assert sorted(raw.sens) == [4, 8]
+        assert (raw.sens[4] >= raw.sens[8]).all()
+        assert (raw.sens[8] > 0).all()
+
+    def test_anchored_profile_preserves_rung_order(self, smoke):
+        cfg, params = smoke
+        anch = calibrate_sensitivity(cfg, params, seed=0, ladder=LADDER3)
+        assert (anch.sens[4] >= anch.sens[8]).all()
+        for b in (4, 8):
+            assert anch.sens[b].mean() == pytest.approx(
+                cost_model.RUNG_QUALITY_COST[b])
+
+    def test_freq_normalized(self, profile):
+        assert profile.freq.sum() == pytest.approx(1.0)
+        assert (profile.freq > 0).all()
+
+
+class TestPlantedOutlier:
+    def test_spiked_expert_ranks_most_sensitive(self, smoke):
+        """Plant a worst-case absmax pattern into ONE expert: per
+        quantization group (dim -2, size ``group_size``) one dominant
+        entry at 2*qmax times the uniform bulk magnitude. The outlier
+        sets the group scale, the bulk falls below half the 4-bit step
+        and quantizes to ZERO — a large fraction of the expert's output
+        energy is erased, so calibration must rank it the most
+        quantization-sensitive expert in its layer. (A uniform scale-up
+        would NOT work: group-wise absmax quantization error is
+        scale-invariant, and energy-normalisation below keeps the
+        planted expert's output magnitude comparable.)"""
+        cfg, params = smoke
+        li, ei = 1, 3
+        gs = cfg.mop.group_size
+        spiked = jax.tree_util.tree_map(lambda x: x, params)
+        spiked["layers"] = dict(params["layers"])
+        moe = dict(params["layers"]["moe"])
+        for k in ("w_gate", "w_up", "w_down"):
+            w = np.asarray(moe[k]).copy()
+            x = w[li, ei]
+            m = float(np.sqrt((x ** 2).mean()))
+            y = np.sign(x) * m            # uniform-magnitude bulk
+            y[0::gs, :] *= 14.0           # ~2*qmax outlier per group
+            y *= np.linalg.norm(x) / np.linalg.norm(y)
+            w[li, ei] = y
+            moe[k] = w
+        spiked["layers"]["moe"] = moe
+        prof = calibrate_sensitivity(cfg, spiked, seed=0, anchor=False)
+        layer_sens = prof.sens[4][li]
+        assert int(np.argmax(layer_sens)) == ei
+        # and decisively: strictly above every sibling
+        others = np.delete(layer_sens, ei)
+        assert layer_sens[ei] > others.max()
+
+
+class TestUniformProfileCompat:
+    def test_uniform_quality_cost_matches_flat_formula(self, smoke):
+        cfg, _ = smoke
+        prof = SensitivityProfile.uniform(cfg)
+        plan = balanced_ladder_plan(
+            cfg.num_layers, cfg.moe.num_experts, {4: 8},
+            ladder=cfg.mop.precision_ladder,
+            group_size=cfg.mop.group_size, seed=0)
+        flat = cost_model.quality_proxy(cfg, plan)
+        assert cost_model.quality_proxy(cfg, plan, prof) == flat
+        assert 1.0 + prof.quality_cost(plan) == pytest.approx(flat)
+
+    def test_calibrated_profile_reprices_quality(self, smoke, profile):
+        """A non-uniform profile changes quality_proxy for at least one
+        enumerated plan (otherwise the calibration is vacuous)."""
+        cfg, _ = smoke
+        assert not profile.is_uniform()
+        planner = AdaptivePlanner(cfg)
+        frontier = planner.frontier()
+        changed = any(
+            cost_model.quality_proxy(cfg, p.plan, profile)
+            != p.qos.quality_proxy
+            for p in frontier.all_points if p.num_q_experts > 0)
+        assert changed
+
+    def test_planner_set_profile_invalidates_frontier(self, smoke,
+                                                      profile):
+        cfg, _ = smoke
+        planner = AdaptivePlanner(cfg)
+        f0 = planner.frontier()
+        planner.set_profile(profile)
+        f1 = planner.frontier()
+        assert f1 is not f0
+        assert f1.profile is profile
+        # profile_variant round-trips back to the flat ranking
+        f2 = f1.profile_variant(None)
+        assert [p.qos.quality_proxy for p in f2.points] == \
+            [p.qos.quality_proxy for p in f0.points]
+
+    def test_with_freq_reweights_not_reprices(self, profile):
+        skew = np.zeros(profile.shape)
+        skew[0, 0] = 1.0
+        rew = profile.with_freq(skew)
+        np.testing.assert_array_equal(rew.sens[4], profile.sens[4])
+        assert rew.freq[0, 0] == 1.0 and rew.freq.sum() == 1.0
+        # all-zero histogram: keep current weights
+        same = profile.with_freq(np.zeros(profile.shape))
+        np.testing.assert_array_equal(same.freq, profile.freq)
