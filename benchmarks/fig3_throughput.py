@@ -351,12 +351,75 @@ def dynamic_ab(quick: bool = False) -> List[Dict]:
                   "byte_neutral": True, "results": str(out)}]
 
 
+def ep_ab(quick: bool = False) -> List[Dict]:
+    """EP=1 vs EP=4 analytic decode A/B (DESIGN.md §16) at kimi scale
+    (61 layers x 384 experts, ~1T params — the regime EP exists for).
+    Both sides get the SAME per-device HBM budget; the EP=4 planner's
+    budget buys LOCAL residency on each of the 4 shards, so the
+    aggregate accelerator-resident set is up to 4x larger and the
+    surplus rides the PEER tier (NVLink-class streaming + all2all
+    latency) instead of the host link. The acceptance claim: at an
+    H200-class budget EP=4 strictly beats EP=1 decode throughput by a
+    healthy margin, and never loses at any budget. Writes
+    ``results/bench_ep.json``."""
+    import json
+
+    cfg = get_config("kimi-k2-1t-a32b")
+    hw = HardwareModel()
+    budgets_gb = (141,) if quick else (40, 80, 141)
+    rows: List[Dict] = []
+    by_budget: Dict[float, Dict[int, float]] = {}
+    for budget_gb in budgets_gb:
+        by_budget[budget_gb] = {}
+        for ep in (1, 4):
+            planner = AdaptivePlanner(cfg, hw=hw, ep=ep)
+            res = planner.plan(budget_gb * 1e9, "throughput",
+                               batch_size=1)
+            q, place = res.qos, res.plan.placement_counts()
+            by_budget[budget_gb][ep] = q.tokens_per_s
+            rows.append({
+                "bench": "fig3_ep_ab", "mem_gb": budget_gb, "ep": ep,
+                "tok_s": round(q.tokens_per_s, 3),
+                "hit_rate": round(q.hit_rate, 4),
+                "device_experts": place["device"],
+                "peer_experts": place["peer"],
+                "host_experts": place["host"],
+                "t_compute_ms": round(q.t_compute_ms, 3),
+                "t_peer_ms": round(q.t_peer_ms, 3),
+                "t_exposed_ms": round(q.t_exposed_ms, 3),
+            })
+    speedups = {gb: round(v[4] / v[1], 3) for gb, v in by_budget.items()}
+    headline = speedups[141]
+    # EP must never LOSE (the peer tier strictly dominates the host link
+    # it displaces), and at H200 scale the 4x aggregate residency is
+    # worth >= 2x decode throughput (observed ~3.5x; conservative gate)
+    assert all(s >= 1.0 for s in speedups.values()), speedups
+    assert headline >= 2.0, \
+        f"EP=4 speedup {headline} < 2.0 at the 141 GB budget"
+    doc = {
+        "bench": "fig3_ep_ab", "arch": cfg.arch_id,
+        "per_device_budgets_gb": list(budgets_gb),
+        "rows": rows,
+        "speedup_ep4_over_ep1": speedups,
+        "headline_speedup_141gb": headline,
+    }
+    out = common.RESULTS / "bench_ep.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    rows.append({"bench": "fig3_ep_ab_claims",
+                 "ep4_never_loses": True,
+                 "headline_speedup_141gb": headline,
+                 "results": str(out)})
+    return rows
+
+
 def run(quick: bool = False) -> List[Dict]:
     rows = analytic_surface(PAPER_HW, "paper_stack")
     rows += analytic_surface(OURS_HW, "fused_kernel")
     rows += multi_tenant_surface(quick)
     rows += overlap_ab(quick)
     rows += dynamic_ab(quick)
+    rows += ep_ab(quick)
     rows += measured_small_scale(quick)
 
     # -- claim checks ------------------------------------------------------
@@ -405,8 +468,16 @@ def main():
     ap.add_argument("--dynamic-ab", action="store_true",
                     help="run ONLY the static-vs-dynamic precision A/B "
                          "(writes results/bench_dynamic.json)")
+    ap.add_argument("--ep-ab", action="store_true",
+                    help="run ONLY the EP=1 vs EP=4 analytic decode A/B "
+                         "at kimi scale (writes results/bench_ep.json)")
     args = ap.parse_args()
-    rows = dynamic_ab(args.quick) if args.dynamic_ab else run(args.quick)
+    if args.dynamic_ab:
+        rows = dynamic_ab(args.quick)
+    elif args.ep_ab:
+        rows = ep_ab(args.quick)
+    else:
+        rows = run(args.quick)
     for r in rows:
         print(r)
 

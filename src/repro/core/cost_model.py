@@ -32,7 +32,8 @@ import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.precision_plan import DEVICE, PrecisionPlan, quantized_rungs
+from repro.core.precision_plan import (DEVICE, HOST, PEER, PrecisionPlan,
+                                       quantized_rungs)
 
 #: perplexity-multiplier cost per fully-quantized model at each rung,
 #: calibrated on the paper's Table 1 (all-4-bit ~= +7% ppl on WikiText2)
@@ -73,6 +74,19 @@ class HardwareModel:
     # n_rungs.
     kernel_launch_s: float = 0.0
     grouped_ffn: bool = True
+    # EP peer tier (DESIGN.md §16). Experts on PEER devices stay in
+    # accelerator HBM; only the token ACTIVATIONS travel (all2all), so
+    # the peer tier is charged activation bytes at the inter-device
+    # bandwidth plus a per-sharded-layer all2all launch latency — never
+    # weight streaming. Both terms multiply by the plan's peer
+    # occupancy, so any plan without PEER experts (every single-device
+    # plan, every ep=1 frontier) contributes exactly +0.0 and the
+    # historical model — and the frontier golden fixture — is untouched
+    # bit-for-bit, regardless of these defaults. Defaults: ICI-class
+    # inter-device link (~10x the PCIe host link) + a few-microsecond
+    # collective launch.
+    interconnect_bw: float = 300e9
+    all2all_latency_s: float = 2e-6
 
     def q_speedup_decode(self, bits: int) -> float:
         """Decode-regime matmul speedup of rung ``bits`` vs bf16."""
@@ -92,6 +106,11 @@ class QoSEstimate:
     #: transfer time left EXPOSED on the token critical path after the
     #: overlap window (== t_transfer_ms when overlap_efficiency is 0).
     t_exposed_ms: float = 0.0
+    #: all2all time for PEER-resident expert accesses (activation bytes
+    #: over the inter-device link + per-sharded-layer collective
+    #: latency — DESIGN.md §16). Exactly 0.0 when the plan has no PEER
+    #: experts (every single-device plan).
+    t_peer_ms: float = 0.0
 
 
 def expert_access_stats(cfg: ModelConfig, plan: PrecisionPlan
@@ -100,7 +119,12 @@ def expert_access_stats(cfg: ModelConfig, plan: PrecisionPlan
     e = cfg.moe
     assert e is not None
     ne = plan.bits.shape[1]
-    on_dev = plan.location == DEVICE
+    # a "hit" is any access that does NOT stream over the host link:
+    # LOCAL- and PEER-resident experts both live in accelerator HBM
+    # (PEER costs all2all activation bytes instead — peer_access_stats).
+    # Single-device plans have no PEER experts, so this is the
+    # historical ``location == DEVICE`` mask bit-for-bit.
+    on_dev = plan.location != HOST
     # uniform routing: each of top_k accesses per layer hits a uniformly
     # random expert
     hit = float(on_dev.mean())
@@ -122,9 +146,35 @@ def expert_access_stats(cfg: ModelConfig, plan: PrecisionPlan
     return hit, per_token
 
 
+def peer_access_stats(cfg: ModelConfig, plan: PrecisionPlan
+                      ) -> Tuple[float, float, int]:
+    """(peer_fraction, all2all activation bytes per token, # layers with
+    any PEER expert) — the EP peer tier's demand volume (DESIGN.md §16).
+
+    A PEER access ships the token activation to the owning device and
+    the weighted expert output back: ``2 * d_model`` elements at the
+    activation itemsize, per routed access, scaled by the layer's peer
+    occupancy under uniform routing. Integer-numerator accumulation
+    mirrors :func:`expert_access_stats` (exactly-rounded rational sum).
+    All three results are exactly zero for plans without PEER experts.
+    """
+    e = cfg.moe
+    assert e is not None
+    ne = plan.bits.shape[1]
+    on_peer = plan.location == PEER
+    itemsize = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    per_access = 2 * cfg.d_model * itemsize
+    numerator = int(on_peer.sum()) * per_access * e.top_k
+    peer_layers = int(on_peer.any(axis=1).sum())
+    return float(on_peer.mean()), numerator / ne, peer_layers
+
+
 def device_bytes(cfg: ModelConfig, plan: PrecisionPlan) -> int:
-    """HBM footprint of the plan (non-expert 16-bit + resident experts,
-    each at its own rung's size)."""
+    """LOCAL HBM footprint of the plan (non-expert 16-bit + DEVICE-
+    resident experts, each at its own rung's size). PEER experts consume
+    a peer device's HBM, not this one's — the per-device budget is what
+    frontier feasibility checks against, which is exactly why EP widens
+    the residency axis (DESIGN.md §16)."""
     on_dev = plan.location == DEVICE
     total = cfg.non_expert_bytes()
     for b in sorted(plan.ladder):
@@ -221,16 +271,26 @@ def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
             * hw.kernel_launch_s
 
     t_transfer = miss_bytes / hw.host_link_bw
+    # EP peer tier (DESIGN.md §16): PEER accesses move token activations
+    # over the inter-device link (all2all), synchronous on the decode
+    # critical path — never hidden by the host-transfer overlap window.
+    # Both terms are exactly 0.0 when the plan has no PEER experts, so
+    # t_token below reproduces the historical sum bit-for-bit (golden
+    # fixture pinned).
+    _, peer_bytes, peer_layers = peer_access_stats(cfg, plan)
+    t_peer = peer_bytes / hw.interconnect_bw \
+        + peer_layers * hw.all2all_latency_s
     # async overlap (DESIGN.md §12): only the transfer time the pipeline
     # cannot hide under compute reaches the token critical path; at
     # overlap_efficiency == 0 this is exactly the additive paper model.
     t_exposed = max(0.0, t_transfer - hw.overlap_efficiency * t_compute)
-    t_token = t_compute + t_exposed
+    t_token = t_compute + t_peer + t_exposed
     return QoSEstimate(
         tokens_per_s=batch_size / t_token,
         t_compute_ms=t_compute * 1e3,
         t_transfer_ms=t_transfer * 1e3,
         t_exposed_ms=t_exposed * 1e3,
+        t_peer_ms=t_peer * 1e3,
         hit_rate=hit,
         device_bytes=device_bytes(cfg, plan),
         quality_proxy=quality_proxy(cfg, plan, profile),

@@ -116,10 +116,14 @@ class FrontierPoint:
     plan's ladder (descending, 16-bit rung first); ``num_q_experts`` is
     their sub-16-bit sum — the paper's Num_E4 for a binary ladder."""
     num_q_experts: int        # global quantized count (multiple of L)
-    resident_experts: int     # global on-device expert count
+    resident_experts: int     # global ACCELERATOR-resident expert count
+    #                           (local + peer under EP; == local at ep=1)
     plan: PrecisionPlan
     qos: QoSEstimate
     counts_per_rung: Tuple[int, ...] = ()
+    #: of ``resident_experts``, how many live on PEER devices (EP
+    #: placement tier, DESIGN.md §16); always 0 at ep=1.
+    peer_experts: int = 0
 
     def quantized_counts(self) -> Dict[int, int]:
         """{rung: global count} over the plan's quantized rungs — the
@@ -197,16 +201,31 @@ class ParetoFrontier:
                  batch_size: int = 1, seed: int = 0,
                  residency_step: Optional[int] = None,
                  max_enum_points: int = 8192,
-                 profile=None):
+                 profile=None, ep: int = 1):
         if cfg.moe is None:
             raise ValueError(f"{cfg.arch_id}: the MoP frontier needs routed "
                              "experts (DESIGN.md §5)")
+        ep = int(ep)
+        if ep < 1:
+            raise ValueError(f"ep must be >= 1, got {ep}")
+        if ep > 1 and cfg.moe.num_experts % ep:
+            raise ValueError(
+                f"{cfg.arch_id}: {cfg.moe.num_experts} experts do not "
+                f"split over ep={ep} devices (num_experts %% ep must be "
+                "0 — pick an ep dividing the expert count)")
         self.cfg = cfg
         self.hw = hw
         self.batch_size = batch_size
         self.seed = seed
         self.residency_step = residency_step
         self.max_enum_points = max_enum_points
+        #: EP shard count (DESIGN.md §16). ep=1 reproduces the
+        #: single-device enumeration bit-for-bit (golden-fixture
+        #: pinned); ep>1 rounds per-rung count levels to multiples of
+        #: ep (bank shards must split evenly) and splits each residency
+        #: level into a local slice (this device's HBM, budget-checked)
+        #: and a PEER remainder priced at interconnect bandwidth.
+        self.ep = ep
         #: optional SensitivityProfile (DESIGN.md §15): re-prices every
         #: enumerated plan's quality_proxy with the traffic-weighted
         #: per-expert objective, re-ranking the dominant set. None (or a
@@ -228,10 +247,19 @@ class ParetoFrontier:
                       for b, c in zip(sorted(count_grids), combo)}
             nq = sum(counts.values())
             for r in res_levels:
+                # EP residency split (DESIGN.md §16): a level of r
+                # accelerator-resident experts shards ~evenly over ep
+                # devices; this device holds ceil(r/ep) locally (the
+                # max across ranks — conservative for the budget
+                # check), the rest are PEER. ep=1: local=r, peer=0 —
+                # the historical plan bit-for-bit.
+                local = -(-r // ep) if r else 0
+                peer = r - local
                 plan = balanced_ladder_plan(
                     layers, e, counts, ladder=self.ladder,
                     group_size=cfg.mop.group_size,
-                    seed=seed, resident_experts=r)
+                    seed=seed, resident_experts=local,
+                    peer_experts=peer)
                 qos = cost_model.estimate_qos(cfg, plan, hw, batch_size,
                                               profile)
                 per_rung = tuple(total - nq if b >= 16 else counts[b]
@@ -239,7 +267,8 @@ class ParetoFrontier:
                 pts.append(FrontierPoint(num_q_experts=nq,
                                          resident_experts=r,
                                          plan=plan, qos=qos,
-                                         counts_per_rung=per_rung))
+                                         counts_per_rung=per_rung,
+                                         peer_experts=peer))
         #: the full enumeration (kept for sweeps/plots); dominated points
         #: included.
         self.all_points: List[FrontierPoint] = pts
@@ -260,10 +289,16 @@ class ParetoFrontier:
         per rung, levels chosen as the largest count whose K-fold product
         times the residency levels stays under ``max_enum_points`` (the
         count-combo constraint ``sum <= E`` only shrinks it further);
-        0 and E are always included."""
+        0 and E are always included.
+
+        Under EP (DESIGN.md §16) every level must be a multiple of
+        ``self.ep`` — mixed_moe shards each rung bank contiguously over
+        the EP axis, so per-layer bank sizes that do not split evenly
+        cannot dispatch. ep=1 keeps every grid unchanged."""
         qr = quantized_rungs(self.ladder)
+        ep = self.ep
         if len(qr) == 1:
-            return {qr[0]: list(range(e + 1))}
+            return {qr[0]: list(range(0, e + 1, ep))}
         budget = max(max_enum_points // max(n_res, 1), 1)
         per_rung = max(2, int(budget ** (1.0 / len(qr))))
         if per_rung >= e + 1:
@@ -271,6 +306,8 @@ class ParetoFrontier:
         else:
             stride = -(-e // (per_rung - 1))        # ceil
             levels = sorted({*range(0, e + 1, stride), e})
+        if ep > 1:
+            levels = sorted({lv - lv % ep for lv in levels} | {e})
         return {b: list(levels) for b in qr}
 
     @staticmethod
@@ -315,7 +352,7 @@ class ParetoFrontier:
                               seed=self.seed,
                               residency_step=self.residency_step,
                               max_enum_points=self.max_enum_points,
-                              profile=self.profile)
+                              profile=self.profile, ep=self.ep)
 
     def profile_variant(self, profile) -> "ParetoFrontier":
         """Re-enumerate and re-rank under a (new) sensitivity profile
@@ -326,7 +363,7 @@ class ParetoFrontier:
                               batch_size=self.batch_size, seed=self.seed,
                               residency_step=self.residency_step,
                               max_enum_points=self.max_enum_points,
-                              profile=profile)
+                              profile=profile, ep=self.ep)
 
     # -- queries -----------------------------------------------------------
     def feasible(self, target: QoSTarget) -> List[FrontierPoint]:
@@ -410,6 +447,11 @@ class ParetoFrontier:
             if not binary:
                 rec["counts_per_rung"] = [int(c) for c in p.counts_per_rung]
                 rec["ladder"] = list(self.ladder)
+            if self.ep > 1:
+                # EP-only keys (DESIGN.md §16): ep=1 records stay
+                # byte-identical to the checked-in golden fixture.
+                rec["ep"] = self.ep
+                rec["peer_experts"] = int(p.peer_experts)
             out.append(rec)
         return out
 

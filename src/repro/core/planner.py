@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Literal, Mapping, Optional
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core import cost_model
 from repro.core.precision_plan import (PrecisionPlan, balanced_ladder_plan,
@@ -70,14 +72,29 @@ class AdaptivePlanner:
 
     def __init__(self, cfg: ModelConfig,
                  hw: cost_model.HardwareModel = cost_model.HardwareModel(),
-                 seed: int = 0, profile=None):
+                 seed: int = 0, profile=None, ep: int = 1):
         if cfg.moe is None:
             raise ValueError(
                 f"{cfg.arch_id}: MoP planning needs routed experts "
                 "(DESIGN.md §5 Arch-applicability)")
+        ep = int(ep)
+        if ep < 1:
+            raise ValueError(f"ep must be >= 1, got {ep}")
+        if ep > 1 and cfg.moe.num_experts % ep:
+            raise ValueError(
+                f"{cfg.arch_id}: {cfg.moe.num_experts} experts do not "
+                f"split over ep={ep} devices (num_experts %% ep must "
+                "be 0)")
         self.cfg = cfg
         self.hw = hw
         self.seed = seed
+        #: EP shard count (DESIGN.md §16): counts round to multiples of
+        #: ep (bank shards must split evenly over the mesh) and the
+        #: residency budget buys LOCAL experts — the other ep-1 shards
+        #: mirror the purchase, so up to ep x the local capacity is
+        #: accelerator-resident (the surplus rides the PEER tier). ep=1
+        #: is the historical single-device planner bit-for-bit.
+        self.ep = ep
         #: optional SensitivityProfile (DESIGN.md §15): data-driven
         #: quality pricing for plan()/frontier(). None = legacy flat cost.
         self.profile = profile
@@ -112,7 +129,15 @@ class AdaptivePlanner:
     def plan(self, mem_budget_bytes: float, preference: Preference,
              num_q_experts: Optional[int] = None,
              batch_size: int = 1,
-             counts: Optional[Mapping[int, int]] = None) -> PlanResult:
+             counts: Optional[Mapping[int, int]] = None,
+             resident_experts: Optional[int] = None,
+             peer_experts: Optional[int] = None) -> PlanResult:
+        """``resident_experts``/``peer_experts`` (EP apply path,
+        DESIGN.md §16) pin the placement split directly — the engine
+        passes a frontier point's exact (total resident, peer) pair so
+        the applied plan is the point's plan bit-for-bit; ``None``
+        (every single-device caller) derives residency from the budget
+        as always."""
         if mem_budget_bytes < self.size_ne:
             # paper §3: non-expert layers always live on the accelerator in
             # 16-bit — below that floor no plan exists.
@@ -145,12 +170,28 @@ class AdaptivePlanner:
             raise ValueError(preference)
         # residency from the ACTUAL balanced counts
         counts = self._balance_counts(counts)
-        resident = self._resident_budget(mem_budget_bytes, counts)
+        if resident_experts is not None:
+            # pinned placement (frontier apply path): total resident =
+            # local + peer; balanced_ladder_plan takes the LOCAL count
+            total_res = int(np.clip(resident_experts, 0, total))
+            peer = int(np.clip(peer_experts or 0, 0, total_res))
+            resident, peer = total_res - peer, peer
+        elif self.ep > 1:
+            # budget buys LOCAL residency; the other ep-1 shards hold
+            # the same per-device share, reached via the PEER tier
+            n_local = self._resident_budget(mem_budget_bytes, counts)
+            total_res = min(total, n_local * self.ep)
+            resident = -(-total_res // self.ep) if total_res else 0
+            peer = total_res - resident
+        else:
+            resident = self._resident_budget(mem_budget_bytes, counts)
+            peer = 0
 
         plan = balanced_ladder_plan(
             self.cfg.num_layers, self.cfg.moe.num_experts, counts,
             ladder=self.ladder, group_size=self.cfg.mop.group_size,
-            seed=self.seed, resident_experts=resident)
+            seed=self.seed, resident_experts=resident,
+            peer_experts=peer)
         qos = cost_model.estimate_qos(self.cfg, plan, self.hw, batch_size,
                                       self.profile)
         if qos.device_bytes > mem_budget_bytes * 1.001:
@@ -163,7 +204,10 @@ class AdaptivePlanner:
     def _balance_counts(self, counts: Mapping[int, int]) -> Dict[int, int]:
         """Round each rung's global count to a balanced per-layer multiple
         and clip the joint total to the expert grid (cheapest rung keeps
-        priority on clipping, matching the assignment order)."""
+        priority on clipping, matching the assignment order). Under EP
+        per-layer counts additionally round DOWN to multiples of
+        ``self.ep`` so every rung bank splits evenly over the mesh
+        (mixed_moe's dispatch invariant — DESIGN.md §16)."""
         layers = self.cfg.num_layers
         e = self.cfg.moe.num_experts
         out: Dict[int, int] = {}
@@ -171,6 +215,7 @@ class AdaptivePlanner:
         for b in quantized_rungs(self.ladder):
             per_layer = int(round(int(counts.get(b, 0)) / layers))
             per_layer = min(max(per_layer, 0), room)
+            per_layer -= per_layer % self.ep
             out[b] = per_layer * layers
             room -= per_layer
         return out
@@ -197,13 +242,17 @@ class AdaptivePlanner:
 
     def replan(self, mem_budget_bytes: float, preference: Preference,
                num_q_experts: Optional[int] = None, batch_size: int = 1,
-               counts: Optional[Mapping[int, int]] = None):
+               counts: Optional[Mapping[int, int]] = None,
+               resident_experts: Optional[int] = None,
+               peer_experts: Optional[int] = None):
         """Returns (PlanResult, delta|None). Keeps planner state."""
         from repro.core.precision_plan import (delta_cost_bytes,
                                                migrated_expert_keys,
                                                reconfig_delta)
         new = self.plan(mem_budget_bytes, preference, num_q_experts,
-                        batch_size, counts=counts)
+                        batch_size, counts=counts,
+                        resident_experts=resident_experts,
+                        peer_experts=peer_experts)
         delta = None
         if self.current is not None:
             delta = reconfig_delta(self.current.plan, new.plan)
@@ -240,7 +289,7 @@ class AdaptivePlanner:
             from repro.core.pareto import ParetoFrontier
             self._frontiers[batch_size] = ParetoFrontier(
                 self.cfg, self.hw, batch_size=batch_size, seed=self.seed,
-                profile=self.profile)
+                profile=self.profile, ep=self.ep)
         return self._frontiers[batch_size]
 
     def sweep(self, mem_budget_bytes: float, batch_size: int = 1,

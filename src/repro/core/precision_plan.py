@@ -29,7 +29,11 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-DEVICE, HOST = 0, 1
+#: placement tiers (DESIGN.md §16): LOCAL accelerator HBM, host DRAM
+#: behind the PCIe link, or a PEER device's HBM reached via the EP
+#: all2all at inter-device bandwidth. Single-device plans never contain
+#: PEER, so the historical two-tier encoding is preserved byte-for-byte.
+DEVICE, HOST, PEER = 0, 1, 2
 
 #: rungs the quantization substrate implements (DESIGN.md §2): packed
 #: int4 / int8 group-wise symmetric, plus the bf16 identity rung.
@@ -119,6 +123,45 @@ class PrecisionPlan:
     def resident_fraction(self) -> float:
         return float((self.location == DEVICE).mean())
 
+    def peer_fraction(self) -> float:
+        """Fraction of experts resident on PEER devices (EP shards
+        reached via all2all — DESIGN.md §16). 0.0 for single-device
+        plans."""
+        return float((self.location == PEER).mean())
+
+    def placement_counts(self) -> Dict[str, int]:
+        """{tier name: expert count} over the three placement tiers."""
+        return {"device": int((self.location == DEVICE).sum()),
+                "peer": int((self.location == PEER).sum()),
+                "host": int((self.location == HOST).sum())}
+
+    def device_assignment(self, ep: int) -> np.ndarray:
+        """[L, E] owning EP rank of every expert under ``ep``-way expert
+        parallelism — derived, not stored: mixed_moe shards each rung
+        bank contiguously over the EP axis (``_local_slot``: within bank
+        b of per-layer total tot_b, rank r owns bank slots
+        [r*tot_b/ep, (r+1)*tot_b/ep)), so the assignment is a pure
+        function of (bits, ep). Raises when a bank does not split
+        evenly — the same constraint ``moe_apply`` enforces at dispatch
+        time (the planner rounds per-layer counts to multiples of ep)."""
+        ep = int(ep)
+        if ep < 1:
+            raise ValueError(f"ep must be >= 1, got {ep}")
+        sizes = self.bank_sizes()
+        if any(tot % ep for tot in sizes):
+            raise ValueError(
+                f"EP banks must split evenly: per-layer bank sizes "
+                f"{sizes} over {ep} shards (planner rounds per-layer "
+                "counts)")
+        ranks = np.empty(self.bits.shape, dtype=np.int32)
+        order = self.expert_order()
+        for l in range(self.num_layers):
+            slot_rank = np.concatenate([
+                np.repeat(np.arange(ep, dtype=np.int32), tot // ep)
+                for tot in sizes if tot])
+            ranks[l, order[l]] = slot_rank
+        return ranks
+
     def bank_sizes(self) -> Tuple[int, ...]:
         """Per-layer bank sizes in ASCENDING-bits bank order — static
         shapes for the N-bank MoE. Binary ladder: ``(E4, E16)``."""
@@ -158,7 +201,8 @@ def balanced_ladder_plan(num_layers: int, num_experts: int,
                          counts: Mapping[int, int], *,
                          ladder: Sequence[int] = DEFAULT_LADDER,
                          group_size: int = 64, seed: int = 0,
-                         resident_experts: Optional[int] = None
+                         resident_experts: Optional[int] = None,
+                         peer_experts: int = 0
                          ) -> PrecisionPlan:
     """Paper §3 assignment generalized to the ladder, balanced per layer.
 
@@ -174,6 +218,14 @@ def balanced_ladder_plan(num_layers: int, num_experts: int,
     the paper's priority rule generalized to the ladder: cheapest rung
     first (lower bits = cheaper to keep resident -> higher hit rate),
     round-robin over layers so every layer keeps a similar hit rate.
+
+    ``peer_experts`` (global count, EP deployments — DESIGN.md §16)
+    extends the same priority order past the local-resident slice: the
+    next ``peer_experts`` entries land on PEER devices (accelerator HBM
+    reached via all2all) before the remainder falls to HOST. The rng
+    stream is untouched (the priority order is built either way), so
+    ``peer_experts=0`` plans are bit-identical to the historical
+    two-tier encoding.
     """
     lad = validate_ladder(ladder)
     qr = quantized_rungs(lad)
@@ -199,8 +251,13 @@ def balanced_ladder_plan(num_layers: int, num_experts: int,
             off += per_layer[b]
 
     location = np.full((num_layers, num_experts), DEVICE, dtype=np.int8)
+    if peer_experts and resident_experts is None:
+        raise ValueError("peer_experts needs an explicit resident_experts "
+                         "count (the priority order assigns LOCAL first)")
     if resident_experts is not None:
         resident_experts = int(np.clip(resident_experts, 0, total))
+        peer_experts = int(np.clip(peer_experts, 0,
+                                   total - resident_experts))
         location[:] = HOST
         # priority: cheapest rung first (paper §3 generalized), round-robin
         # over layers so every layer keeps a similar hit rate.
@@ -217,6 +274,9 @@ def balanced_ladder_plan(num_layers: int, num_experts: int,
                         order.append(c[i])
         for (l, e) in order[:resident_experts]:
             location[l, e] = DEVICE
+        for (l, e) in order[resident_experts:resident_experts
+                            + peer_experts]:
+            location[l, e] = PEER
     return PrecisionPlan(bits=bits, location=location, ladder=lad,
                          group_size=group_size, seed=seed)
 
@@ -245,17 +305,21 @@ def reconfig_delta(old: PrecisionPlan, new: PrecisionPlan):
 
     Returns dict with index arrays of experts to (re)quantize (bit-width
     DROPS, incl. 8->4 demotions), dequantize/promote (bit-width RISES,
-    incl. 4->8 promotions), upload (host->device) and evict
-    (device->host)."""
+    incl. 4->8 promotions), upload (host->accelerator: DEVICE or PEER),
+    evict (accelerator->host) and rebalance (DEVICE<->PEER moves — the
+    expert stays in accelerator HBM and travels over the interconnect,
+    never the host link; single-device plans never produce any)."""
     if old.bits.shape != new.bits.shape:
         raise ValueError("plans must describe the same model")
+    old_acc = old.location != HOST
+    new_acc = new.location != HOST
     return {
         "to_quantize": np.argwhere(old.bits > new.bits),
         "to_dequantize": np.argwhere(old.bits < new.bits),
-        "to_upload": np.argwhere((old.location == HOST)
-                                 & (new.location == DEVICE)),
-        "to_evict": np.argwhere((old.location == DEVICE)
-                                & (new.location == HOST)),
+        "to_upload": np.argwhere(~old_acc & new_acc),
+        "to_evict": np.argwhere(old_acc & ~new_acc),
+        "to_rebalance": np.argwhere(old_acc & new_acc
+                                    & (old.location != new.location)),
     }
 
 
@@ -269,7 +333,7 @@ def migrated_expert_keys(delta, new: PrecisionPlan) -> List[Tuple[int, int]]:
     keys = {(int(l), int(e)) for (l, e) in delta["to_upload"]}
     for field in ("to_quantize", "to_dequantize"):
         for (l, e) in delta[field]:
-            if new.location[l, e] == DEVICE:
+            if new.location[l, e] != HOST:
                 keys.add((int(l), int(e)))
     return sorted(keys)
 

@@ -77,14 +77,23 @@ def _activation_rules(cfg, mesh, dp_axes: Tuple[str, ...],
     dp = _dp_entry(dp_axes)
     m = MODEL_AXIS
     msize = _axis_size(mesh, m)
+    # Pure-EP serving mesh (DESIGN.md §16): every batch-ish axis has
+    # size 1, so the "model" axis exists only to shard expert banks.
+    # Attention stays fully replicated there — sharding heads would turn
+    # the wo projection into a cross-device partial-sum contraction and
+    # decode would no longer be bit-identical to the single-device
+    # engine (the §16 parity guarantee).
+    ep_only = cfg.moe is not None and not train and all(
+        _axis_size(mesh, a) <= 1 for a in ("pod", "data"))
+    shard_m = msize > 1 and not ep_only
     h = cfg.attention.num_heads if cfg.attention else 0
-    heads_ok = h > 0 and msize > 1 and h % msize == 0
+    heads_ok = h > 0 and shard_m and h % msize == 0
     ssm_h = 0
     if cfg.ssm is not None:
         di = cfg.ssm.expand * cfg.d_model if cfg.ssm.kind == "mamba2" \
             else cfg.d_model
         ssm_h = di // cfg.ssm.head_dim
-    ssm_ok = ssm_h > 0 and msize > 1 and ssm_h % msize == 0
+    ssm_ok = ssm_h > 0 and shard_m and ssm_h % msize == 0
     rules = {
         # (B, S, d): residual stream shards over tokens only — the d dim
         # stays replicated so norms/routers need no collective.
@@ -96,7 +105,7 @@ def _activation_rules(cfg, mesh, dp_axes: Tuple[str, ...],
         # (B, Hkv, G, Sq, Sk): grouped scores (taken when heads can NOT
         # shard) shard the query blocks instead (§Perf smollm).
         "attn_scores_full_g": P(dp, None, None,
-                                m if msize > 1 else None, None),
+                                m if shard_m else None, None),
         # decode reads the window-sharded-free cache; batch-only (sharding
         # Sk would psum every softmax — DESIGN.md §4).
         "attn_scores_cache_g": P(dp, None, None, None, None),
@@ -120,6 +129,28 @@ def activation_constraints(cfg, mesh, dp_axes: Tuple[str, ...],
         _ACTIVE.rules, _ACTIVE.mesh = prev
 
 
+def _effective_spec(spec: P, mesh) -> Optional[P]:
+    """``spec`` with size-1 mesh axes stripped; None when nothing is left.
+    Sharding over a size-1 axis is replication, but the CONSTRAINT is not
+    free: it anchors GSPMD propagation and can repartition surrounding
+    contractions (different partial-sum order => decode on a (1, ep) EP
+    serving mesh would no longer be bit-identical to the single-device
+    engine, DESIGN.md §16). Dropping trivial constraints is semantically
+    identity and keeps production meshes (axis sizes > 1) unchanged."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if _axis_size(mesh, a) > 1)
+        out.append(axes if len(axes) > 1
+                   else (axes[0] if axes else None))
+    if all(e is None for e in out):
+        return None
+    return P(*out)
+
+
 def constrain(x, name: str):
     """Apply the active sharding rule for ``name`` (no-op outside an
     ``activation_constraints`` context or for unknown/mismatched names)."""
@@ -128,6 +159,9 @@ def constrain(x, name: str):
         return x
     spec = rules.get(name)
     if spec is None or len(spec) > x.ndim:
+        return x
+    spec = _effective_spec(spec, _ACTIVE.mesh)
+    if spec is None:
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(_ACTIVE.mesh, spec))

@@ -62,6 +62,16 @@ bf16 footprint of all tenants:
         "priority": 1, "deadline_s": 30.0, "requests": 3},
        {"name": "batch", "max_ppl_x": 1.0, "requests": 3}]}
 
+``--ep N --dp M`` serves over an expert-parallel mesh (DESIGN.md §16):
+each of the M DP replicas is a whole engine decoding over its own
+(1, N) device slice, experts sharded over the mesh's "model" axis with
+all2all token routing, and the frontier gains the peer-device placement
+tier. Runs on CPU with a forced host device count::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --ep 2 --dp 2 --requests 4
+
 Smoke-reduced on CPU (same-family config); the planner/engine logic and
 the plan signatures are identical at full scale.
 """
@@ -203,6 +213,60 @@ def _serve_tenants(args, cfg, model, params0, profile=None):
     mt.close()                  # joins the shared async transfer workers
 
 
+def _serve_dp(args, cfg, params, profile=None):
+    """--dp N: a DPReplicaGroup of EP engines behind one declarative
+    surface (DESIGN.md §16.3). Each replica decodes over its own (1, ep)
+    device slice; the §14.3 autoscaler watches the group's demand
+    utilization between iterations and its replica decisions land on
+    real engines (scale-down drains, no request is dropped)."""
+    from repro.serving.ep import make_dp_group
+    group = make_dp_group(
+        cfg, params,
+        EngineConfig(max_slots=4, max_len=32 + args.max_new_tokens,
+                     overlap=args.overlap == "on"),
+        ep=args.ep, dp=args.dp, max_replicas=args.dp)
+    if profile is not None:
+        for e in group.engines:
+            e.planner.set_profile(profile)
+    planner = group.engines[0].planner
+    full = planner.size_ne + planner.num_experts_total * planner.size_e16
+    budget = args.budget_gb * 1e9 if args.budget_gb else full * 0.6
+    max_loss = args.max_ppl_x - 1.0 if args.max_ppl_x else None
+    target = QoSTarget(
+        min_tokens_per_s=(args.min_tps if args.min_tps is not None
+                          else float("inf")),
+        max_quality_loss=max_loss, mem_budget_bytes=budget)
+    points = group.apply_target(target)
+    print(f"[serve] ep={args.ep} dp={group.n_replicas} "
+          f"target[{target.describe()}] -> {points[0].summary()}")
+    rng = np.random.default_rng(0)
+    for k in range(args.requests):
+        slo = RequestSLO()
+        if args.priority_split and k % 2:
+            slo = RequestSLO(priority=1, deadline_s=30.0)
+        group.submit_request(ServeRequest(
+            prompt=rng.integers(1, cfg.vocab_size, 16),
+            max_new_tokens=args.max_new_tokens, slo=slo))
+    tick = 0.0
+    while group.has_work():
+        group.run_iteration(temperature=args.temperature)
+        decision = group.autoscale_step(tick)
+        if decision:
+            print(f"[serve] autoscale {decision:+d} -> "
+                  f"{group.n_replicas} replicas")
+        tick += 1.0
+    m = group.metrics
+    print(f"[serve] ep={args.ep} dp={group.n_replicas} "
+          f"{m['tokens_generated']:.0f} tokens across "
+          f"{m['replicas']:.0f} replicas, "
+          f"{group.throughput_tokens_per_s():.1f} tok/s aggregate, "
+          f"{m['iterations']:.0f} engine iterations")
+    for rid in range(min(2, args.requests)):
+        r = group.result(rid)
+        print(f"  {r.summary()} tokens={r.tokens[:12]}...")
+    group.close()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b", choices=list(ARCH_IDS))
@@ -269,6 +333,18 @@ def main():
                     help="JSON spec of N tenants served under ONE budget "
                          "via the multi-tenant arbiter (DESIGN.md §10); "
                          "see the module docstring for the schema")
+    # -- expert-parallel mesh serving (DESIGN.md §16) -------------------
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-parallel shard count: decode over a "
+                         "(1, ep) mesh with experts sharded across the "
+                         "'model' axis (all2all token routing); expert "
+                         "count must divide by ep. Needs ep*dp devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 on CPU)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replica count: dp whole engines "
+                         "on disjoint (1, ep) device slices behind one "
+                         "submit surface, autoscaler-driven (§16.3)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -284,6 +360,21 @@ def main():
         ladder = tuple(int(b) for b in args.ladder.split(","))
         cfg = cfg.replace(mop=dataclasses.replace(cfg.mop, ladder=ladder))
         print(f"[serve] precision ladder {ladder}")
+    if args.ep < 1 or args.dp < 1:
+        raise SystemExit(f"--ep/--dp must be >= 1 (got ep={args.ep} "
+                         f"dp={args.dp})")
+    if args.ep > 1 or args.dp > 1:
+        from repro.serving.ep import validate_ep_layout
+        try:
+            # reject up front — a ladder/expert-count combo that does not
+            # divide over the EP axis must fail before building the model
+            validate_ep_layout(cfg, args.ep)
+        except ValueError as e:
+            raise SystemExit(f"[serve] {e}")
+        if args.tenants:
+            raise SystemExit("--ep/--dp and --tenants are mutually "
+                             "exclusive (one mesh per tenant engine is "
+                             "not implemented; see DESIGN.md §16)")
     model = build_model(cfg)
     if args.ckpt_dir and CheckpointManager(args.ckpt_dir).latest_step():
         tree, _ = CheckpointManager(args.ckpt_dir).restore()
@@ -315,9 +406,21 @@ def main():
         _serve_tenants(args, cfg, model, params, profile)
         return
 
-    engine = build_engine(cfg, params, EngineConfig(
-        max_slots=4, max_len=32 + args.max_new_tokens,
-        overlap=args.overlap == "on"))
+    if args.dp > 1:
+        _serve_dp(args, cfg, params, profile)
+        return
+
+    if args.ep > 1:
+        from repro.serving.ep import build_ep_engine
+        engine = build_ep_engine(cfg, params, EngineConfig(
+            max_slots=4, max_len=32 + args.max_new_tokens,
+            overlap=args.overlap == "on"), ep=args.ep)
+        print(f"[serve] expert parallelism ep={args.ep}: (1, {args.ep}) "
+              f"mesh, experts all2all-sharded (DESIGN.md §16)")
+    else:
+        engine = build_engine(cfg, params, EngineConfig(
+            max_slots=4, max_len=32 + args.max_new_tokens,
+            overlap=args.overlap == "on"))
     if args.overlap == "on":
         print("[serve] async overlapped expert streaming ON "
               "(DESIGN.md §12)")
@@ -349,20 +452,22 @@ def main():
 
     max_loss = args.max_ppl_x - 1.0 if args.max_ppl_x else None
     rng = np.random.default_rng(0)
+    par = f"ep={args.ep} dp={args.dp} "   # parallelism columns (§16)
     for budget, pref, nq, min_tps in points:
         if pref is None or min_tps is not None:
             target = QoSTarget(min_tokens_per_s=min_tps,
                                max_quality_loss=max_loss,
                                mem_budget_bytes=budget)
             point = controller.set_target(target)
-            print(f"[serve] target[{target.describe()}] -> {point.summary()}")
+            print(f"[serve] {par}target[{target.describe()}] "
+                  f"-> {point.summary()}")
         else:
             res = engine.configure(budget, pref, nq)
             # imperative phase: the controller must not keep walking the
             # previous phase's target over this plan
             controller.target = None
             controller.point = None
-            print(f"[serve] {res.summary()}")
+            print(f"[serve] {par}{res.summary()}")
         for k in range(args.requests):
             slo = RequestSLO()
             if args.priority_split and k % 2:

@@ -94,6 +94,14 @@ class EngineConfig:
     Hardware:
       * ``hw`` — analytic hardware model; None measures the host link
         bandwidth once per process and uses defaults otherwise.
+    Expert parallelism (DESIGN.md §16):
+      * ``ep`` — EP shard count of the mesh the engine decodes over.
+        The planner/frontier then round per-rung counts to multiples of
+        ``ep`` (rung banks must split evenly over the mesh) and add the
+        PEER placement tier (experts in a peer device's HBM, reached
+        via the all2all at interconnect bandwidth). ``1`` (default) is
+        the single-device engine bit-for-bit; the mesh itself is passed
+        to ``build_engine(mesh=...)`` (see ``serving/ep``).
     """
     max_slots: int = 8
     max_len: int = 256
@@ -110,6 +118,7 @@ class EngineConfig:
     page_size: int = 16
     kv_pool_pages: Optional[int] = None
     kv_reserve: bool = False
+    ep: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

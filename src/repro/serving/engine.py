@@ -74,7 +74,7 @@ from repro.core.expert_cache import (AsyncExpertCache, ExpertCache,
                                      PrefetchingExpertCache)
 from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
 from repro.core.planner import AdaptivePlanner, PlanResult
-from repro.core.precision_plan import DEVICE, PrecisionPlan
+from repro.core.precision_plan import DEVICE, HOST, PrecisionPlan
 from repro.models.model import Model, apply_precision_plan, build_model
 from repro.serving.api import EngineConfig, ServeRequest, ServeResult
 from repro.serving.metrics import base_metrics
@@ -179,7 +179,8 @@ class AdaptiveServingEngine:
                 eff = 0.85 if config.overlap else 0.0
             self.hw = HardwareModel(host_link_bw=measure_host_link_bw(),
                                     overlap_efficiency=float(eff))
-        self.planner = AdaptivePlanner(cfg, hw=self.hw)
+        self.planner = AdaptivePlanner(cfg, hw=self.hw,
+                                       ep=getattr(config, "ep", 1))
         self.model: Model = build_model(cfg, mesh,
                                         use_kernel=self.use_kernel)
         if self.model.prefill_into_slot is None:
@@ -379,9 +380,21 @@ class AdaptiveServingEngine:
         HBM is returned to the pool."""
         counts = point.quantized_counts() if point.counts_per_rung \
             else None
-        result = self._reconfigure(float(point.qos.device_bytes),
-                                   "quality", point.num_q_experts,
-                                   counts=counts)
+        peer = int(getattr(point, "peer_experts", 0) or 0)
+        if peer or self.planner.ep > 1:
+            # EP apply path (DESIGN.md §16): pin the point's exact
+            # (total resident, peer) split — the budget-derived
+            # residency cannot reconstruct a peer slice. Single-device
+            # points keep the historical budget-derived path untouched.
+            result = self._reconfigure(
+                float(point.qos.device_bytes), "quality",
+                point.num_q_experts, counts=counts,
+                resident_experts=point.resident_experts,
+                peer_experts=peer)
+        else:
+            result = self._reconfigure(float(point.qos.device_bytes),
+                                       "quality", point.num_q_experts,
+                                       counts=counts)
         self._active_point = point
         return result
 
@@ -420,7 +433,8 @@ class AdaptiveServingEngine:
 
     def _reconfigure(self, mem_budget_bytes: float, preference: str,
                      num_q_experts: Optional[int] = None,
-                     counts=None) -> PlanResult:
+                     counts=None, resident_experts: Optional[int] = None,
+                     peer_experts: Optional[int] = None) -> PlanResult:
         """Replan under new constraints; safe to call with requests in
         flight. Placement-only changes apply immediately (between decode
         iterations); a bank-split change drains the active slots first."""
@@ -431,7 +445,9 @@ class AdaptiveServingEngine:
         self.expert_cache.drain()
         result, delta = self.planner.replan(
             mem_budget_bytes, preference, num_q_experts,
-            batch_size=self.max_slots, counts=counts)
+            batch_size=self.max_slots, counts=counts,
+            resident_experts=resident_experts,
+            peer_experts=peer_experts)
         plan = result.plan
         prev_plan = self._plan_result.plan \
             if self._plan_result is not None else None
@@ -463,8 +479,13 @@ class AdaptiveServingEngine:
             self.expert_cache.invalidate()
         self._plan_result = result
         self._order = plan.expert_order()
+        # accelerator-resident = LOCAL + PEER (DESIGN.md §16): under EP
+        # the banks are physically sharded over the mesh, so a PEER
+        # expert is served by the all2all dispatch, never streamed over
+        # the host link. Single-device plans have no PEER entries, so
+        # this is the historical DEVICE mask bit-for-bit.
         newly_resident = {
-            (li, ei) for li, ei in np.argwhere(plan.location == DEVICE)}
+            (li, ei) for li, ei in np.argwhere(plan.location != HOST)}
         if not rebuild:
             # Same bank shapes does NOT imply the same bits ASSIGNMENT:
             # an earlier apply_bits_update may have swapped rungs between

@@ -1,0 +1,27 @@
+"""Expert-parallel multi-device serving (DESIGN.md §16).
+
+Two layers on top of the single-device engine:
+
+* :func:`~repro.serving.ep.mesh_engine.build_ep_engine` — ONE engine
+  decoding over a (1, ep) jax mesh: the decode FFN dispatches through
+  the ``mixed_moe`` shard_map EP path (all2all token routing, per-device
+  rung-bank shards) and the planner/frontier gain the PEER placement
+  tier. Output is bit-identical to the single-device engine
+  (tests/test_token_gather_ep.py pins EP ∈ {1, 2, 4}).
+* :class:`~repro.serving.ep.replica.DPReplicaGroup` — N engine replicas
+  behind one submit/run/result surface; the raw throughput multiplier
+  for heavy traffic, driven by the control plane's
+  :class:`~repro.serving.control_plane.autoscale.ReplicaAutoscaler`.
+
+Runnable on CPU via the forced host device count
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE
+importing jax — the ``launch/dryrun.py`` pattern), so tests and CI need
+no multi-accelerator box.
+"""
+from repro.serving.ep.mesh_engine import (  # noqa: F401
+    build_ep_engine, validate_ep_layout,
+)
+from repro.serving.ep.replica import DPReplicaGroup, make_dp_group  # noqa: F401
+
+__all__ = ["build_ep_engine", "validate_ep_layout", "DPReplicaGroup",
+           "make_dp_group"]

@@ -1,0 +1,71 @@
+"""EP mesh engine: the single-device serving engine over a (1, ep) mesh.
+
+The engine itself needs no new decode path — ``AdaptiveServingEngine``
+already runs every FFN through ``mixed_moe.moe_apply`` under shard_map,
+which dispatches tokens over the mesh's "model" axis (all2all routing,
+per-device shards of each rung bank, grouped kernels per local bank).
+What this module adds is the LAYOUT contract: expert counts and every
+rung bank must divide evenly over the EP axis, and the engine's planner
+must know ``ep`` so replans keep honouring that (``EngineConfig.ep``).
+
+Bit-identity with the single-device engine (pinned by
+tests/test_token_gather_ep.py) rests on the mesh being (1, ep): the
+size-1 "data" axis replicates tokens on every rank (no token-gather /
+fsdp partial sums), each rank computes exact per-expert contributions
+for its local experts, and the closing psum adds exact zeros from ranks
+a token was not dispatched to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.api import EngineConfig, build_engine
+
+__all__ = ["build_ep_engine", "validate_ep_layout"]
+
+
+def validate_ep_layout(cfg, ep: int) -> None:
+    """Raise ``ValueError`` unless ``cfg``'s MoE layout divides over an
+    EP axis of size ``ep`` (every per-rung bank is sharded contiguously
+    across ranks, so total experts — and, after planner rounding, every
+    bank — must be a multiple of ``ep``)."""
+    ep = int(ep)
+    if ep < 1:
+        raise ValueError(f"ep must be >= 1, got {ep}")
+    if ep == 1:
+        return
+    if cfg.moe is None:
+        raise ValueError(
+            f"--ep {ep} needs an MoE model; {cfg.arch_id} has no experts "
+            "to shard")
+    e = cfg.moe.num_experts
+    if e % ep != 0:
+        raise ValueError(
+            f"num_experts={e} does not divide over ep={ep} "
+            f"({e} % {ep} = {e % ep}); pick ep from the divisors of the "
+            "expert count so every rung bank shards evenly")
+
+
+def build_ep_engine(cfg, params, config: Optional[EngineConfig] = None, *,
+                    ep: int = 1, replica: int = 0, expert_cache=None):
+    """One serving engine decoding over the (1, ep) mesh of DP replica
+    ``replica`` (device slice ``[replica*ep, (replica+1)*ep)``).
+
+    ``ep=1`` builds the plain single-device engine (no mesh) — the
+    historical path bit-for-bit. Raises the actionable ``XLA_FLAGS``
+    error when the host exposes too few devices, and ``ValueError`` on
+    layouts that do not divide over the EP axis.
+    """
+    validate_ep_layout(cfg, ep)
+    config = config or EngineConfig()
+    if config.ep not in (1, ep):
+        raise ValueError(
+            f"EngineConfig.ep={config.ep} conflicts with ep={ep}")
+    config = dataclasses.replace(config, ep=int(ep))
+    mesh = None
+    if ep > 1 or replica > 0:
+        from repro.launch.mesh import make_ep_mesh
+        mesh = make_ep_mesh(ep, replica=replica)
+    return build_engine(cfg, params, config, mesh=mesh,
+                        expert_cache=expert_cache)

@@ -1,0 +1,316 @@
+"""EP serving subsystem (DESIGN.md §16): peer placement tier in the
+cost model/frontier/planner, EP layout validation, mesh builders, and
+the DP replica group + autoscaler integration."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import cost_model as CM
+from repro.core.cost_model import HardwareModel, estimate_qos
+from repro.core.pareto import ParetoFrontier
+from repro.core.planner import AdaptivePlanner
+from repro.core.precision_plan import (DEVICE, HOST, PEER,
+                                       balanced_ladder_plan)
+from repro.serving.api import ServeResult
+from repro.serving.control_plane.autoscale import ReplicaAutoscaler
+from repro.serving.ep.mesh_engine import validate_ep_layout
+from repro.serving.ep.replica import DPReplicaGroup
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduce_for_smoke(get_config("mixtral-8x7b"))   # L=2, E=8
+
+
+@pytest.fixture(scope="module")
+def cfg_full():
+    # full-size config: analytic cost model only, nothing is built
+    return get_config("mixtral-8x7b")
+
+
+def _plan(cfg, counts, resident=None, peer=0):
+    return balanced_ladder_plan(
+        cfg.num_layers, cfg.moe.num_experts, counts,
+        group_size=cfg.mop.group_size,
+        resident_experts=resident, peer_experts=peer)
+
+
+class TestPeerCostModel:
+    def test_peer_terms_zero_without_peer_experts(self, cfg):
+        plan = _plan(cfg, {4: 8}, resident=8)
+        frac, by, layers = CM.peer_access_stats(cfg, plan)
+        assert (frac, by, layers) == (0.0, 0.0, 0)
+        assert estimate_qos(cfg, plan).t_peer_ms == 0.0
+
+    def test_ep1_t_token_exact_under_any_peer_hardware(self, cfg):
+        """No PEER experts => the peer hw fields must not perturb ANY
+        output bit (the frontier golden fixture depends on this)."""
+        plan = _plan(cfg, {4: 8}, resident=8)
+        a = estimate_qos(cfg, plan, HardwareModel())
+        b = estimate_qos(cfg, plan, HardwareModel(
+            interconnect_bw=1.0, all2all_latency_s=123.0))
+        assert a == b
+        assert a.tokens_per_s == b.tokens_per_s
+
+    def test_peer_charged_at_interconnect_not_host_link(self, cfg):
+        """Peer tier moves ACTIVATION bytes at interconnect bw (+ layer
+        latency), never expert weights at host-link bw."""
+        hw = HardwareModel()
+        plan = _plan(cfg, {4: 8}, resident=8, peer=4)
+        frac, peer_bytes, layers = CM.peer_access_stats(cfg, plan)
+        assert frac > 0 and peer_bytes > 0 and layers > 0
+        itemsize = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+        per_access = 2 * cfg.d_model * itemsize
+        assert peer_bytes == pytest.approx(
+            int((plan.location == PEER).sum()) * per_access
+            * cfg.moe.top_k / cfg.moe.num_experts)
+        est = estimate_qos(cfg, plan, hw)
+        assert est.t_peer_ms == pytest.approx(
+            (peer_bytes / hw.interconnect_bw
+             + layers * hw.all2all_latency_s) * 1e3)
+        # slower interconnect -> strictly more peer time
+        slow = estimate_qos(cfg, plan, HardwareModel(interconnect_bw=1e9))
+        assert slow.t_peer_ms > est.t_peer_ms
+
+    def test_peer_faster_than_host_streaming(self, cfg_full):
+        """Same bits, same local residency: parking the overflow on a
+        PEER device beats streaming it over the host link. At real
+        expert sizes the tier gap is orders of magnitude — weight bytes
+        at host-link bw vs activation bytes at interconnect bw (the
+        smoke config's toy experts would NOT show this: its fixed
+        all2all latency outweighs streaming 24 KiB experts)."""
+        half = cfg_full.num_layers * cfg_full.moe.num_experts // 2
+        peer = _plan(cfg_full, {4: half}, resident=half, peer=half)
+        host = _plan(cfg_full, {4: half}, resident=half, peer=0)
+        qp = estimate_qos(cfg_full, peer)
+        qh = estimate_qos(cfg_full, host)
+        assert qp.tokens_per_s > qh.tokens_per_s
+        assert qp.hit_rate == 1.0 and qh.hit_rate < 1.0
+        assert qp.t_peer_ms < qh.t_exposed_ms
+
+    def test_device_bytes_excludes_peer(self, cfg):
+        peer = _plan(cfg, {4: 8}, resident=8, peer=8)
+        local = _plan(cfg, {4: 8}, resident=16, peer=0)
+        assert CM.device_bytes(cfg, peer) < CM.device_bytes(cfg, local)
+        assert (peer.location == DEVICE).sum() == 8
+        assert (peer.location == PEER).sum() == 8
+        assert peer.placement_counts() == {"device": 8, "peer": 8,
+                                           "host": 0}
+
+    def test_peer_requires_resident(self, cfg):
+        with pytest.raises(ValueError):
+            _plan(cfg, {4: 8}, resident=None, peer=4)
+
+
+class TestEPFrontierPlanner:
+    def test_ep1_records_byte_identical_to_default(self, cfg):
+        hw = HardwareModel()
+        base = ParetoFrontier(cfg, hw).records()
+        ep1 = ParetoFrontier(cfg, hw, ep=1).records()
+        assert base == ep1
+        assert all("ep" not in r and "peer_experts" not in r
+                   for r in ep1)
+
+    def test_ep_divisibility_rejected_everywhere(self, cfg):
+        with pytest.raises(ValueError):
+            ParetoFrontier(cfg, ep=3)
+        with pytest.raises(ValueError):
+            AdaptivePlanner(cfg, ep=5)
+        with pytest.raises(ValueError):
+            validate_ep_layout(cfg, 3)
+        with pytest.raises(ValueError):
+            validate_ep_layout(dataclasses.replace(cfg, moe=None), 2)
+        validate_ep_layout(cfg, 4)   # 8 % 4 == 0: fine
+
+    def test_ep_frontier_peer_points_and_rounded_counts(self, cfg):
+        f = ParetoFrontier(cfg, ep=4)
+        assert any(p.peer_experts > 0 for p in f.points)
+        for p in f.points:
+            assert p.num_q_experts % 4 == 0 \
+                or p.num_q_experts == f.num_experts
+            # resident splits into local (budget-checked) + peer
+            assert 0 <= p.peer_experts <= p.resident_experts
+            if p.resident_experts:
+                local = p.resident_experts - p.peer_experts
+                assert local == -(-p.resident_experts // 4)
+        recs = f.records()
+        assert all(r["ep"] == 4 for r in recs)
+
+    def test_planner_rounds_counts_to_ep_multiples(self, cfg):
+        pl = AdaptivePlanner(cfg, ep=4)
+        full = pl.size_ne + pl.num_experts_total * pl.size_e16
+        res = pl.plan(full, "quality", num_q_experts=6)
+        for b in (4,):
+            per_layer = (res.plan.bits == b).sum(axis=1)
+            assert np.all(per_layer % 4 == 0)
+
+    def test_device_assignment_contiguous_and_validated(self, cfg):
+        plan = _plan(cfg, {4: 8})
+        ranks = plan.device_assignment(4)
+        assert ranks.shape == plan.bits.shape
+        # balanced: every rank owns E/ep experts of every layer
+        for r in range(4):
+            assert np.all((ranks == r).sum(axis=1) == 2)
+        # a bank that does not divide by ep must refuse
+        odd = _plan(cfg, {4: 6})        # 3 q4 + 5 f16 per layer
+        with pytest.raises(ValueError):
+            odd.device_assignment(2)
+
+
+@pytest.mark.skipif(jax.device_count() != 1,
+                    reason="exercises the too-few-devices error path")
+class TestMeshBuilders:
+    def test_test_mesh_raises_actionable_xla_flags_error(self):
+        from repro.launch.mesh import make_test_mesh
+        with pytest.raises(RuntimeError, match="XLA_FLAGS"):
+            make_test_mesh((2, 2))
+
+    def test_ep_mesh_raises_actionable_xla_flags_error(self):
+        from repro.launch.mesh import make_ep_mesh
+        with pytest.raises(RuntimeError,
+                           match="xla_force_host_platform_device_count"):
+            make_ep_mesh(4)
+        with pytest.raises(RuntimeError, match="XLA_FLAGS"):
+            make_ep_mesh(1, replica=1)   # replica 1 needs devices [1, 2)
+
+    def test_ep1_mesh_builds_on_one_device(self):
+        from repro.launch.mesh import make_ep_mesh
+        mesh = make_ep_mesh(1)
+        assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+class _FakeScheduler:
+    def __init__(self):
+        self.queue = []
+        self.num_active = 0
+
+
+class _FakeEngine:
+    """Engine-shaped stub: one queued request retires per iteration."""
+
+    def __init__(self, slot):
+        self.slot = slot
+        self.scheduler = _FakeScheduler()
+        self.max_slots = 2
+        self.metrics = {"tokens_generated": 0, "iterations": 0}
+        self.closed = False
+        self.target = None
+        self._next = 0
+
+    def submit_request(self, request):
+        rid = self._next
+        self._next += 1
+        self.scheduler.queue.append(rid)
+        return rid
+
+    def has_work(self):
+        return bool(self.scheduler.queue)
+
+    def run_iteration(self, **kw):
+        self.metrics["iterations"] += 1
+        if not self.scheduler.queue:
+            return []
+        rid = self.scheduler.queue.pop(0)
+        self.metrics["tokens_generated"] += 4
+        return [rid]
+
+    def result(self, rid):
+        return ServeResult(rid=rid, tokens=[1, 2, 3, 4], latency_s=0.1,
+                           ttft_s=None, priority=0, deadline_s=None,
+                           deadline_met=None)
+
+    def apply_target(self, target):
+        self.target = target
+        return ("point", self.slot)
+
+    def throughput_tokens_per_s(self, include_transfer=True):
+        return 10.0
+
+    def close(self):
+        self.closed = True
+
+
+class TestDPReplicaGroup:
+    def _group(self, n=2, max_replicas=4):
+        return DPReplicaGroup(_FakeEngine, replicas=n,
+                              max_replicas=max_replicas)
+
+    def test_least_loaded_routing_and_global_rids(self):
+        g = self._group(2)
+        rids = [g.submit_request(object()) for _ in range(4)]
+        assert rids == [0, 1, 2, 3]
+        # balanced: 2 requests per replica
+        assert [len(e.scheduler.queue) for e in g.engines] == [2, 2]
+        retired = []
+        while g.has_work():
+            retired += g.run_iteration()
+        assert sorted(retired) == rids
+        # results survive with the GLOBAL rid, no cross-replica collision
+        assert [g.result(r).rid for r in rids] == rids
+        with pytest.raises(KeyError):
+            g.result(99)
+
+    def test_scale_down_drains_never_drops(self):
+        g = self._group(2)
+        for _ in range(4):
+            g.submit_request(object())
+        g.scale_to(1)
+        assert g.n_replicas == 1          # victim no longer serves...
+        assert len(g.engines) == 2        # ...but finishes its work
+        new_rid = g.submit_request(object())
+        done = []
+        while g.has_work():
+            done += g.run_iteration()
+        assert len(g.engines) == 1 and g.n_replicas == 1
+        assert sorted(done) == [0, 1, 2, 3, new_rid]
+
+    def test_scale_up_inherits_target_and_reuses_slots(self):
+        g = self._group(2)
+        g.apply_target("TARGET")
+        g.scale_to(1)
+        g.run_iteration()
+        assert len(g.engines) == 1
+        g.scale_to(3)
+        assert sorted(e.slot for e in g.engines) == [0, 1, 2]
+        assert all(e.target == "TARGET" for e in g.engines)
+        with pytest.raises(ValueError):
+            g.scale_to(5)                 # beyond max_replicas
+        with pytest.raises(ValueError):
+            g.scale_to(0)
+
+    def test_metrics_and_throughput_aggregate(self):
+        g = self._group(2)
+        for _ in range(2):
+            g.submit_request(object())
+        while g.has_work():
+            g.run_iteration()
+        m = g.metrics
+        assert m["tokens_generated"] == 8
+        assert m["replicas"] == 2 and m["draining"] == 0
+        assert g.throughput_tokens_per_s() == 20.0
+
+    def test_autoscaler_decisions_drive_real_engines(self):
+        g = self._group(1, max_replicas=2)
+        auto = ReplicaAutoscaler(patience_ticks=2, cooldown_s=10.0,
+                                 max_replicas=2)
+        # saturate: queue >> capacity -> util 1.0 -> +1 after patience
+        for _ in range(6):
+            g.submit_request(object())
+        assert g.demand_util() == 1.0
+        decisions = [g.autoscale_step(float(t), auto) for t in range(3)]
+        assert 1 in decisions and g.n_replicas == 2
+        # drain the queue, then idle -> -1 after cooldown + patience
+        while g.has_work():
+            g.run_iteration()
+        assert g.demand_util() == 0.0
+        decisions = [g.autoscale_step(100.0 + t, auto) for t in range(4)]
+        assert -1 in decisions and g.n_replicas == 1
+
+    def test_close_closes_every_replica(self):
+        g = self._group(2)
+        engines = list(g.engines)
+        g.close()
+        assert all(e.closed for e in engines) and not g.engines

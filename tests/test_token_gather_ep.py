@@ -1,6 +1,13 @@
-"""Token-gather EP dispatch (§Perf kimi iteration B1): numerical
+"""EP parity suite (DESIGN.md §4 / §16).
+
+Token-gather EP dispatch (§Perf kimi iteration B1): numerical
 equivalence with the dense oracle and with the weight-gather path, plus
-the regime gate."""
+the regime gate. Extended for the EP serving mesh: decode over a
+(1, ep) mesh must be BIT-identical to the single-device loop for
+EP ∈ {1, 2, 4} — on binary and mixed (16, 8, 4) plans, and across a
+replan that migrates experts between EP ranks (bank membership change).
+Every multi-device case runs in a subprocess that forces the host
+device count BEFORE importing jax."""
 import os
 import subprocess
 import sys
@@ -53,6 +60,136 @@ for k, v in outs.items():
 assert all(v < 5e-3 for v in outs.values()), outs
 print("OK")
 """
+
+
+_PARITY_SCRIPT = r"""
+import contextlib
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.precision_plan import balanced_ladder_plan
+from repro.launch.mesh import make_ep_mesh, use_mesh
+from repro.models.model import apply_precision_plan, build_model
+
+cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+L, E, gs = cfg.num_layers, cfg.moe.num_experts, cfg.mop.group_size
+base = build_model(cfg)
+params = base.init(jax.random.key(0))
+# per-layer bank sizes must divide by the largest ep under test (4)
+plans = {
+    "binary": balanced_ladder_plan(L, E, {4: 4 * L},
+                                   ladder=(16, 4), group_size=gs),
+    "mixed": balanced_ladder_plan(L, E, {4: 4 * L, 8: 4 * L},
+                                  ladder=(16, 8, 4), group_size=gs),
+    "replan": balanced_ladder_plan(L, E, {4: 8 * L},
+                                   ladder=(16, 4), group_size=gs),
+}
+tok = np.asarray(jax.random.randint(jax.random.key(1), (2, 8), 1,
+                                    cfg.vocab_size))
+ref = {}
+for name, plan in plans.items():
+    sp = apply_precision_plan(params, cfg, plan)
+    for ep in (1, 2, 4):
+        mesh = None if ep == 1 else make_ep_mesh(ep)
+        model = build_model(cfg, mesh)
+        ctx = use_mesh(mesh) if mesh is not None \
+            else contextlib.nullcontext()
+        with ctx:
+            cache = model.init_cache(2, 24)
+            logits, cache = model.prefill(sp, {"tokens": jnp.asarray(tok)},
+                                          cache)
+            chunks = [np.asarray(jax.device_get(logits)).tobytes()]
+            cur = jnp.argmax(logits, -1)[:, None]
+            pos = jnp.full((2,), tok.shape[1], jnp.int32)
+            for step in range(4):
+                logits, cache = model.decode_step(sp, cache, cur,
+                                                  pos + step)
+                chunks.append(np.asarray(jax.device_get(logits)).tobytes())
+                cur = jnp.argmax(logits, -1)[:, None]
+        blob = b"".join(chunks)
+        if ep == 1:
+            ref[name] = blob
+        assert blob == ref[name], f"{name}: ep={ep} diverges from ep=1"
+    print(f"PARITY {name} OK")
+# the replan moved every f16 expert into the q4 bank: bank membership
+# changed, so the contiguous per-bank sharding migrates experts between
+# EP ranks -- and decode stayed bit-identical on both sides (above)
+a = plans["binary"].device_assignment(4)
+b = plans["replan"].device_assignment(4)
+assert (a != b).any(), "replan migrated no expert between EP ranks"
+print("MIGRATION OK")
+print("OK")
+"""
+
+_ENGINE_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings
+import jax, numpy as np
+from repro.configs import get_config, reduce_for_smoke
+from repro.models.model import build_model
+from repro.serving.api import EngineConfig
+from repro.serving.ep import build_ep_engine
+
+cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+outs = {}
+for ep in (1, 2):
+    eng = build_ep_engine(cfg, params,
+                          EngineConfig(max_slots=2, max_len=16), ep=ep)
+    full = eng.planner.size_ne + \
+        eng.planner.num_experts_total * eng.planner.size_e16
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng.configure(full, "quality", 4 * cfg.num_layers)
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(rng.integers(1, cfg.vocab_size, 6),
+                       max_new_tokens=4) for _ in range(3)]
+    eng.step(temperature=0.0)
+    # mid-deployment replan: every expert drops to q4, bank membership
+    # changes, experts migrate between EP ranks
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng.configure(full, "quality", 8 * cfg.num_layers)
+    rids2 = [eng.submit(rng.integers(1, cfg.vocab_size, 6),
+                        max_new_tokens=4) for _ in range(3)]
+    eng.step(temperature=0.0)
+    outs[ep] = ([eng.result(r).tokens for r in rids],
+                [eng.result(r).tokens for r in rids2])
+    eng.close()
+assert outs[1] == outs[2], outs
+print("OK")
+"""
+
+
+def _run_sub(script, timeout=900):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+class TestEPDecodeParity:
+    """Serving-mesh bit-identity (DESIGN.md §16, ISSUE acceptance)."""
+
+    def test_decode_bit_identical_across_ep(self):
+        """prefill + 4 greedy decode steps: logits BYTES equal for
+        EP ∈ {1, 2, 4}, on binary and mixed (16, 8, 4) plans, plus the
+        rank-migration assertion across a replan."""
+        r = _run_sub(_PARITY_SCRIPT)
+        assert "OK" in r.stdout and "MIGRATION OK" in r.stdout, \
+            r.stdout + r.stderr
+
+    def test_engine_tokens_identical_across_ep(self):
+        """Full engine (scheduler + paged KV + replan) on a (1, 2) mesh
+        generates the same greedy tokens as the single-device engine,
+        including after a rung replan that migrates experts."""
+        r = _run_sub(_ENGINE_PARITY_SCRIPT)
+        assert "OK" in r.stdout, r.stdout + r.stderr
 
 
 class TestTokenGatherEP:
