@@ -87,6 +87,18 @@ class HardwareModel:
     # collective launch.
     interconnect_bw: float = 300e9
     all2all_latency_s: float = 2e-6
+    # Ladder-draft self-speculative decoding (DESIGN.md §17). ``spec_k``
+    # draft tokens per cycle run with EVERY expert forced to the lowest
+    # ladder rung (banks already resident — zero extra weight bytes,
+    # zero host transfers), then one verify forward at the serving plan
+    # scores all k+1 positions. Expected emitted tokens per cycle is the
+    # geometric partial sum (1 - a^(k+1)) / (1 - a) at acceptance rate
+    # ``a`` — the ``t_token / (1 + E[accepted])`` pricing. ``spec_k=0``
+    # (default) prices plain decode bit-for-bit (golden-fixture pinned);
+    # ``spec_acceptance`` comes from measurement (the engine's
+    # ``acceptance_rate`` metric), not from an analytic guess.
+    spec_k: int = 0
+    spec_acceptance: float = 0.0
 
     def q_speedup_decode(self, bits: int) -> float:
         """Decode-regime matmul speedup of rung ``bits`` vs bf16."""
@@ -111,6 +123,11 @@ class QoSEstimate:
     #: latency — DESIGN.md §16). Exactly 0.0 when the plan has no PEER
     #: experts (every single-device plan).
     t_peer_ms: float = 0.0
+    #: speculative decode (DESIGN.md §17): compute-only token time of the
+    #: all-lowest-rung draft pass, and expected emitted tokens per
+    #: draft+verify cycle. ``spec_k=0``: 0.0 / 1.0 (plain decode).
+    t_draft_ms: float = 0.0
+    spec_tokens_per_cycle: float = 1.0
 
 
 def expert_access_stats(cfg: ModelConfig, plan: PrecisionPlan
@@ -217,6 +234,49 @@ def ffn_kernel_launches(plan: PrecisionPlan, grouped: bool = True) -> int:
     return launches
 
 
+def speculative_tokens_per_cycle(k: int, acceptance: float) -> float:
+    """Expected tokens emitted per draft+verify cycle (DESIGN.md §17).
+
+    Under the i.i.d.-acceptance model (each draft token independently
+    matches the verify target with probability ``acceptance``) the
+    longest accepted prefix plus the guaranteed corrected/bonus token
+    gives the geometric partial sum ``(1 - a^(k+1)) / (1 - a)`` —
+    Leviathan et al.'s E[#generated]. ``k=0`` returns exactly 1.0 (plain
+    decode emits one token per cycle); ``a=1`` returns ``k + 1``."""
+    if k <= 0:
+        return 1.0
+    a = min(max(float(acceptance), 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def draft_token_time(cfg: ModelConfig, plan: PrecisionPlan,
+                     hw: HardwareModel = HardwareModel()) -> float:
+    """Compute-only token time of the ladder-draft pass (DESIGN.md §17):
+    every expert forced to the LOWEST ladder rung. The rung banks are
+    already resident for the serving plan, so the draft streams zero
+    bytes over the host link and pays zero peer all2all — it reads the
+    non-expert weights plus ``L * top_k`` lowest-rung experts from HBM,
+    at the rung's fused-kernel decode speedup."""
+    e = cfg.moe
+    assert e is not None
+    qr = quantized_rungs(plan.ladder)
+    low = qr[0] if qr else 16
+    per_active = cfg.expert_param_bytes(low) \
+        / hw.q_speedup_decode(low) * (16 / low) if low < 16 \
+        else float(cfg.expert_param_bytes(16))
+    weight_bytes = cfg.non_expert_bytes() \
+        + cfg.num_layers * e.top_k * per_active
+    t = weight_bytes / (hw.hbm_bw * hw.mbu)
+    if hw.kernel_launch_s > 0.0:
+        # all experts on one rung: one grouped launch per layer.
+        launches = cfg.num_layers if hw.grouped_ffn \
+            else int((plan.location == DEVICE).sum())
+        t += launches * hw.kernel_launch_s
+    return t
+
+
 def kv_token_bytes(cfg: ModelConfig) -> int:
     """KV bytes one cached token costs across the stack (k + v)."""
     a = cfg.attention
@@ -285,12 +345,28 @@ def estimate_qos(cfg: ModelConfig, plan: PrecisionPlan,
     # overlap_efficiency == 0 this is exactly the additive paper model.
     t_exposed = max(0.0, t_transfer - hw.overlap_efficiency * t_compute)
     t_token = t_compute + t_peer + t_exposed
+    # speculative decode (DESIGN.md §17): a cycle of spec_k all-lowest-
+    # rung draft steps plus ONE verify forward at the serving plan
+    # (t_token — the verify is the plain decode step batched over k+1
+    # positions; decode is weight-bound, so scoring extra positions is
+    # ~free) emits E = (1 - a^(k+1)) / (1 - a) tokens in expectation.
+    # Gated on the spec_k=0 default so the historical token time — and
+    # the frontier golden fixture — is untouched bit-for-bit.
+    t_draft = 0.0
+    spec_tokens = 1.0
+    if hw.spec_k > 0:
+        t_draft = draft_token_time(cfg, plan, hw)
+        spec_tokens = speculative_tokens_per_cycle(hw.spec_k,
+                                                   hw.spec_acceptance)
+        t_token = (hw.spec_k * t_draft + t_token) / spec_tokens
     return QoSEstimate(
         tokens_per_s=batch_size / t_token,
         t_compute_ms=t_compute * 1e3,
         t_transfer_ms=t_transfer * 1e3,
         t_exposed_ms=t_exposed * 1e3,
         t_peer_ms=t_peer * 1e3,
+        t_draft_ms=t_draft * 1e3,
+        spec_tokens_per_cycle=spec_tokens,
         hit_rate=hit,
         device_bytes=device_bytes(cfg, plan),
         quality_proxy=quality_proxy(cfg, plan, profile),

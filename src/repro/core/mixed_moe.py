@@ -330,12 +330,18 @@ def _bank_specs(banks, moe: MoEConfig, par: MoEParallelism,
 
 def moe_apply(banks, x: jax.Array, weights: jax.Array, ids: jax.Array,
               moe: MoEConfig, par: MoEParallelism, *, act: str = "swiglu",
-              use_kernel: bool = False) -> jax.Array:
+              use_kernel: bool = False,
+              capacity: Optional[int] = None) -> jax.Array:
     """x: (T, d) sharded over dp_axes; returns (T, d) same sharding.
 
     ``banks`` is either the train layout {"f16": {...(E,d,f) bf16...}} or
     the rung-keyed serve layout {"q4": ..., "q8": ..., "f16": ...}
     (bank order = ascending bits, cheapest rung first).
+
+    ``capacity`` overrides the capacity-factor formula with an explicit
+    per-expert slot count (callers that must be drop-free — e.g. the
+    speculative verify forward, DESIGN.md §17 — pass ``>= T`` so no
+    routed assignment can be displaced).
     """
     t, d = x.shape
     ep = moe.num_experts >= par.ep_size
@@ -372,8 +378,11 @@ def moe_apply(banks, x: jax.Array, weights: jax.Array, ids: jax.Array,
     t_disp = t_loc * (par.fsdp_size if fsdp else 1)
     # static per-shard capacity (tokens replicated over model: each rank
     # sees all dispatched assignments, keeps only its local experts' share)
-    cap = int(np.ceil(t_disp * moe.top_k * moe.capacity_factor
-                      / moe.num_experts))
+    if capacity is None:
+        cap = int(np.ceil(t_disp * moe.top_k * moe.capacity_factor
+                          / moe.num_experts))
+    else:
+        cap = int(capacity)
     cap = max(4, ((cap + 3) // 4) * 4)
 
     def local_fn(banks_l, x_l, w_l, ids_l):

@@ -354,6 +354,26 @@ class ParetoFrontier:
                               max_enum_points=self.max_enum_points,
                               profile=self.profile, ep=self.ep)
 
+    def spec_variant(self, k: int, acceptance: float) -> "ParetoFrontier":
+        """Re-enumerate and re-rank under the speculative token time
+        (DESIGN.md §17): identical axes/plans, the hardware model's
+        ``spec_k`` / ``spec_acceptance`` replaced. Every point's cycle
+        becomes ``k * t_draft + t_token`` emitting ``(1 - a^(k+1)) /
+        (1 - a)`` expected tokens, with ``t_draft`` the compute-only
+        all-lowest-rung time — so plans whose serving rungs are far
+        above the draft rung gain the most and the ranking can flip.
+        ``acceptance`` should be a MEASURED rate (the engine's
+        ``acceptance_rate`` metric feeding back through the
+        QoSController). ``k=0`` returns a frontier bit-identical to the
+        plain-decode ranking."""
+        hw = dataclasses.replace(self.hw, spec_k=int(k),
+                                 spec_acceptance=float(acceptance))
+        return ParetoFrontier(self.cfg, hw, batch_size=self.batch_size,
+                              seed=self.seed,
+                              residency_step=self.residency_step,
+                              max_enum_points=self.max_enum_points,
+                              profile=self.profile, ep=self.ep)
+
     def profile_variant(self, profile) -> "ParetoFrontier":
         """Re-enumerate and re-rank under a (new) sensitivity profile
         (DESIGN.md §15): identical axes/plans, only the quality pricing

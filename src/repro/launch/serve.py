@@ -16,6 +16,17 @@ requests stream:
 space (DESIGN.md §11): the frontier then enumerates counts per ladder
 rung and the controller may promote/demote expert rungs at runtime.
 
+``--speculate K`` turns on ladder-draft self-speculative decoding
+(DESIGN.md §17): each iteration drafts K tokens per slot with every
+expert forced to the lowest ladder rung (no extra weights — the rung
+banks are already resident), then one batched verify forward at the
+serving plan accepts the longest matching prefix. Greedy output is
+token-identical to plain decode; temperature>0 stays exactly
+distributed via rejection sampling. The trace gains
+``spec[...]`` columns (proposed / accepted / acceptance rate) and the
+QoSController falls back to plain decode when measured acceptance
+collapses.
+
 ``--overlap on`` switches expert staging to the async transfer pipeline
 (DESIGN.md §12): transfers run on AsyncExpertCache workers, decode runs
 the per-layer lookahead pipeline, and throughput charges only the
@@ -279,6 +290,12 @@ def main():
                          "vs all-16-bit, e.g. 1.05 = at most +5%%")
     ap.add_argument("--budget-gb", type=float, default=None,
                     help="HBM budget; default = full bf16 size * 0.6")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="ladder-draft self-speculative decoding "
+                         "(DESIGN.md §17): draft depth K per iteration "
+                         "(0 = plain decode, byte-identical engine "
+                         "path); greedy output is token-identical, "
+                         "temperature>0 uses rejection sampling")
     ap.add_argument("--overlap", default="off", choices=("on", "off"),
                     help="async overlapped expert streaming (DESIGN.md "
                          "§12): transfers stage on a worker pool and "
@@ -375,6 +392,10 @@ def main():
             raise SystemExit("--ep/--dp and --tenants are mutually "
                              "exclusive (one mesh per tenant engine is "
                              "not implemented; see DESIGN.md §16)")
+        if args.speculate:
+            raise SystemExit("--speculate over an EP/DP mesh is not "
+                             "implemented (the draft/verify steps are "
+                             "single-device jits; see DESIGN.md §17)")
     model = build_model(cfg)
     if args.ckpt_dir and CheckpointManager(args.ckpt_dir).latest_step():
         tree, _ = CheckpointManager(args.ckpt_dir).restore()
@@ -420,10 +441,15 @@ def main():
     else:
         engine = build_engine(cfg, params, EngineConfig(
             max_slots=4, max_len=32 + args.max_new_tokens,
-            overlap=args.overlap == "on"))
+            overlap=args.overlap == "on",
+            speculate=max(0, args.speculate)))
     if args.overlap == "on":
         print("[serve] async overlapped expert streaming ON "
               "(DESIGN.md §12)")
+    if args.speculate > 0:
+        print(f"[serve] speculative decoding ON, draft depth "
+              f"K={args.speculate} at the lowest ladder rung "
+              "(DESIGN.md §17)")
     if profile is not None:
         engine.planner.set_profile(profile)
     dynamic = None
@@ -492,6 +518,15 @@ def main():
               f"used={m['kv_used_bytes'] / 2**20:.2f}MiB "
               f"cap={m['kv_capacity_bytes'] / 2**20:.2f}MiB "
               f"waste={engine.kv_waste_fraction():.0%}")
+        # speculative decode columns (DESIGN.md §17): shown whenever
+        # drafts ran this phase (speculate_k may be 0 already if the
+        # QoSController's acceptance fallback fired mid-phase).
+        if m["spec_proposed"] or engine.speculate_k:
+            print(f"[serve]   spec[k={engine.speculate_k}] "
+                  f"proposed={m['spec_proposed']} "
+                  f"accepted={m['spec_accepted']} "
+                  f"acceptance={m['acceptance_rate']:.2%} "
+                  f"fallbacks={controller.metrics['spec_fallbacks']:.0f}")
         if controller.target is not None:
             print(f"[serve] {controller.summary()}")
     if dynamic is not None:

@@ -67,6 +67,27 @@ def _update_cache(cache, k_new, v_new, positions):
     return {"k": k, "v": v, "pos": pos}
 
 
+def _spec_update_cache(cache, k_new, v_new, positions):
+    """Ring-buffer insert that DROPS rows tagged position<0.
+
+    The speculative paths (draft + batched verify, DESIGN.md §17) carry
+    right-padded draft tails and idle decode slots as position=-1; the
+    plain modulo scatter would alias them onto slot ``(-1) % window ==
+    window - 1`` and clobber a live entry. Masked rows are redirected to
+    the out-of-range slot ``window`` and silently dropped by the scatter
+    (same sentinel trick as the paged-KV table scatter)."""
+    window = cache["k"].shape[1]
+    live = positions >= 0                                      # (B, S_new)
+    slots = jnp.where(live, positions % window, window)
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k = constrain(cache["k"].at[b_idx, slots].set(k_new, mode="drop"),
+                  "kv_cache")
+    v = constrain(cache["v"].at[b_idx, slots].set(v_new, mode="drop"),
+                  "kv_cache")
+    pos = cache["pos"].at[b_idx, slots].set(positions, mode="drop")
+    return {"k": k, "v": v, "pos": pos}
+
+
 def _prefill_cache(cache, k_new, v_new, positions):
     """Prefill-from-empty cache write WITHOUT a scatter.
 
@@ -163,6 +184,7 @@ def attention(p: Dict[str, Any], x: jax.Array, acfg: AttentionConfig, *,
               cache: Optional[Dict[str, jax.Array]] = None,
               kv_x: Optional[jax.Array] = None,
               use_rope: bool = True,
+              spec: bool = False,
               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Self- or cross-attention.
 
@@ -171,6 +193,9 @@ def attention(p: Dict[str, Any], x: jax.Array, acfg: AttentionConfig, *,
     cache given -> decode/prefill-with-cache: new k/v are written into the
     ring buffer, attention runs over the buffer with position-tag masking.
     kv_x -> cross-attention (no causal mask, no rope on kv side by default).
+    spec -> speculative multi-token decode (DESIGN.md §17): S>=1 new
+    tokens extend a LIVE cache (never the prefill-from-empty rewrite) and
+    rows tagged position=-1 are dropped instead of aliased by the modulo.
     """
     b, s, d = x.shape
     h, hkv, hd = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
@@ -202,7 +227,7 @@ def attention(p: Dict[str, Any], x: jax.Array, acfg: AttentionConfig, *,
         # bidirectional over the (precomputed) source; mask only padding-free
         mask = jnp.ones((b, 1, s, src.shape[1]), bool)
         out = _sdpa(q, k, v, mask, "attn_scores_full", grouped=g_full)
-    elif cache is not None and s > 1:
+    elif cache is not None and s > 1 and not spec:
         # prefill-from-empty: attend over the in-context k/v directly
         # (heads-sharded, zero extra comm) and write the ring buffer for
         # the decode steps that follow. Attending *through* the window-
@@ -219,7 +244,11 @@ def attention(p: Dict[str, Any], x: jax.Array, acfg: AttentionConfig, *,
                      < acfg.sliding_window)
         out = _sdpa(q, k, v, mask, "attn_scores_full", grouped=g_full)
     elif cache is not None:
-        new_cache = _update_cache(cache, k, v, positions)
+        # decode (S==1) or speculative draft/verify (spec=True, S>=1):
+        # the position-tag mask below is already exact for S>1 queries —
+        # each query row attends its own causal window over the buffer.
+        writer = _spec_update_cache if spec else _update_cache
+        new_cache = writer(cache, k, v, positions)
         kpos = new_cache["pos"]                                  # (B, W)
         qpos = positions                                         # (B, S)
         valid = kpos[:, None, None, :] >= 0

@@ -347,6 +347,22 @@ class Model:
     #   -> (x', pool, route_ids (B, top_k))
     paged_reset_pages: Optional[Callable] = None
     # (pool, pages (nc,)) -> pool with the pages' position tags cleared
+    # Self-speculative decode (DESIGN.md §17): one multi-token step serves
+    # BOTH the draft pass (S=1, draft-rung params) and the batched verify
+    # forward (S=K+1, serving params) — rows tagged position=-1 are
+    # dropped, the MoE dispatch is drop-free, and attention masks each
+    # query to its own causal window, so verify logits at position p are
+    # bit-identical to a plain decode step at p.
+    spec_step_routed: Optional[Callable] = None
+    # (params, cache, tokens (B,S), positions (B,S))
+    #   -> (logits (B,S,V), cache, route_ids (L, B*S, top_k))
+    paged_spec_step_routed: Optional[Callable] = None
+    # (params, pool, page_table (B,nc), tokens (B,S), positions (B,S),
+    #  *, window) -> (logits (B,S,V), pool, route_ids)
+    rollback_slots: Optional[Callable] = None
+    # (cache, keep (B,)) -> cache with tags > keep[b] invalidated per slot
+    paged_rollback: Optional[Callable] = None
+    # (pool, page_table (B,nc), keep (B,)) -> pool, same contract
 
 
 def _embed_inputs(params, cfg: ModelConfig, batch):
@@ -586,6 +602,54 @@ def build_model(cfg: ModelConfig, mesh=None, *,
                                           window, layer)
             return x, merged, ids
 
+    # -- self-speculative decode hooks (DESIGN.md §17) -----------------
+    def spec_step_routed(params, cache, tokens, positions):
+        """Multi-token cached step: tokens/positions (B, S), positions
+        RIGHT-padded with -1 past each slot's live span (idle slots are
+        all -1). Returns the FULL (B, S, V) logits — the verify path
+        scores every position — plus the updated cache and the routed
+        expert ids (L, B*S, top_k) with padded rows remapped to the
+        sentinel ``num_experts``."""
+        with act_ctx():
+            x = L.embed(params["embed"]["table"], tokens) \
+                * jnp.asarray(math.sqrt(cfg.d_model),
+                              params["embed"]["table"].dtype)
+            y, new_cache, aux = fwd(params, cfg, x, positions,
+                                    caches=cache, par=par, train=False,
+                                    use_kernel=use_kernel,
+                                    collect_routes=True, spec=True)
+            y = L.rms_norm(y, params["final_norm"]["scale"])
+            logits = L.unembed(params["lm_head"]["table"], y)
+            return logits, new_cache, aux["route_ids"]
+
+    def paged_spec_step_routed(params, pool, page_table, tokens, positions,
+                               *, window):
+        """Paged spelling of ``spec_step_routed``: gather page view ->
+        identical step -> scatter back (bit-identical logits)."""
+        ring = _gather_paged(pool, page_table, window)
+        logits, new_ring, route_ids = spec_step_routed(
+            params, ring, tokens, positions)
+        return logits, _scatter_paged(pool, page_table, new_ring,
+                                      window), route_ids
+
+    def rollback_slots(cache, keep):
+        """Invalidate ring entries past ``keep[b]`` (the last ACCEPTED
+        absolute position per slot) — rejected speculative tokens become
+        dead tags, exactly like ``reset_slot`` but position-bounded.
+        Slots not in the speculative batch pass a large keep value."""
+        pos = cache["pos"]
+        return dict(cache,
+                    pos=jnp.where(pos > keep[None, :, None], -1, pos))
+
+    def paged_rollback(pool, page_table, keep):
+        """Paged ``rollback_slots``: the per-slot page view's tags are
+        gathered, bounded, and scattered back (null chunks dropped)."""
+        pos = pool["pos"][:, page_table]            # (L, B, nc, ps)
+        pos = jnp.where(pos > keep[None, :, None, None], -1, pos)
+        spt = _scatter_table(page_table, pool["pos"].shape[1])
+        return dict(pool,
+                    pos=pool["pos"].at[:, spt].set(pos, mode="drop"))
+
     layered_api = slot_api and cfg.moe is not None
 
     return Model(
@@ -611,6 +675,12 @@ def build_model(cfg: ModelConfig, mesh=None, *,
         paged_decode_layer_routed=paged_decode_layer_routed
         if layered_api else None,
         paged_reset_pages=paged_reset_pages if slot_api else None,
+        spec_step_routed=spec_step_routed
+        if slot_api and cfg.moe is not None else None,
+        paged_spec_step_routed=paged_spec_step_routed
+        if slot_api and cfg.moe is not None else None,
+        rollback_slots=rollback_slots if slot_api else None,
+        paged_rollback=paged_rollback if slot_api else None,
     )
 
 

@@ -51,7 +51,7 @@ def _scan_or_loop(body, x, xs, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _ffn_or_moe(p, xn, cfg: ModelConfig, par, train, use_kernel, aux_acc,
-                token_valid=None):
+                token_valid=None, moe_capacity=None):
     """Returns (y, aux_acc, route_ids|None) — ids are the (T, k) routed
     expert slots in BANK order (serve layout permutes experts q4-first).
 
@@ -73,7 +73,8 @@ def _ffn_or_moe(p, xn, cfg: ModelConfig, par, train, use_kernel, aux_acc,
     if banks is None:
         banks = mixed_moe.train_banks(p["moe"])
     y = mixed_moe.moe_apply(banks, x2, weights, ids, cfg.moe, par,
-                            act=cfg.act, use_kernel=use_kernel)
+                            act=cfg.act, use_kernel=use_kernel,
+                            capacity=moe_capacity)
     for k, v in aux.items():
         aux_acc[k] = aux_acc.get(k, 0.0) + v
     return y.reshape(b, s, d), aux_acc, ids
@@ -81,12 +82,18 @@ def _ffn_or_moe(p, xn, cfg: ModelConfig, par, train, use_kernel, aux_acc,
 
 def decoder_forward(params, cfg: ModelConfig, x, positions, *,
                     caches=None, par=None, train=False, use_kernel=False,
-                    enc_out=None, collect_routes=False):
+                    enc_out=None, collect_routes=False, spec=False):
     """x: (B,S,d) embedded input. Returns (y, new_caches, aux).
 
     ``collect_routes=True`` (MoE serving) additionally stacks the per-layer
     routed expert ids into ``aux["route_ids"]`` (L, T, k) so the engine can
-    drive the runtime expert cache (DESIGN.md §3)."""
+    drive the runtime expert cache (DESIGN.md §3).
+
+    ``spec=True`` (speculative decode, DESIGN.md §17) runs S>=1 new tokens
+    through the LIVE-cache attention path (masked ring writes, no
+    prefill-from-empty rewrite) and pins the MoE dispatch capacity at the
+    full token count so the batched verify forward is drop-free — plain
+    decode and verify then score identical distributions."""
     if collect_routes and cfg.moe is None:
         raise ValueError("collect_routes needs routed experts")
     # scan carries must have a fixed structure: pre-seed the aux keys
@@ -98,13 +105,18 @@ def decoder_forward(params, cfg: ModelConfig, x, positions, *,
     # of the MoE dispatch (train positions are always valid — skip the op).
     token_valid = (positions >= 0) if (caches is not None
                                        and cfg.moe is not None) else None
+    # drop-free capacity for the speculative paths: per-expert routed
+    # assignments are bounded by T = B*S, so cap >= T can never displace
+    # a token (the formula's cap scales with T and would otherwise drop
+    # DIFFERENT tokens at draft vs verify widths, breaking exactness)
+    moe_capacity = x.shape[0] * x.shape[1] if spec else None
 
     def block(carry, xs):
         x, aux = carry
         p, cache = xs
         h, new_kv = L.attention(
             p["attn"], L.rms_norm(x, p["attn_norm"]["scale"]),
-            cfg.attention, positions=positions, cache=cache)
+            cfg.attention, positions=positions, cache=cache, spec=spec)
         x = L.constrain(x + h, "residual")
         if enc_out is not None:
             h, _ = L.attention(
@@ -114,7 +126,8 @@ def decoder_forward(params, cfg: ModelConfig, x, positions, *,
             x = L.constrain(x + h, "residual")
         xn = L.rms_norm(x, p["ffn_norm"]["scale"])
         h, aux, ids = _ffn_or_moe(p, xn, cfg, par, train, use_kernel, aux,
-                                  token_valid=token_valid)
+                                  token_valid=token_valid,
+                                  moe_capacity=moe_capacity)
         ys = (new_kv, ids) if collect_routes else new_kv
         return (L.constrain(x + h, "residual"), aux), ys
 

@@ -94,6 +94,16 @@ class EngineConfig:
     Hardware:
       * ``hw`` — analytic hardware model; None measures the host link
         bandwidth once per process and uses defaults otherwise.
+    Speculative decode (DESIGN.md §17):
+      * ``speculate`` — draft depth K for ladder-draft self-speculative
+        decoding: each iteration drafts K tokens per slot with every
+        expert forced to the LOWEST ladder rung (the banks are already
+        resident — zero extra weight bytes), then one batched verify
+        forward at the serving plan scores all K+1 positions and accepts
+        the longest matching prefix. Greedy output is token-identical to
+        plain decode (tested); temperature>0 uses rejection sampling via
+        ``serving/sampler.py``. ``0`` (default) is plain decode,
+        byte-identical to the pre-speculation engine.
     Expert parallelism (DESIGN.md §16):
       * ``ep`` — EP shard count of the mesh the engine decodes over.
         The planner/frontier then round per-rung counts to multiples of
@@ -119,6 +129,7 @@ class EngineConfig:
     kv_pool_pages: Optional[int] = None
     kv_reserve: bool = False
     ep: int = 1
+    speculate: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

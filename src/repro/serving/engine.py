@@ -74,12 +74,13 @@ from repro.core.expert_cache import (AsyncExpertCache, ExpertCache,
                                      PrefetchingExpertCache)
 from repro.core.pareto import FrontierPoint, ParetoFrontier, QoSTarget
 from repro.core.planner import AdaptivePlanner, PlanResult
-from repro.core.precision_plan import DEVICE, HOST, PrecisionPlan
+from repro.core.precision_plan import (DEVICE, HOST, PrecisionPlan,
+                                       quantized_rungs)
 from repro.models.model import Model, apply_precision_plan, build_model
 from repro.serving.api import EngineConfig, ServeRequest, ServeResult
 from repro.serving.metrics import base_metrics
 from repro.serving.paged_kv import PageAllocator
-from repro.serving.sampler import sample
+from repro.serving.sampler import sample, speculative_verify
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      RequestSLO, SamplingParams,
                                      SchedulerConfig)
@@ -285,6 +286,16 @@ class AdaptiveServingEngine:
         self._active_point: Optional[FrontierPoint] = None
         self._compiled: Dict[Any, Any] = {}
         self._key = jax.random.key(0)
+        # ladder-draft self-speculative decoding (DESIGN.md §17): draft
+        # depth K per iteration; 0 = plain decode, byte-identical to the
+        # pre-speculation engine. Draft params (every expert at the
+        # LOWEST ladder rung) build lazily on first speculative
+        # iteration and survive replans (they depend only on the ladder
+        # and group size, not on the serving rung assignment).
+        self.speculate_k = max(0, int(getattr(config, "speculate", 0)
+                                      or 0))
+        self._draft_params = None
+        self._draft_sig: Optional[Tuple] = None
         # async transfer workers call _fetch_expert concurrently: its
         # host-store insert is per-key-unique (one in-flight future per
         # key) but the stage_s accumulation needs the lock
@@ -920,6 +931,243 @@ class AdaptiveServingEngine:
             return 0.0
         return 1.0 - self.metrics["kv_used_byte_iters"] / alloc
 
+    # -- self-speculative decoding (DESIGN.md §17) ----------------------
+    def set_speculation(self, k: int) -> None:
+        """Set the draft depth for ladder-draft speculative decoding;
+        ``0`` falls back to plain decode (the QoSController's low-
+        acceptance auto-fallback calls this). Takes effect from the next
+        iteration — no drain, no recompile (the plain step functions
+        stay cached)."""
+        self.speculate_k = max(0, int(k))
+
+    def _draft_serve_params(self):
+        """Serve-layout params with EVERY expert at the lowest ladder
+        rung — the paper's all-quantized configuration, i.e. the free
+        draft model (the low-rung banks already exist as quantized
+        views of the same master weights; no new information, just the
+        all-low layout). Cached across replans: the draft depends only
+        on (ladder, group_size), never on the serving rung assignment
+        or placement."""
+        plan = self._plan_result.plan
+        low = quantized_rungs(plan.ladder)[0]
+        sig = (tuple(plan.ladder), plan.group_size, low)
+        if self._draft_params is None or self._draft_sig != sig:
+            draft_plan = dataclasses.replace(
+                plan, bits=np.full_like(plan.bits, low),
+                location=np.full_like(plan.location, DEVICE))
+            self._draft_params = apply_precision_plan(
+                self.params_train, self.cfg, draft_plan)
+            self._draft_sig = sig
+        return self._draft_params
+
+    def _greedy_np(self, row: np.ndarray) -> int:
+        """Host-side greedy pick, identical to ``sampler.sample``'s
+        temperature<=0 branch (same -1e30 vocab-pad mask, same
+        first-max tie-break) — the acceptance comparison must match
+        what plain decode would emit, bit for bit."""
+        v = self.cfg.vocab_size
+        if v and row.shape[-1] > v:
+            row = np.where(np.arange(row.shape[-1]) >= v, -1e30, row)
+        return int(np.argmax(row))
+
+    def _probs_np(self, row: np.ndarray, temp: float, top_k: int
+                  ) -> np.ndarray:
+        """Host-side mirror of ``sampler.sample_probs`` (f64): the
+        categorical distribution the engine samples from at this
+        temperature/top_k — both the draft proposal q and the verify
+        target p for the rejection-sampled acceptance."""
+        x = np.asarray(row, np.float64).copy()
+        v = self.cfg.vocab_size
+        if v and x.shape[-1] > v:
+            x[v:] = -1e30
+        x = x / temp
+        if top_k:
+            thresh = np.partition(x, -top_k)[-top_k]
+            x = np.where(x < thresh, -1e30, x)
+        x -= x.max()
+        e = np.exp(x)
+        return e / e.sum()
+
+    def _spec_iteration(self, active, temperature: float,
+                        retired: List[int]) -> List[int]:
+        """One speculative iteration (DESIGN.md §17): K draft tokens per
+        slot at the lowest ladder rung, ONE batched verify forward at
+        the serving plan scoring all K+1 positions against the KV
+        cache, longest-prefix acceptance (greedy) or chain rejection
+        sampling (temperature>0), then device-side rollback of the
+        rejected tail + paged-KV truncation.
+
+        Per-slot draft depth is clamped to ``min(K, remaining-1,
+        window-1-position)``: the remaining-token clamp keeps the
+        emitted count inside the request's claim, the window clamp
+        keeps all speculative writes in the UNWRAPPED ring region so a
+        multi-token write can never clobber an entry a same-batch query
+        still attends (a slot at the wrap boundary rides the verify as
+        plain single-token decode). Overlap mode uses this sync step
+        too — the per-layer lookahead pipeline stays plain-decode-only;
+        expert streaming still runs through the (async) cache's
+        synchronous interface."""
+        K = self.speculate_k
+        S = K + 1
+        B = self.max_slots
+        depth: Dict[int, int] = {}
+        for i, st in active:
+            rem = st.req.max_new_tokens - len(st.req.out_tokens)
+            depth[i] = max(0, min(K, rem - 1,
+                                  self.window - 1 - st.position))
+        if self.paged:
+            # map every chunk the draft+verify writes touch up front;
+            # the admission claim already covers the full span
+            for i, st in active:
+                for j in range(depth[i] + 1):
+                    self.kv_alloc.ensure_index(
+                        i, (st.position + j) % self.window)
+            step = self._jit("spec_paged", functools.partial(
+                self.model.paged_spec_step_routed, window=self.window))
+        else:
+            step = self._jit("spec", self.model.spec_step_routed)
+
+        def run_step(params, toks, pos):
+            # one jit entry serves both shapes: draft (B,1), verify (B,S)
+            if self.paged:
+                logits, self.kv_pool, ids = step(
+                    params, self.kv_pool,
+                    jnp.asarray(self.kv_alloc.table),
+                    jnp.asarray(toks), jnp.asarray(pos))
+            else:
+                logits, self.cache, ids = step(
+                    params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos))
+            return logits, ids
+
+        self._key, k_draft, k_verify = jax.random.split(self._key, 3)
+        u_draft = u_acc = u_res = None
+        t0 = time.perf_counter()
+        # -- draft pass: up to K single-token steps at the lowest rung --
+        draft_params = self._draft_serve_params()
+        drafts: Dict[int, List[int]] = {i: [] for i, _ in active}
+        q_rows: Dict[int, List[np.ndarray]] = {i: [] for i, _ in active}
+        prev_tok = {i: st.last_token for i, st in active}
+        for t in range(max(depth.values(), default=0)):
+            toks = np.zeros((B, 1), np.int32)
+            pos = np.full((B, 1), -1, np.int32)
+            rows = [i for i, st in active if depth[i] > t]
+            for i, st in active:
+                if depth[i] > t:
+                    toks[i, 0] = prev_tok[i]
+                    pos[i, 0] = st.position + t
+            logits, _ = run_step(draft_params, toks, pos)
+            lg = np.asarray(logits)[:, 0]
+            for i in rows:
+                temp, top_k = self._sampling_of(
+                    self.scheduler.slots[i].req, temperature)
+                if temp <= 0.0:
+                    tok = self._greedy_np(lg[i])
+                else:
+                    if u_draft is None:
+                        u_draft = np.asarray(jax.random.uniform(
+                            k_draft, (max(K, 1), B)))
+                    q = self._probs_np(lg[i], temp, top_k)
+                    cdf = np.cumsum(q)
+                    tok = int(min(np.searchsorted(
+                        cdf, float(u_draft[t, i]), side="right"),
+                        len(cdf) - 1))
+                    q_rows[i].append(q)
+                drafts[i].append(tok)
+                prev_tok[i] = tok
+        # -- batched verify at the serving plan (exact) -----------------
+        toks = np.zeros((B, S), np.int32)
+        pos = np.full((B, S), -1, np.int32)
+        for i, st in active:
+            toks[i, 0] = st.last_token
+            pos[i, 0] = st.position
+            for j, d in enumerate(drafts[i]):
+                toks[i, j + 1] = d
+                pos[i, j + 1] = st.position + j + 1
+        logits, route_ids = run_step(self._serve_params, toks, pos)
+        jax.block_until_ready(logits)
+        lg = np.asarray(logits)                       # (B, S, V)
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        # only the verify's routes feed the expert stream / histogram:
+        # the draft banks are fully resident by construction
+        rows = [i * S + j for i, _ in active
+                for j in range(depth[i] + 1)]
+        self._stream_experts(np.asarray(route_ids), rows)
+        n_tok = sum(depth[i] + 1 for i, _ in active)
+        e = self.cfg.moe.num_experts
+        d = self.cfg.moe.top_k * n_tok
+        uniq = e * (1.0 - (1.0 - 1.0 / e) ** d)
+        self.metrics["transfer_s_est"] += \
+            self._miss_bytes_per_tok * uniq / self.cfg.moe.top_k \
+            / self.hw.host_link_bw
+        # -- acceptance -------------------------------------------------
+        keep = np.full((B,), np.iinfo(np.int32).max // 2, np.int32)
+        emitted: Dict[int, List[int]] = {}
+        for i, st in active:
+            k_i = depth[i]
+            temp, top_k = self._sampling_of(st.req, temperature)
+            if temp <= 0.0:
+                targets = [self._greedy_np(lg[i, j])
+                           for j in range(k_i + 1)]
+                a = 0
+                while a < k_i and drafts[i][a] == targets[a]:
+                    a += 1
+                out = drafts[i][:a] + [targets[a]]
+            else:
+                if u_acc is None:
+                    k_acc, k_res = jax.random.split(k_verify)
+                    u_acc = np.asarray(jax.random.uniform(
+                        k_acc, (B, max(K, 1))))
+                    u_res = np.asarray(jax.random.uniform(
+                        k_res, (B, S)))
+                p = np.stack([self._probs_np(lg[i, j], temp, top_k)
+                              for j in range(k_i + 1)])
+                q = np.stack(q_rows[i]) if k_i \
+                    else np.zeros((0, p.shape[1]))
+                a, final = speculative_verify(
+                    np.asarray(drafts[i][:k_i], np.int64), q, p,
+                    u_acc[i, :k_i], u_res[i, :k_i + 1])
+                out = drafts[i][:a] + [final]
+            emitted[i] = out
+            keep[i] = st.position + len(out) - 1   # last accepted pos
+            self.metrics["spec_proposed"] += k_i
+            self.metrics["spec_accepted"] += len(out) - 1
+        # -- device-side rollback of the rejected tail ------------------
+        if any(depth[i] for i, _ in active):
+            if self.paged:
+                self.kv_pool = self._jit(
+                    "paged_rollback", self.model.paged_rollback)(
+                        self.kv_pool, jnp.asarray(self.kv_alloc.table),
+                        jnp.asarray(keep))
+            else:
+                self.cache = self._jit(
+                    "rollback", self.model.rollback_slots)(
+                        self.cache, jnp.asarray(keep))
+        self._update_kv_metrics(active)
+        self.metrics["iterations"] += 1
+        if self.metrics["spec_proposed"]:
+            self.metrics["acceptance_rate"] = \
+                self.metrics["spec_accepted"] \
+                / self.metrics["spec_proposed"]
+        now = time.perf_counter()
+        for i, st in active:
+            for tok in emitted[i]:
+                st.req.out_tokens.append(int(tok))
+            self.metrics["tokens_generated"] += len(emitted[i])
+            st.position += len(emitted[i])
+            st.last_token = int(emitted[i][-1])
+            if st.req.done():
+                self.scheduler.retire(i, now=now)
+                self._release_slot_kv(i)
+                retired.append(st.req.rid)
+            elif self.paged and depth[i]:
+                # free pages holding only rejected tokens (their tags
+                # were invalidated by the rollback above); speculative
+                # spans are pre-wrap by the depth clamp, so the live
+                # ring is exactly the prefix 0..position-1
+                self.kv_alloc.truncate(i, st.position)
+        return retired
+
     def run_iteration(self, *, admit: bool = True,
                       temperature: float = 0.0) -> List[int]:
         """One scheduler iteration: join new requests into free slots,
@@ -937,6 +1185,11 @@ class AdaptiveServingEngine:
         active = self.scheduler.active()
         if not active:
             return retired
+        if self.speculate_k > 0:
+            # ladder-draft speculation (DESIGN.md §17) replaces the
+            # one-token body below; speculate_k == 0 keeps this method
+            # byte-identical to the pre-speculation engine.
+            return self._spec_iteration(active, temperature, retired)
         toks = np.zeros((self.max_slots, 1), np.int32)
         pos = np.full((self.max_slots,), -1, np.int32)  # idle rows masked
         for i, st in active:
@@ -1103,7 +1356,8 @@ class AdaptiveServingEngine:
                   "prefetch_s", "transfer_exposed_s",
                   "transfer_overlapped_s",
                   "expert_accesses", "expert_fetches", "iterations",
-                  "kv_alloc_byte_iters", "kv_used_byte_iters"):
+                  "kv_alloc_byte_iters", "kv_used_byte_iters",
+                  "spec_proposed", "spec_accepted", "acceptance_rate"):
             self.metrics[k] = 0 if isinstance(self.metrics[k], int) else 0.0
         self.expert_cache.stats.reset()
 
@@ -1133,6 +1387,12 @@ class AdaptiveServingEngine:
               f" alloc={m['kv_alloc_byte_iters'] / it / 2**20:.2f}MiB"
               f" used={m['kv_used_byte_iters'] / it / 2**20:.2f}MiB"
               f" waste={self.kv_waste_fraction():.0%}]")
+        spec = ""
+        if m["spec_proposed"]:
+            spec = (f" spec[k={self.speculate_k}"
+                    f" acc={m['acceptance_rate']:.0%}"
+                    f" {m['spec_accepted']}/{m['spec_proposed']}]")
+        kv += spec
         return (f"plan[{p.preference} {knobs}"
                 f" res={p.plan.resident_fraction():.0%}]"
                 f" gen={m['tokens_generated']}tok"

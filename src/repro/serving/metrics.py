@@ -56,6 +56,11 @@ ENGINE_METRIC_SCHEMA: Dict[str, Any] = {
     "kv_alloc_byte_iters": 0.0,
     "kv_used_byte_iters": 0.0,
     "kv_capacity_bytes": 0,
+    # speculative decode (DESIGN.md §17): drafts proposed / accepted by
+    # the verify forward; acceptance_rate = accepted / proposed so far
+    "spec_proposed": 0,
+    "spec_accepted": 0,
+    "acceptance_rate": 0.0,
 }
 
 

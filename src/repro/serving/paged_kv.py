@@ -74,6 +74,27 @@ class PageAllocator:
         target ``position % window``)."""
         return self.ensure(slot, ring_index // self.page_size)
 
+    def truncate(self, slot: int, new_len: int) -> List[int]:
+        """Unmap every chunk past a ``new_len``-token ring prefix (chunk
+        ``ceil(new_len / page_size)`` onward); returns the freed pages.
+
+        This is the page-residency analog of the device-side rollback:
+        rejected speculative tokens and early-stopped requests would
+        otherwise hold their tail pages until retire (DESIGN.md §17).
+        The caller must already have invalidated the freed pages'
+        position tags on device (the speculative rollback bounds tags
+        BEFORE truncation; retire uses ``free_slot`` + reset instead).
+        No-op (returns []) when the prefix already covers every mapped
+        chunk. NOTE: only meaningful while the slot's live ring span is
+        the prefix 0..new_len-1 (pre-wraparound) — after the ring wraps,
+        every chunk is live and truncate must not be called."""
+        keep = min(-(-max(new_len, 0) // self.page_size),
+                   self.chunks_per_slot)
+        freed = [int(p) for p in self.table[slot, keep:] if p]
+        self.table[slot, keep:] = 0
+        self._free.extend(freed)
+        return freed
+
     def free_slot(self, slot: int) -> List[int]:
         """Unmap the slot's pages back to the free list; returns the
         freed page ids (the engine invalidates their position tags on

@@ -62,6 +62,16 @@ class QoSControllerConfig:
     #: the p95-latency check looks at the most recent completions only
     #: (lifetime percentiles would let cold-start samples vote forever).
     p95_window_requests: int = 16
+    #: speculative-decode fallback (DESIGN.md §17): when the WINDOWED
+    #: measured acceptance rate drops below this, the draft pass costs
+    #: more than the accepted tokens save (the analytic break-even at
+    #: k * t_draft ~= t_verify / 2) and the controller turns speculation
+    #: off via ``engine.set_speculation(0)``.
+    spec_min_acceptance: float = 0.35
+    #: drafts that must have been proposed inside the window before the
+    #: acceptance fallback may fire — tiny windows are routing noise,
+    #: not a regime change.
+    spec_min_proposed: int = 64
 
 
 class WalkPolicy:
@@ -149,6 +159,7 @@ class QoSController:
         self._win_iter = 0
         self._win_tokens = 0
         self._win_time = 0.0
+        self._win_spec = (0, 0)     # (proposed, accepted) at window start
         self._applied_iter = 0
         self.metrics: Dict[str, float] = {
             "replans": 0, "decisions": 0, "violations": 0,
@@ -158,6 +169,9 @@ class QoSController:
             # (quality up), lowering it is a DEMOTION — the controller
             # can now trade precision, not only counts/residency.
             "rung_promotions": 0, "rung_demotions": 0,
+            # speculative decode (DESIGN.md §17): windowed measured
+            # acceptance + times the controller disabled speculation.
+            "last_acceptance_rate": 0.0, "spec_fallbacks": 0,
         }
         if self.dynamic is not None and self.dynamic.sink is None:
             self.dynamic.sink = self.metrics
@@ -205,7 +219,10 @@ class QoSController:
             return False
         dt = self._elapsed(m) - self._win_time
         dtok = m["tokens_generated"] - self._win_tokens
+        d_prop = int(m.get("spec_proposed", 0)) - self._win_spec[0]
+        d_acc = int(m.get("spec_accepted", 0)) - self._win_spec[1]
         self._snapshot(it)
+        self._check_speculation(d_prop, d_acc)
         if dtok <= 0 or dt <= 0:
             return False
         measured = dtok / dt
@@ -239,6 +256,27 @@ class QoSController:
         p95 = pct.get("p95", 0.0)
         return p95 if p95 > 0 else None
 
+    def _check_speculation(self, proposed: int, accepted: int) -> None:
+        """Measured acceptance-rate feedback (DESIGN.md §17): per-window
+        acceptance below ``spec_min_acceptance`` means the workload's
+        draft (lowest-rung) and serve distributions have diverged enough
+        that drafting costs more than it saves — fall back to plain
+        decode via the engine's ``set_speculation(0)``. Effectively
+        one-shot: once off, no window proposes ``spec_min_proposed``
+        drafts so the guard cannot re-fire. Engine-shaped objects
+        without speculation (no ``set_speculation``) are left alone."""
+        if proposed < self.config.spec_min_proposed:
+            return
+        rate = accepted / proposed
+        self.metrics["last_acceptance_rate"] = rate
+        if rate >= self.config.spec_min_acceptance:
+            return
+        fn = getattr(self.engine, "set_speculation", None)
+        if fn is None:
+            return
+        fn(0)
+        self.metrics["spec_fallbacks"] += 1
+
     def _apply(self, point: FrontierPoint):
         if self.point is not None:
             old_bits = float(self.point.plan.bits.mean())
@@ -269,6 +307,8 @@ class QoSController:
         self._win_iter = it
         self._win_tokens = m["tokens_generated"]
         self._win_time = self._elapsed(m)
+        self._win_spec = (int(m.get("spec_proposed", 0)),
+                          int(m.get("spec_accepted", 0)))
 
     def summary(self) -> str:
         t = self.target.describe() if self.target else "no target"

@@ -1,16 +1,25 @@
-"""Token samplers (greedy / temperature / top-k) for the serving engine."""
+"""Token samplers (greedy / temperature / top-k) for the serving engine,
+plus the speculative-decode verify primitives (DESIGN.md §17)."""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def _mask_vocab_pad(logits: jax.Array, vocab_size: int) -> jax.Array:
+    if vocab_size and logits.shape[-1] > vocab_size:
+        mask = jnp.arange(logits.shape[-1]) >= vocab_size
+        logits = jnp.where(mask, -1e30, logits)
+    return logits
 
 
 def sample(logits: jax.Array, *, key: jax.Array, temperature: float = 0.0,
            top_k: int = 0, vocab_size: int = 0) -> jax.Array:
     """logits: (B, V_padded) -> (B,) int32."""
-    if vocab_size and logits.shape[-1] > vocab_size:
-        mask = jnp.arange(logits.shape[-1]) >= vocab_size
-        logits = jnp.where(mask, -1e30, logits)
+    logits = _mask_vocab_pad(logits, vocab_size)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
@@ -18,3 +27,73 @@ def sample(logits: jax.Array, *, key: jax.Array, temperature: float = 0.0,
         thresh = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < thresh, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def greedy(logits: jax.Array, *, vocab_size: int = 0) -> jax.Array:
+    """Argmax over the last axis with vocab-pad masking — EXACTLY the
+    ``temperature <= 0`` branch of :func:`sample`, shape-polymorphic in
+    the leading axes so the verify forward can score (B, S, V) logits in
+    one call. Greedy speculative acceptance compares these targets
+    against the drafted tokens; equality over a prefix means verify and
+    plain decode chose identical tokens (DESIGN.md §17)."""
+    return jnp.argmax(_mask_vocab_pad(logits, vocab_size),
+                      axis=-1).astype(jnp.int32)
+
+
+def sample_probs(logits: jax.Array, *, temperature: float,
+                 top_k: int = 0, vocab_size: int = 0) -> jax.Array:
+    """The categorical distribution :func:`sample` draws from at
+    ``temperature > 0`` (same masking, same scaling, f32 simplex over the
+    last axis). The rejection-sampled verify path needs the explicit
+    draft (q) and target (p) probabilities, not just a draw."""
+    if temperature <= 0.0:
+        raise ValueError("sample_probs is the temperature>0 distribution; "
+                         "greedy verify compares argmax targets instead")
+    logits = _mask_vocab_pad(logits, vocab_size) / temperature
+    if top_k:
+        thresh = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < thresh, -1e30, logits)
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def speculative_verify(draft_tokens: np.ndarray, q_probs: np.ndarray,
+                       p_probs: np.ndarray, accept_uniforms: np.ndarray,
+                       residual_uniforms: np.ndarray
+                       ) -> Tuple[int, int]:
+    """Chain rejection sampling for one slot (Leviathan et al.; host-side
+    numpy — k is tiny and the engine drives one slot row at a time).
+
+    draft_tokens: (k,) tokens proposed by the draft model;
+    q_probs: (k, V) draft distribution each was drawn from;
+    p_probs: (k+1, V) target distributions from the verify forward
+    (row j conditions on the prefix through draft j);
+    accept_uniforms / residual_uniforms: (k,) / (k+1,) U(0,1) draws.
+
+    Returns ``(accepted, final_token)``: draft j is accepted with
+    probability ``min(1, p[d_j]/q[d_j])``; the first rejection resamples
+    from the normalized residual ``max(p - q, 0)``; full acceptance draws
+    the bonus token from ``p[k]``. The emitted stream is
+    ``draft_tokens[:accepted] + [final_token]`` — distributed EXACTLY as
+    k+1 sequential target samples, at any acceptance rate."""
+    k = len(draft_tokens)
+    for j in range(k):
+        d = int(draft_tokens[j])
+        p_d = float(p_probs[j, d])
+        q_d = float(q_probs[j, d])
+        if q_d <= 0.0 or accept_uniforms[j] * q_d > p_d:
+            residual = np.maximum(
+                p_probs[j].astype(np.float64)
+                - q_probs[j].astype(np.float64), 0.0)
+            z = residual.sum()
+            if z <= 0.0:        # p == q: any p-sample is exact
+                residual, z = p_probs[j].astype(np.float64), \
+                    float(p_probs[j].sum())
+            cdf = np.cumsum(residual / z)
+            tok = int(np.searchsorted(cdf, float(residual_uniforms[j]),
+                                      side="right"))
+            return j, min(tok, len(cdf) - 1)
+    p_last = p_probs[k].astype(np.float64)
+    cdf = np.cumsum(p_last / p_last.sum())
+    tok = int(np.searchsorted(cdf, float(residual_uniforms[k]),
+                              side="right"))
+    return k, min(tok, len(cdf) - 1)

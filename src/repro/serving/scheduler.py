@@ -16,6 +16,15 @@ Admission policy (``SchedulerConfig``):
     (prompt + max_new) of all in-flight requests, the knob that trades
     batch occupancy against KV memory under a tight budget.
 
+Variable tokens per iteration (DESIGN.md §17): under speculative decode
+an iteration may emit anywhere from 1 to ``speculate + 1`` tokens per
+slot, and the engine clamps each slot's draft depth to its remaining
+``max_new_tokens`` — so a request never overruns the claim admission
+reserved. Because admission charges the FULL ``prompt + max_new`` claim
+up front (not per-token), the in-flight claim bound holds for any
+tokens-per-iteration schedule; no scheduler change is needed for
+speculation, only this contract.
+
 Admission order (DESIGN.md §9): highest :class:`RequestSLO` priority
 first; within a priority class, earliest effective deadline first; then
 FIFO. Requests without an SLO keep exact FIFO behaviour.

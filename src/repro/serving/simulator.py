@@ -176,7 +176,17 @@ class SimulatedEngine:
     * ``latency_fn(point, iteration)`` — one completed-request latency
       recorded per iteration (drives p95 targets);
     * ``clock`` — a shared :class:`VirtualClock`; each iteration advances
-      it by the simulated decode time plus the exposed transfer time.
+      it by the simulated decode time plus the exposed transfer time;
+    * ``spec_k`` / ``acceptance`` — speculative decode (DESIGN.md §17):
+      each iteration proposes ``batch * spec_k`` drafts of which a
+      deterministic ``acceptance`` fraction is accepted (extra tokens on
+      top of the guaranteed one per slot), while decode time stretches
+      by ``spec_k * spec_draft_cost`` (the draft pass's share of a plain
+      iteration). Counters land in the SAME schema keys as the real
+      engine (``spec_proposed``/``spec_accepted``/``acceptance_rate``)
+      so the QoSController's acceptance fallback is testable here;
+      ``set_speculation(0)`` is the fallback's entry point, as on the
+      real engine.
     """
 
     def __init__(self, *, model_error: float = 1.0,
@@ -187,7 +197,10 @@ class SimulatedEngine:
                  overlap: bool = False,
                  overlap_efficiency: float = 1.0,
                  clock: Optional[VirtualClock] = None,
-                 batch: int = 4):
+                 batch: int = 4,
+                 spec_k: int = 0,
+                 acceptance: float = 0.0,
+                 spec_draft_cost: float = 0.25):
         self.model_error = model_error
         self.clock = clock if clock is not None else VirtualClock()
         self.batch = batch
@@ -197,6 +210,9 @@ class SimulatedEngine:
         self._route_fn = route_fn
         self.overlap = overlap
         self.overlap_efficiency = overlap_efficiency
+        self.spec_k = max(0, int(spec_k))
+        self.acceptance = min(max(float(acceptance), 0.0), 1.0)
+        self.spec_draft_cost = float(spec_draft_cost)
         self.point: Optional[FrontierPoint] = None
         self.replans = 0
         #: full replan history, oldest first (assertable trace)
@@ -256,8 +272,23 @@ class SimulatedEngine:
         # the async pipeline hides up to overlap_efficiency * decode_dt
         exposed = max(0.0, transfer - self.overlap_efficiency * dt) \
             if self.overlap else transfer
+        # speculative decode (DESIGN.md §17): per iteration every slot
+        # proposes spec_k drafts; a deterministic ``acceptance`` fraction
+        # is accepted as extra tokens, while decode time stretches by the
+        # draft pass's cost share. spec_k=0 reproduces the plain
+        # iteration bit-for-bit.
+        proposed = accepted = 0
+        if self.spec_k > 0:
+            proposed = b * self.spec_k
+            accepted = int(round(self.acceptance * proposed))
+            dt *= 1.0 + self.spec_k * self.spec_draft_cost
         self.metrics["iterations"] += 1
-        self.metrics["tokens_generated"] += b
+        self.metrics["tokens_generated"] += b + accepted
+        self.metrics["spec_proposed"] += proposed
+        self.metrics["spec_accepted"] += accepted
+        if self.metrics["spec_proposed"]:
+            self.metrics["acceptance_rate"] = \
+                self.metrics["spec_accepted"] / self.metrics["spec_proposed"]
         self.metrics["decode_s"] += dt
         self.metrics["transfer_s"] += transfer
         self.metrics["transfer_exposed_s"] += exposed
@@ -268,6 +299,13 @@ class SimulatedEngine:
                 self._route_fn(self.point, it), np.int64)
         if self._latency_fn is not None:
             self._latencies.append(float(self._latency_fn(self.point, it)))
+
+    def set_speculation(self, k: int) -> None:
+        """Change the draft depth mid-run — the QoSController's
+        acceptance-fallback entry point (``set_speculation(0)`` = plain
+        decode from the next iteration on), same contract as the real
+        engine's."""
+        self.spec_k = max(0, int(k))
 
     # -- dynamic precision (DESIGN.md §15) ----------------------------------
     @property
@@ -326,9 +364,15 @@ class SimulatedEngine:
 
     def summary(self) -> str:
         p = self.point.summary() if self.point else "no point"
+        spec = ""
+        if self.metrics["spec_proposed"]:
+            spec = (f" spec[k={self.spec_k} "
+                    f"acc={self.metrics['acceptance_rate']:.0%} "
+                    f"{self.metrics['spec_accepted']:.0f}/"
+                    f"{self.metrics['spec_proposed']:.0f}]")
         return (f"sim[{p}] it={self.metrics['iterations']:.0f} "
                 f"tok={self.metrics['tokens_generated']:.0f} "
-                f"t={self.clock.now():.2f}s replans={self.replans}")
+                f"t={self.clock.now():.2f}s replans={self.replans}" + spec)
 
 
 def run_scripted(engine, controller, iterations: int, *,

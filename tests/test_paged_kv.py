@@ -59,6 +59,41 @@ class TestPageAllocator:
         with pytest.raises(RuntimeError, match="exhausted"):
             al.ensure(0, 2)
 
+    def test_truncate_frees_tail_chunks_only(self):
+        al = self.make()
+        pages = al.ensure_prefix(0, 16)              # all 4 chunks
+        freed = al.truncate(0, 9)                    # keep ceil(9/4)=3
+        assert freed == [pages[3]]
+        assert al.slot_pages(0) == pages[:3]
+        assert al.free_pages == 8 - 4 + 1          # 8 usable, 4 held, 1 back
+        # a prefix already covering every mapped chunk is a no-op
+        assert al.truncate(0, 12) == []
+        assert al.slot_pages(0) == pages[:3]
+
+    def test_truncate_page_boundary_and_zero(self):
+        al = self.make()
+        pages = al.ensure_prefix(0, 16)
+        # exactly on a page boundary keeps that many whole chunks
+        assert al.truncate(0, 8) == pages[2:]
+        assert al.slot_pages(0) == pages[:2]
+        # 0 (and negative, defensively) frees everything
+        assert al.truncate(0, 0) == pages[:2]
+        assert al.truncate(1, -3) == []
+        assert al.pages_in_use == 0
+
+    def test_truncate_freed_pages_reusable(self):
+        """Free-list reuse: pages released by one slot's speculative
+        rollback are immediately allocatable by another slot."""
+        al = PageAllocator(2, 4, num_pages=5, page_size=4)   # 4 usable
+        al.ensure_prefix(0, 16)                              # pool dry
+        assert al.free_pages == 0
+        freed = al.truncate(0, 4)                            # drop 3 tail
+        assert len(freed) == 3
+        got = al.ensure_prefix(1, 12)
+        assert sorted(got) == sorted(freed)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            al.ensure(1, 3)
+
 
 class TestKvCostModel:
     def test_bucketed_vs_paged_pricing(self):

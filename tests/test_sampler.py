@@ -1,0 +1,161 @@
+"""Sampler contracts (serving/sampler.py): greedy determinism, the
+temperature distribution, top-k masking, and the speculative-verify
+rejection chain's exactness (DESIGN.md §17)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import (greedy, sample, sample_probs,
+                                   speculative_verify)
+
+
+def _logits(rng, shape, scale=3.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+class TestGreedy:
+    def test_deterministic_and_matches_sample(self):
+        rng = np.random.default_rng(0)
+        lg = _logits(rng, (5, 64))
+        key = jax.random.key(0)
+        a = sample(lg, key=key, temperature=0.0)
+        b = greedy(lg)
+        c = greedy(lg)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
+
+    def test_vocab_pad_masked(self):
+        lg = jnp.zeros((2, 8), jnp.float32).at[:, 6].set(100.0)
+        # pad columns (>= vocab_size) can never win, however large
+        assert np.asarray(greedy(lg, vocab_size=6)).max() < 6
+        assert int(np.asarray(greedy(lg, vocab_size=8))[0]) == 6
+
+    def test_shape_polymorphic(self):
+        """The verify forward scores (B, S, V) in one call — same result
+        as row-wise argmax."""
+        rng = np.random.default_rng(1)
+        lg = _logits(rng, (2, 4, 32))
+        full = np.asarray(greedy(lg, vocab_size=30))
+        rows = np.stack([np.asarray(greedy(lg[:, j], vocab_size=30))
+                         for j in range(4)], axis=1)
+        np.testing.assert_array_equal(full, rows)
+
+
+class TestTemperature:
+    def test_distribution_tracks_probs(self):
+        """Empirical frequencies of sample() converge to sample_probs()
+        — the q the rejection chain assumes the draft drew from."""
+        rng = np.random.default_rng(2)
+        lg = _logits(rng, (1, 16), scale=1.5)
+        p = np.asarray(sample_probs(lg, temperature=0.7))[0]
+        n = 4000
+        keys = jax.random.split(jax.random.key(0), n)
+        draws = np.asarray(jax.vmap(
+            lambda k: sample(lg, key=k, temperature=0.7)[0])(keys))
+        freq = np.bincount(draws, minlength=16) / n
+        assert np.abs(freq - p).max() < 0.03
+
+    def test_low_temperature_sharpens(self):
+        rng = np.random.default_rng(3)
+        lg = _logits(rng, (1, 16), scale=1.0)
+        p_hot = np.asarray(sample_probs(lg, temperature=2.0))[0]
+        p_cold = np.asarray(sample_probs(lg, temperature=0.25))[0]
+        assert p_cold.max() > p_hot.max()
+        assert int(p_cold.argmax()) == int(np.asarray(greedy(lg))[0])
+
+    def test_sample_probs_rejects_greedy(self):
+        with pytest.raises(ValueError, match="temperature"):
+            sample_probs(jnp.zeros((1, 8)), temperature=0.0)
+
+
+class TestTopK:
+    def test_masking_zeroes_tail(self):
+        rng = np.random.default_rng(4)
+        lg = _logits(rng, (3, 32))
+        p = np.asarray(sample_probs(lg, temperature=1.0, top_k=5))
+        assert ((p > 0).sum(axis=-1) <= 5).all()
+        top5 = np.argsort(np.asarray(lg), axis=-1)[:, -5:]
+        for b in range(3):
+            assert set(np.nonzero(p[b])[0]) <= set(top5[b])
+        np.testing.assert_allclose(p.sum(axis=-1), 1.0, atol=1e-5)
+
+    def test_sampler_never_draws_outside_top_k(self):
+        rng = np.random.default_rng(5)
+        lg = _logits(rng, (1, 32))
+        top3 = set(np.argsort(np.asarray(lg)[0])[-3:].tolist())
+        for i in range(64):
+            tok = int(np.asarray(sample(lg, key=jax.random.key(i),
+                                        temperature=1.5, top_k=3))[0])
+            assert tok in top3
+
+    def test_top_k_with_vocab_pad(self):
+        lg = jnp.zeros((1, 8), jnp.float32).at[0, 7].set(50.0)
+        p = np.asarray(sample_probs(lg, temperature=1.0, top_k=2,
+                                    vocab_size=7))[0]
+        assert p[7] == 0.0
+
+
+class TestSpeculativeVerify:
+    """The rejection chain must emit tokens distributed EXACTLY as k+1
+    sequential samples from p — at any acceptance rate (Leviathan et
+    al., Thm. 1). Checked empirically on a small vocab where the exact
+    marginal of the FIRST emitted token is computable."""
+
+    def _first_token_marginal(self, q, p0, n, seed):
+        """Empirical distribution of the first emitted token when the
+        draft proposes from q and verify row 0 is p0 (k=1)."""
+        rng = np.random.default_rng(seed)
+        v = len(q)
+        counts = np.zeros(v)
+        cdf_q = np.cumsum(q)
+        for _ in range(n):
+            d = int(np.searchsorted(cdf_q, rng.random(), side="right"))
+            d = min(d, v - 1)
+            acc, tok = speculative_verify(
+                np.array([d]), q[None, :],
+                np.stack([p0, p0]),         # row 1 unused unless accepted
+                rng.random(1), rng.random(2))
+            first = d if acc >= 1 else tok
+            counts[first] += 1
+        return counts / n
+
+    def test_exact_marginal_mismatched_q(self):
+        q = np.array([0.6, 0.2, 0.1, 0.1])
+        p = np.array([0.1, 0.5, 0.2, 0.2])
+        freq = self._first_token_marginal(q, p, 20000, seed=0)
+        assert np.abs(freq - p).max() < 0.015
+
+    def test_exact_marginal_matching_q(self):
+        p = np.array([0.4, 0.3, 0.2, 0.1])
+        freq = self._first_token_marginal(p, p, 20000, seed=1)
+        assert np.abs(freq - p).max() < 0.015
+
+    def test_identical_distributions_always_accept(self):
+        """q == p: acceptance probability is exactly 1 for every draft."""
+        p = np.array([0.25, 0.25, 0.25, 0.25])
+        rng = np.random.default_rng(2)
+        for _ in range(200):
+            d = rng.integers(0, 4, size=3)
+            acc, tok = speculative_verify(
+                d, np.tile(p, (3, 1)), np.tile(p, (4, 1)),
+                rng.random(3), rng.random(4))
+            assert acc == 3 and 0 <= tok < 4
+
+    def test_zero_q_mass_always_rejects(self):
+        """A draft token q assigned zero mass to must reject (the guard
+        against division blowups), resampling from the residual."""
+        q = np.array([1.0, 0.0, 0.0, 0.0])
+        p = np.array([0.0, 0.0, 1.0, 0.0])
+        acc, tok = speculative_verify(
+            np.array([1]), q[None, :], np.stack([p, p]),
+            np.array([0.0]), np.array([0.5, 0.5]))
+        assert acc == 0 and tok == 2
+
+    def test_full_acceptance_bonus_from_last_row(self):
+        q = np.array([0.5, 0.5])
+        p_rows = np.array([[0.5, 0.5], [0.5, 0.5], [0.0, 1.0]])
+        acc, tok = speculative_verify(
+            np.array([0, 1]), np.tile(q, (2, 1)), p_rows,
+            np.array([0.0, 0.0]), np.array([0.9, 0.9, 0.3]))
+        assert acc == 2 and tok == 1       # bonus drawn from p[k]

@@ -1,0 +1,307 @@
+"""Ladder-draft self-speculative decoding (DESIGN.md §17): greedy
+token-identity across the KV-layout x streaming-mode grid, exactness
+under a sabotaged draft (acceptance ~0), the speculate=0 no-op, the
+model-level rollback hooks, the QoSController acceptance fallback (on
+the simulator), and the gated cost-model pricing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.cost_model import (HardwareModel, estimate_qos,
+                                   speculative_tokens_per_cycle)
+from repro.core.precision_plan import DEVICE, quantized_rungs
+from repro.models.model import (apply_precision_plan, build_model,
+                                init_cache)
+from repro.serving.api import EngineConfig, ServeRequest
+from repro.serving.engine import AdaptiveServingEngine
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _full_size(engine):
+    return engine.planner.size_ne + \
+        engine.planner.num_experts_total * engine.planner.size_e16
+
+
+def _make_engine(cfg, params, econf, preference="quality"):
+    """Engine on the all-16-bit resident plan by default, so the int4
+    draft is a genuinely different model (acceptance < 1 is possible)."""
+    engine = AdaptiveServingEngine(cfg, params, config=econf)
+    engine.configure(_full_size(engine) * 1.1, preference,
+                     0 if preference == "quality" else None)
+    return engine
+
+
+def _serve(engine, cfg, n_req=3, max_new=7, temperature=0.0):
+    """3 requests over 2 slots: one slot retires and is rejoined
+    mid-flight. Returns per-rid token lists."""
+    rng = np.random.default_rng(0)
+    rids = [engine.submit_request(ServeRequest(
+        prompt=rng.integers(1, cfg.vocab_size, 5 + 2 * i),
+        max_new_tokens=max_new)) for i in range(n_req)]
+    while engine.has_work():
+        engine.run_iteration(temperature=temperature)
+    return {rid: list(engine.done[rid].out_tokens) for rid in rids}
+
+
+class TestGreedyParity:
+    """Acceptance criterion: greedy speculative decode is token-identical
+    to plain decode for every (paged x overlap) config."""
+
+    @pytest.mark.parametrize("paged,overlap", [
+        (False, False), (True, False), (False, True), (True, True)])
+    def test_token_identical(self, smoke, paged, overlap):
+        cfg, _, params = smoke
+        base = dict(max_slots=2, max_len=24, paged_kv=paged,
+                    overlap=overlap, page_size=4)
+        ep = _make_engine(cfg, params, EngineConfig(**base, speculate=0))
+        plain = _serve(ep, cfg)
+        es = _make_engine(cfg, params, EngineConfig(**base, speculate=3))
+        spec = _serve(es, cfg)
+        assert spec == plain
+        assert es.metrics["spec_proposed"] > 0
+        assert 0.0 <= es.metrics["acceptance_rate"] <= 1.0
+        # accepted drafts shorten the iteration count
+        assert es.metrics["iterations"] <= ep.metrics["iterations"]
+        assert "spec[k=3" in es.summary()
+        ep.close()
+        es.close()
+
+    def test_sabotaged_draft_still_exact(self, smoke):
+        """A garbage draft model (different random init) drives
+        acceptance to ~0 — output must STILL be token-identical, proving
+        the verify forward + rollback are exact regardless of draft
+        quality."""
+        cfg, model, params = smoke
+        base = dict(max_slots=2, max_len=24, page_size=4, paged_kv=True)
+        ep = _make_engine(cfg, params, EngineConfig(**base, speculate=0))
+        plain = _serve(ep, cfg)
+        es = _make_engine(cfg, params, EngineConfig(**base, speculate=3))
+        plan = es._plan_result.plan
+        low = quantized_rungs(plan.ladder)[0]
+        draft_plan = dataclasses.replace(
+            plan, bits=np.full_like(plan.bits, low),
+            location=np.full_like(plan.location, DEVICE))
+        es._draft_params = apply_precision_plan(
+            model.init(jax.random.key(9)), cfg, draft_plan)
+        es._draft_sig = (tuple(plan.ladder), plan.group_size, low)
+        spec = _serve(es, cfg)
+        assert spec == plain
+        m = es.metrics
+        assert m["spec_proposed"] > 0
+        assert m["acceptance_rate"] < 0.5    # garbage rarely matches
+        ep.close()
+        es.close()
+
+    def test_speculate_zero_is_plain_engine(self, smoke):
+        """speculate=0 must be byte-identical to the pre-speculation
+        engine: same tokens, iterations == tokens per request, zero spec
+        counters, no spec column in the summary."""
+        cfg, _, params = smoke
+        base = dict(max_slots=2, max_len=24)
+        ea = _make_engine(cfg, params, EngineConfig(**base))
+        eb = _make_engine(cfg, params, EngineConfig(**base, speculate=0))
+        ta = _serve(ea, cfg)
+        tb = _serve(eb, cfg)
+        assert ta == tb
+        assert ea.metrics["iterations"] == eb.metrics["iterations"]
+        for m in (ea.metrics, eb.metrics):
+            assert m["spec_proposed"] == 0 and m["spec_accepted"] == 0
+            assert m["acceptance_rate"] == 0.0
+        assert "spec[" not in eb.summary()
+        ea.close()
+        eb.close()
+
+    def test_set_speculation_mid_run(self, smoke):
+        """The QoS fallback path: disabling speculation mid-flight (no
+        drain, no recompile) keeps the stream correct and stops
+        proposing."""
+        cfg, _, params = smoke
+        engine = _make_engine(cfg, params, EngineConfig(
+            max_slots=2, max_len=24, speculate=3))
+        ep = _make_engine(cfg, params, EngineConfig(
+            max_slots=2, max_len=24, speculate=0))
+        plain = _serve(ep, cfg)
+        rng = np.random.default_rng(0)
+        rids = [engine.submit_request(ServeRequest(
+            prompt=rng.integers(1, cfg.vocab_size, 5 + 2 * i),
+            max_new_tokens=7)) for i in range(3)]
+        engine.run_iteration(temperature=0.0)
+        engine.set_speculation(0)
+        proposed = engine.metrics["spec_proposed"]
+        assert proposed > 0
+        while engine.has_work():
+            engine.run_iteration(temperature=0.0)
+        assert engine.metrics["spec_proposed"] == proposed
+        assert {r: list(engine.done[r].out_tokens) for r in rids} == plain
+        engine.close()
+        ep.close()
+
+
+class TestTemperaturePath:
+    def test_rejection_sampled_run_completes(self, smoke):
+        """temperature>0 rides the rejection-sampling verify: every
+        request still emits exactly max_new tokens in range, counters
+        stay consistent."""
+        cfg, _, params = smoke
+        engine = _make_engine(cfg, params, EngineConfig(
+            max_slots=2, max_len=24, speculate=2))
+        toks = _serve(engine, cfg, temperature=0.8)
+        for t in toks.values():
+            assert len(t) == 7
+            assert all(0 <= x < cfg.vocab_size for x in t)
+        m = engine.metrics
+        assert 0 < m["spec_accepted"] + 1 and m["spec_proposed"] > 0
+        assert m["spec_accepted"] <= m["spec_proposed"]
+        assert m["acceptance_rate"] == pytest.approx(
+            m["spec_accepted"] / m["spec_proposed"])
+        engine.close()
+
+
+class TestRollbackHooks:
+    def test_rollback_slots_invalidates_tail_tags(self, smoke):
+        cfg, model, _ = smoke
+        cache = init_cache(cfg, batch=2, max_len=8)
+        pos = np.asarray(cache["pos"]).copy()
+        pos[:, 0, :6] = np.arange(6)
+        pos[:, 1, :3] = np.arange(3)
+        cache = dict(cache, pos=jnp.asarray(pos))
+        rolled = model.rollback_slots(cache, jnp.asarray([3, 10]))
+        got = np.asarray(rolled["pos"])
+        # slot 0: positions > 3 invalidated, 0..3 kept
+        np.testing.assert_array_equal(got[:, 0, :4], pos[:, 0, :4])
+        assert (got[:, 0, 4:] == -1).all()
+        # slot 1: keep=10 >= every tag -> untouched
+        np.testing.assert_array_equal(got[:, 1], pos[:, 1])
+        # k/v payloads are never touched (tags alone gate attention)
+        np.testing.assert_array_equal(np.asarray(rolled["k"]),
+                                      np.asarray(cache["k"]))
+
+    def test_paged_rollback_invalidates_mapped_pages_only(self, smoke):
+        from repro.models.model import init_paged_cache
+        from repro.serving.paged_kv import PageAllocator
+        cfg, model, _ = smoke
+        pool, meta = init_paged_cache(cfg, 2, 16, page_size=4)
+        al = PageAllocator(2, meta.chunks_per_slot, meta.num_pages,
+                           meta.page_size)
+        al.ensure_prefix(0, 8)          # slot 0: ring 0..7 mapped
+        al.ensure_prefix(1, 4)
+        ppos = np.asarray(pool["pos"]).copy()
+        for slot, n in ((0, 8), (1, 4)):
+            for r in range(n):
+                page = al.table[slot, r // meta.page_size]
+                ppos[:, page, r % meta.page_size] = r
+        pool = dict(pool, pos=jnp.asarray(ppos))
+        rolled = model.paged_rollback(
+            pool, jnp.asarray(al.table), jnp.asarray([2, 3]))
+        got = np.asarray(rolled["pos"])
+        for slot, keep, n in ((0, 2, 8), (1, 3, 4)):
+            for r in range(n):
+                page = al.table[slot, r // meta.page_size]
+                tag = got[0, page, r % meta.page_size]
+                assert tag == (r if r <= keep else -1), (slot, r)
+        # the shared null page stays invalid
+        assert (got[:, 0] == -1).all()
+
+
+class TestQoSFallback:
+    def _drive(self, acceptance, iters=24):
+        from repro.core.pareto import ParetoFrontier, QoSTarget
+        from repro.serving.qos import QoSController, QoSControllerConfig
+        from repro.serving.simulator import SimulatedEngine, run_scripted
+        cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+        frontier = ParetoFrontier(cfg, HardwareModel())
+        eng = SimulatedEngine(batch=8, spec_k=4, acceptance=acceptance)
+        ctl = QoSController(eng, frontier, config=QoSControllerConfig(
+            window_iterations=2, min_dwell_iterations=4,
+            spec_min_proposed=32))
+        ctl.set_target(QoSTarget(min_tokens_per_s=0.001))
+        run_scripted(eng, ctl, iters)
+        return eng, ctl
+
+    def test_low_acceptance_falls_back(self):
+        eng, ctl = self._drive(acceptance=0.1)
+        assert ctl.metrics["spec_fallbacks"] == 1
+        assert eng.spec_k == 0
+        # round(0.1 * 8 slots * 4 drafts) = 3 accepted per iteration
+        assert ctl.metrics["last_acceptance_rate"] == pytest.approx(3 / 32)
+        # proposals stop after the fallback
+        assert eng.metrics["spec_proposed"] < 24 * 8 * 4
+
+    def test_healthy_acceptance_keeps_speculating(self):
+        eng, ctl = self._drive(acceptance=0.8)
+        assert ctl.metrics["spec_fallbacks"] == 0
+        assert eng.spec_k == 4
+        assert eng.metrics["spec_proposed"] == 24 * 8 * 4
+        # round(0.8 * 32) = 26 accepted per iteration
+        assert eng.metrics["acceptance_rate"] == pytest.approx(26 / 32)
+        assert "spec[k=4" in eng.summary()
+
+
+class TestSpecCostModel:
+    def test_tokens_per_cycle(self):
+        assert speculative_tokens_per_cycle(0, 0.9) == 1.0
+        assert speculative_tokens_per_cycle(3, 0.0) == 1.0
+        assert speculative_tokens_per_cycle(3, 1.0) == 4.0
+        a = speculative_tokens_per_cycle(4, 0.6)
+        assert a == pytest.approx(sum(0.6 ** i for i in range(5)))
+        assert speculative_tokens_per_cycle(4, 0.8) > a
+
+    def test_spec_off_is_bitwise_plain(self):
+        """spec_k=0 (default) must not move a single bit of the QoS
+        estimate — the frontier golden fixture depends on it."""
+        cfg = get_config("mixtral-8x7b")
+        from repro.core.planner import AdaptivePlanner
+        planner = AdaptivePlanner(cfg, hw=HardwareModel())
+        res = planner.plan(40e9, "quality", 8, batch_size=1)
+        a = estimate_qos(cfg, res.plan, HardwareModel())
+        b = estimate_qos(cfg, res.plan,
+                         HardwareModel(spec_k=0, spec_acceptance=0.9))
+        assert a.tokens_per_s.hex() == b.tokens_per_s.hex()
+        assert b.t_draft_ms == 0.0 and b.spec_tokens_per_cycle == 1.0
+
+    def test_speculation_prices_the_cycle(self):
+        cfg = get_config("mixtral-8x7b")
+        from repro.core.planner import AdaptivePlanner
+        planner = AdaptivePlanner(cfg, hw=HardwareModel())
+        full = cfg.non_expert_bytes() + cfg.num_layers \
+            * cfg.moe.num_experts * cfg.expert_param_bytes(16)
+        res = planner.plan(full * 1.05, "quality", 0, batch_size=1)
+        plain = estimate_qos(cfg, res.plan, HardwareModel())
+        spec = estimate_qos(cfg, res.plan, HardwareModel(
+            spec_k=3, spec_acceptance=0.95))
+        # draft reads ~4x fewer expert bytes -> cheaper than a token
+        assert 0 < spec.t_draft_ms < plain.t_compute_ms
+        assert spec.tokens_per_s > plain.tokens_per_s
+        # zero acceptance only ever adds draft time
+        worst = estimate_qos(cfg, res.plan, HardwareModel(
+            spec_k=3, spec_acceptance=0.0))
+        assert worst.tokens_per_s < plain.tokens_per_s
+
+    def test_spec_variant_frontier_gated(self):
+        """spec_variant(0, .) reproduces the base frontier's records
+        byte-for-byte (fixture safety); a high-acceptance variant speeds
+        every point up."""
+        from repro.core.pareto import ParetoFrontier
+        cfg = reduce_for_smoke(get_config("mixtral-8x7b"))
+        base = ParetoFrontier(cfg, HardwareModel())
+        off = base.spec_variant(0, 0.9)
+        assert off.records() == base.records()
+        on = base.spec_variant(3, 0.9)
+        assert len(on.points) > 0
+        base_tps = {(p.num_q_experts, p.resident_experts):
+                    p.qos.tokens_per_s for p in base.all_points}
+        for p in on.all_points:
+            assert p.qos.tokens_per_s > base_tps[
+                (p.num_q_experts, p.resident_experts)] * 1.0 or \
+                p.qos.spec_tokens_per_cycle >= 1.0
